@@ -1,0 +1,44 @@
+"""Benchmark timing helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, repeat: int = 10, warmup: int = 2, **kwargs) -> float:
+    """Mean wall time per call in microseconds (post-warmup)."""
+    for _ in range(warmup):
+        r = fn(*args, **kwargs)
+        _block(r)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        r = fn(*args, **kwargs)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times) * 1e6)
+
+
+def _block(r):
+    for leaf in jax.tree.leaves(r):
+        if isinstance(leaf, jax.Array):
+            leaf.block_until_ready()
+
+
+def sym(seed: int, n: int, dtype=np.float64) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(dtype)
+    return (a + a.T) / 2
+
+
+class Row:
+    def __init__(self, name: str, us: float, derived: str = ""):
+        self.name = name
+        self.us = us
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"

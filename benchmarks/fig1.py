@@ -1,0 +1,113 @@
+"""Fig. 1 reproductions.
+
+(a) single component of one eigenvector: identity vs identity-parallelized
+    vs NumPy, across sizes;
+(b) one complete eigenvector: EEI (all minors) vs NumPy full eigh;
+(c)/(d) the optimization ladder at fixed n: baseline -> cached -> vectorized
+    -> batched -> parallel (paper variants) -> logspace -> pallas kernel
+    (beyond-paper), each per-call time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sym, time_fn
+from repro.core import identity, minors, numpy_ref
+from repro.kernels.prod_diff import ops as pd_ops
+
+FIG_AB_SIZES = (50, 100, 200, 300)
+LADDER_N = 120
+
+
+def run_fig_ab() -> list[Row]:
+    rows = []
+    for n in FIG_AB_SIZES:
+        a = sym(n, n)
+        aj = jnp.asarray(a)
+        i = n // 2
+
+        # (a) single component
+        t_np = time_fn(numpy_ref.numpy_full_eigh, a, repeat=5)
+        t_ident = time_fn(numpy_ref.eigen_component_optimized, a, i, 0,
+                          repeat=5)
+
+        @jax.jit
+        def one_comp(a_, i_, j_):
+            lam = jnp.linalg.eigvalsh(a_)
+            mu = jnp.linalg.eigvalsh(minors.minor(a_, j_))
+            return identity.component_parallel(lam, mu, i_, 64)
+
+        t_par = time_fn(one_comp, aj, i, 0, repeat=5)
+        rows += [
+            Row(f"fig1a/numpy/n={n}", t_np, "full eigh"),
+            Row(f"fig1a/identity/n={n}", t_ident,
+                f"speedup={t_np / t_ident:.2f}x"),
+            Row(f"fig1a/identity_parallelized/n={n}", t_par,
+                f"speedup={t_np / t_par:.2f}x"),
+        ]
+
+        # (b) one full eigenvector (needs all minor spectra)
+        @jax.jit
+        def full_vec(a_, i_):
+            lam = jnp.linalg.eigvalsh(a_)
+            mu = identity.minor_spectra(a_)
+            return jnp.exp(
+                identity.logabs_numerator(lam, mu)[i_]
+                - identity.logabs_denominator(lam)[i_]
+            )
+
+        t_vec = time_fn(full_vec, aj, i, repeat=3)
+        rows += [
+            Row(f"fig1b/numpy/n={n}", t_np, "full eigh"),
+            Row(f"fig1b/identity_vector/n={n}", t_vec,
+                f"ratio_vs_numpy={t_vec / t_np:.2f}x "
+                "(EEI wins only for partial outputs — paper's conclusion)"),
+        ]
+    return rows
+
+
+def run_ladder() -> list[Row]:
+    n = LADDER_N
+    a = sym(n, n)
+    aj = jnp.asarray(a)
+    i, j = n // 2, n // 3
+    rows = []
+
+    t = time_fn(numpy_ref.eigen_component_baseline, a, i, j, repeat=3)
+    rows.append(Row(f"fig1cd/baseline/n={n}", t, "Algorithm 1"))
+
+    lam_np = np.linalg.eigvalsh(a)
+    mu_np = np.linalg.eigvalsh(np.delete(np.delete(a, j, 0), j, 1))
+    t = time_fn(numpy_ref.eigen_component_cached, lam_np, mu_np, i, repeat=3)
+    rows.append(Row(f"fig1cd/cached/n={n}", t, "spectra cached"))
+    t = time_fn(numpy_ref.eigen_component_vectorized, lam_np, mu_np, i,
+                repeat=5)
+    rows.append(Row(f"fig1cd/vectorized/n={n}", t, "np products"))
+    t = time_fn(numpy_ref.eigen_component_optimized, a, i, j, repeat=5)
+    rows.append(Row(f"fig1cd/batched/n={n}", t, "Algorithm 2 (incl. spectra)"))
+
+    lam = jnp.asarray(lam_np)
+    mu = jnp.asarray(mu_np)
+    for variant, fn in [
+        ("vectorized_jax", identity.component_vectorized),
+        ("batched_jax", identity.component_batched),
+        ("parallel_jax", identity.component_parallel),
+        ("logspace_jax", identity.component_logspace),
+    ]:
+        jf = jax.jit(lambda l, m, fn=fn: fn(l, m, i))
+        t = time_fn(jf, lam, mu, repeat=10)
+        rows.append(Row(f"fig1cd/{variant}/n={n}", t, "products only"))
+
+    mu_all = identity.minor_spectra(aj)
+    jk = jax.jit(lambda l, m: pd_ops.eei_magnitudes(l, m))
+    t = time_fn(jk, lam, mu_all, repeat=3)
+    rows.append(Row(f"fig1cd/pallas_full_table/n={n}", t,
+                    "all n^2 components, prod_diff kernel (interpret)"))
+    return rows
+
+
+def run() -> list[Row]:
+    return run_fig_ab() + run_ladder()

@@ -1,0 +1,50 @@
+"""Kernel benchmarks: Pallas (interpret mode on CPU — structural check, the
+TPU timing claim lives in the roofline) vs pure-jnp reference, plus the full
+TPU-native EEI pipeline vs LAPACK eigh."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sym, time_fn
+from repro.core import identity
+from repro.core.spectral import SpectralEngine
+from repro.kernels.prod_diff import ops as pd_ops
+from repro.kernels.prod_diff import ref as pd_ref
+from repro.kernels.sturm import ops as st_ops
+from repro.kernels.sturm import ref as st_ref
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # prod_diff
+    for (i_n, j_n, k_n) in [(128, 128, 127), (256, 256, 255)]:
+        lam = jnp.asarray(np.sort(rng.standard_normal(i_n)), jnp.float32)
+        mu = jnp.asarray(rng.standard_normal((j_n, k_n)), jnp.float32)
+        t_k = time_fn(pd_ops.logabs_sum, lam, mu, 1e-6, repeat=3)
+        t_r = time_fn(jax.jit(pd_ref.logabs_sum), lam, mu, 1e-6, repeat=3)
+        rows.append(Row(f"kernel/prod_diff/{i_n}x{j_n}x{k_n}", t_k,
+                        f"ref_us={t_r:.0f} ratio={t_k / t_r:.2f} (interpret)"))
+
+    # sturm
+    for (b, n) in [(64, 127), (128, 255)]:
+        d = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        e = jnp.asarray(rng.standard_normal((b, n - 1)), jnp.float32)
+        t_k = time_fn(st_ops.sturm_eigenvalues, d, e, repeat=3)
+        t_r = time_fn(st_ref.sturm_eigenvalues, d, e, repeat=3)
+        rows.append(Row(f"kernel/sturm/{b}x{n}", t_k,
+                        f"ref_us={t_r:.0f} ratio={t_k / t_r:.2f} (interpret)"))
+
+    # full pipelines: top-4 eigenpairs
+    n = 128
+    a = jnp.asarray(sym(1, n), jnp.float32)
+    for method in ("eigh", "eei_dense", "eei_tridiag"):
+        eng = SpectralEngine(method=method)
+        fn = jax.jit(lambda a_, e=eng: e.topk_eigenpairs(a_, 4))
+        t = time_fn(fn, a, repeat=3)
+        rows.append(Row(f"pipeline/topk4/{method}/n={n}", t, "signed top-4"))
+    return rows

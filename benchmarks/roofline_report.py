@@ -1,0 +1,49 @@
+"""Roofline report: reads artifacts/dryrun/*.json into the §Roofline table.
+
+Rows are (cell, bound_time_us, "dominant=<term> fraction=<roofline frac>").
+Derived from the compiled dry-run — no wall-clock on this container.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(pattern: str = "*__pod.json") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, pattern))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> list[Row]:
+    rows = []
+    for cell in load_cells():
+        name = f"roofline/{cell['arch']}/{cell['shape']}"
+        if cell.get("status") == "skipped":
+            rows.append(Row(name, 0.0, f"skipped: {cell.get('reason', '')}"))
+            continue
+        rl = cell.get("roofline")
+        if not rl:
+            continue
+        bound_us = max(rl["t_compute_s"], rl["t_memory_s"],
+                       rl["t_collective_s"]) * 1e6
+        rows.append(Row(
+            name, bound_us,
+            f"dominant={rl['dominant']}"
+            f" frac={rl['roofline_fraction']:.3f}"
+            f" useful={rl['useful_flops_ratio']:.3f}"
+            f" tC={rl['t_compute_s'] * 1e3:.2f}ms"
+            f" tM={rl['t_memory_s'] * 1e3:.2f}ms"
+            f" tX={rl['t_collective_s'] * 1e3:.2f}ms"))
+    if not rows:
+        rows.append(Row("roofline/missing", 0.0,
+                        "run: python -m repro.launch.dryrun --all --roofline"))
+    return rows

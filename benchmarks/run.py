@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig1,kernels,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (paper Table 1, Fig 1(a)-(d),
+kernel-vs-oracle, and the dry-run roofline report)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: table1,fig1,kernels,roofline")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    suites = []
+    if not only or "table1" in only:
+        from benchmarks import table1
+        suites.append(("table1", table1.run))
+    if not only or "fig1" in only:
+        from benchmarks import fig1
+        suites.append(("fig1", fig1.run))
+    if not only or "kernels" in only:
+        from benchmarks import kernels
+        suites.append(("kernels", kernels.run))
+    if not only or "roofline" in only:
+        from benchmarks import roofline_report
+        suites.append(("roofline", roofline_report.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row.csv())
+                sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=2).splitlines()[-1]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Table 1: time for calculating ONE eigenvector component — NumPy's full
+eigh (always computes the entire set) vs the paper's Algorithm 2 vs our JAX
+ladder.  The paper reports speedup growing with n, up to 4.5x at n=600^2
+(~on a 4-core Xeon); this container is 1-core, sizes are budget-scaled and
+the *trend* (speedup grows with n, >1 beyond the crossover) is the claim
+validated in EXPERIMENTS.md §Paper-validation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, sym, time_fn
+from repro.core import identity, minors, numpy_ref
+
+SIZES = (50, 100, 150, 200, 300, 400)
+
+
+def _jax_component(variant: str):
+    @jax.jit
+    def fn(a, i, j):
+        lam = jnp.linalg.eigvalsh(a)
+        mu_j = jnp.linalg.eigvalsh(minors.minor(a, j))
+        if variant == "logspace":
+            return identity.component_logspace(lam, mu_j, i)
+        return identity.component_parallel(lam, mu_j, i, batch_size=64)
+
+    return fn
+
+
+def run() -> list[Row]:
+    """Also validates the paper's implicit cost model: Algorithm 2 costs two
+    eigvalsh calls (A and the minor) + O(n) products, so its speedup over
+    numpy eigh is ~ ratio/2 where ratio = t(eigh)/t(eigvalsh).  The paper's
+    4.5x at n=600 implies ratio ~ 9 in its 2020 Windows/MKL environment; the
+    ``model_fit`` column shows predicted-vs-measured under the ratio we
+    measure here (EXPERIMENTS.md §Paper-validation)."""
+    rows = []
+    for n in SIZES:
+        a = sym(n, n)
+        i, j = n // 2, n // 3
+        t_numpy = time_fn(numpy_ref.numpy_full_eigh, a, repeat=5)
+        t_vals = time_fn(np.linalg.eigvalsh, a, repeat=5)
+        ratio = t_numpy / t_vals
+        t_alg2 = time_fn(numpy_ref.eigen_component_optimized, a, i, j,
+                         repeat=5)
+        aj = jnp.asarray(a)
+        jfn = _jax_component("parallel")
+        t_jax = time_fn(jfn, aj, i, j, repeat=5)
+        jfn_log = _jax_component("logspace")
+        t_jaxl = time_fn(jfn_log, aj, i, j, repeat=5)
+        measured = t_numpy / t_alg2
+        predicted = ratio / 2.0
+        rows.append(Row(f"table1/numpy_eigh/n={n}", t_numpy,
+                        f"eigh/eigvalsh_ratio={ratio:.2f}"))
+        rows.append(Row(f"table1/alg2_numpy/n={n}", t_alg2,
+                        f"speedup_vs_numpy={measured:.2f}x"
+                        f" model_fit:pred={predicted:.2f}x"
+                        f" meas={measured:.2f}x"))
+        rows.append(Row(f"table1/alg2_jax/n={n}", t_jax,
+                        f"speedup_vs_numpy={t_numpy / t_jax:.2f}x"))
+        rows.append(Row(f"table1/eei_logspace_jax/n={n}", t_jaxl,
+                        f"speedup_vs_numpy={t_numpy / t_jaxl:.2f}x"))
+    return rows

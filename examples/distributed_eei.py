@@ -1,0 +1,56 @@
+"""Distributed EEI — Algorithm 2's dispatch on a device mesh (shard_map).
+
+    PYTHONPATH=src python examples/distributed_eei.py
+
+Uses 8 host devices to demonstrate both distributed axes:
+  * minors sharded  (each device owns a slice of components j),
+  * product terms sharded (the paper's batch dispatch; join == one psum).
+On the production 16x16 mesh the identical code paths are exercised by the
+multi-pod dry-run.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import distributed, identity  # noqa: E402
+
+
+def main():
+    n = 64
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n))
+    a = jnp.asarray((a + a.T) / 2)
+    mesh = jax.make_mesh((1, min(8, jax.device_count())), ("data", "model"))
+    print(f"mesh: {mesh.devices.shape} {mesh.axis_names}")
+
+    # oracle
+    lam, v = jnp.linalg.eigh(a)
+    ref = (v * v).T
+
+    # minors sharded over 'model'
+    with mesh:
+        mags = distributed.sharded_magnitudes(a, mesh, axis="model")
+    err = float(jnp.max(jnp.abs(mags - ref)))
+    print(f"minor-sharded |v|^2 table: max err vs eigh = {err:.2e}")
+    print("output sharding:", mags.sharding)
+
+    # term-sharded single component (Algorithm 2 dispatch -> psum join)
+    mu = identity.minor_spectra(a)
+    i, j = n // 2, 5
+    with mesh:
+        comp = distributed.term_sharded_component(lam, mu[j], i, mesh,
+                                                  axis="model")
+    print(f"term-sharded |v[{i},{j}]|^2 = {float(comp):.12f} "
+          f"(eigh: {float(ref[i, j]):.12f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + greedy decode with sharded KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b]
+
+Runs the reduced config on CPU; on a real mesh drop ``--reduced`` inside
+``repro.launch.serve`` and pass ``--mesh 16x16``.
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", "32",
+        "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Spectral monitoring during training — the paper's partial-eigenvector use
+case in the loop.
+
+    PYTHONPATH=src python examples/spectral_monitor.py
+
+Trains a small LM while, every k steps, probing the top eigenpairs of each
+2-D parameter's gradient gram matrix via the EEI pipeline (a few components
+of a few eigenvectors — exactly the regime where the identity beats full
+eigh, per the paper's Table 1).  Prints the spectral-norm trajectory and the
+dominant eigenvector's top components.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config, reduced_config
+from repro.core.spectral import SpectralEngine
+from repro.data import make_synthetic
+from repro.models.lm import LanguageModel
+from repro.optim import AdamW
+from repro.train import TrainState, make_train_step
+
+
+def main():
+    cfg = reduced_config(get_config("codeqwen1.5-7b"))
+    model = LanguageModel(cfg)
+    opt = AdamW(lr=3e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(make_train_step(model, opt, compute_dtype=jnp.float32))
+    src = make_synthetic(cfg, ShapeConfig("t", 32, 4, "train"))
+    engine = SpectralEngine(method="eei_tridiag", use_kernels=True)
+
+    @jax.jit
+    def probe(params, batch):
+        """Top-2 eigenpairs of grad-gram of the unembed matrix."""
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        g = grads["unembed"].astype(jnp.float32)
+        gram = g @ g.T / g.shape[1]
+        return engine.topk_eigenpairs(gram, 2)
+
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in src.global_batch_at(i).items()}
+        state, metrics = step_fn(state, batch)
+        if i % 5 == 0:
+            ev, vecs = probe(state.params, batch)
+            top = np.asarray(vecs[-1])
+            comps = np.argsort(-np.abs(top))[:3]
+            print(f"step {i:3d} loss {float(metrics['loss']):7.4f} "
+                  f"grad-gram top eigvals {np.asarray(ev).round(6)} "
+                  f"dominant dims {comps.tolist()}")
+    print("\nThe probe cost is 2 tridiagonal solves + EEI products per "
+          "refresh — no full eigendecomposition anywhere.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Checkpoint manager: async atomic saves, keep-K, elastic restore.
+
+Format: one directory per step containing ``manifest.json`` (flattened tree
+paths, shapes, dtypes, iterator state, mesh metadata) and one ``.npy`` per
+leaf.  Leaves are written *unsharded* (gathered to host), which makes every
+checkpoint **mesh-independent**: restore resharding onto any mesh/rule set is
+a ``device_put`` with the new sharding — this is the elastic-scaling path
+(N pods -> M pods restarts).
+
+Durability: writes go to ``<dir>/tmp-<step>`` and are atomically renamed to
+``<dir>/step-<step>`` — a crash mid-write can never corrupt the latest
+checkpoint.  Saves run on a background thread (async checkpointing);
+``wait()`` joins before the next save or process exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "§"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _to_native(arr: np.ndarray) -> np.ndarray:
+    """np.save cannot serialize ml_dtypes (bf16 etc.) — widen to float32.
+
+    Lossless for bf16 (a strict fp32 subset); restore casts back via the
+    target leaf dtype.
+    """
+    if arr.dtype.kind not in "fiub?":
+        return arr.astype(np.float32)
+    return arr
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    if hasattr(p, "name"):
+        return f"a:{p.name}"
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = False):
+        """Snapshot to host, then write asynchronously."""
+        self.wait()
+        flat = _flatten(tree)
+        host = {k: _to_native(np.asarray(jax.device_get(v)))
+                for k, v in flat.items()}
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {
+            "step": int(step),
+            "keys": sorted(host),
+            "treedef": str(treedef),
+            "extra": extra or {},
+        }
+
+        def write():
+            tmp = os.path.join(self.directory, f"tmp-{step}")
+            final = os.path.join(self.directory, f"step-{step}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            for i, k in enumerate(manifest["keys"]):
+                np.save(os.path.join(tmp, f"{i}.npy"), host[k])
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step-{s}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step-"):
+                out.append(int(name.split("-", 1)[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``like``.
+
+        ``shardings`` (same structure) triggers sharded ``device_put`` —
+        pass the *new* mesh's shardings to reshard elastically.
+        Returns (tree, extra).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        d = os.path.join(self.directory, f"step-{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = {
+            k: np.load(os.path.join(d, f"{i}.npy"))
+            for i, k in enumerate(manifest["keys"])
+        }
+        flat_like = _flatten(like)
+        missing = set(flat_like) - set(arrays)
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        keys_in_order = [
+            _SEP.join(_path_str(p) for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+        ]
+        restored_leaves = []
+        flat_sh = _flatten(shardings) if shardings is not None else None
+        for key, leaf in zip(keys_in_order, leaves_like):
+            arr = arrays[key]
+            if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+                # non-native dtypes (bf16 opt state) round-trip via fp32
+                arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+            if flat_sh is not None:
+                restored_leaves.append(jax.device_put(arr, flat_sh[key]))
+            else:
+                restored_leaves.append(jax.numpy.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, restored_leaves)
+        return tree, manifest.get("extra", {})

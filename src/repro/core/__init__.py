@@ -1,0 +1,8 @@
+"""The paper's primary contribution: the Eigenvector-Eigenvalue Identity
+implemented as a production substrate — variant ladder (faithful), TPU-native
+tridiagonal pipeline, distributed (shard_map) forms, and the SpectralEngine
+façade consumed by the optimizer and monitoring layers.
+"""
+
+from repro.core import identity, minors, directions, distributed  # noqa: F401
+from repro.core.spectral import SpectralEngine  # noqa: F401

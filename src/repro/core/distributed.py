@@ -1,0 +1,90 @@
+"""Distributed EEI — Algorithm 2's batch dispatch mapped onto a device mesh.
+
+Two shardings, composable:
+
+* ``minor axis`` (components ``j``): each device owns a slice of minors,
+  computes their spectra and its column-block of ``|v[i, j]|^2``.  Zero
+  collectives until the final gather — the embarrassingly-parallel outer
+  loop the paper could not express with CPython threads.
+* ``term axis`` (product terms ``k``): the *inner* product is sharded; each
+  device holds a contiguous batch of eigenvalue-difference terms and
+  contributes a partial log-sum, combined with one ``psum``.  This is
+  Algorithm 2's ``dispatch``/``join`` (lines 9-15) verbatim, with the batch
+  boundary = the shard boundary and ``join`` = ``psum`` — thread-management
+  overhead (the paper's Amdahl bottleneck) becomes a single collective.
+
+Both are ``shard_map`` programs over an explicit mesh and lower/compile on
+the production meshes (see ``launch/dryrun.py --arch paper-eei``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import identity, minors
+
+
+def sharded_magnitudes(a: jax.Array, mesh: Mesh, axis: str = "model"):
+    """All ``|v[i, j]|^2`` with minors sharded over ``axis``.
+
+    ``n`` must be divisible by the axis size.  Input ``a`` is replicated;
+    output is sharded over components ``j``.
+    """
+
+    def block(a_rep, j_block):
+        # j_block: (n_local,) global component indices owned by this device.
+        lam = jnp.linalg.eigvalsh(a_rep)
+        mu = jax.vmap(
+            lambda j: jnp.linalg.eigvalsh(minors.minor(a_rep, j))
+        )(j_block)
+        log_num = identity.logabs_numerator(lam, mu)  # (n, n_local)
+        log_den = identity.logabs_denominator(lam)  # (n,)
+        return jnp.exp(log_num - log_den[:, None])
+
+    n = a.shape[0]
+    j_all = jnp.arange(n)
+    fn = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(), P(axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(a, j_all)
+
+
+def term_sharded_component(
+    lam: jax.Array, mu_j: jax.Array, i: int, mesh: Mesh, axis: str = "model"
+):
+    """Single component with the *product terms* sharded (Algorithm 2 dispatch).
+
+    ``lam`` (n,), ``mu_j`` (n-1,) replicated in; each device log-reduces its
+    term shard; one ``psum`` joins.  Term vectors are padded with 1.0
+    (``log 1 = 0``) to a multiple of the axis size.
+    """
+
+    def block(numer_terms_local, denom_terms_local):
+        part = jnp.sum(jnp.log(jnp.abs(numer_terms_local))) - jnp.sum(
+            jnp.log(jnp.abs(denom_terms_local))
+        )
+        return jax.lax.psum(part, axis)
+
+    lam_wo_i = minors.delete_index(lam, jnp.asarray(i))
+    numer_terms = lam[i] - mu_j
+    denom_terms = lam[i] - lam_wo_i
+    axis_size = mesh.shape[axis]
+    pad = (-numer_terms.shape[0]) % axis_size
+    if pad:
+        ones = jnp.ones((pad,), lam.dtype)
+        numer_terms = jnp.concatenate([numer_terms, ones])
+        denom_terms = jnp.concatenate([denom_terms, ones])
+    fn = jax.shard_map(block, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P())
+    return jnp.exp(fn(numer_terms, denom_terms))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
+def _noop(mesh=None, axis=None):  # pragma: no cover - placeholder for API parity
+    return None

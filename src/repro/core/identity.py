@@ -1,0 +1,365 @@
+"""The Eigenvector-Eigenvalue Identity (EEI) — all implementation variants.
+
+For an ``n x n`` Hermitian ``A`` with eigenvalues ``lam[0] <= ... <= lam[n-1]``
+and minors ``M_j`` (row+column ``j`` deleted) with eigenvalues
+``mu[j, 0] <= ... <= mu[j, n-2]``:
+
+    |v[i, j]|^2 * prod_{k != i} (lam[i] - lam[k]) = prod_k (lam[i] - mu[j, k])
+
+(Denton-Parke-Tao-Zhang 2019, Eq. 2.  NOTE: the reproduced paper's Eq. (2)
+prints the two products swapped; we implement the correct orientation and
+validate against ``jnp.linalg.eigh``.)
+
+Variant ladder (faithful reproduction of the paper's Fig. 1(c)/(d)):
+
+    baseline     Algorithm 1 — recomputes eigenvalues for every component.
+    cached       spectra computed once, scalar python-loop products.
+    vectorized   spectra once, jnp array products.
+    batched      Algorithm 2 — difference products split into batches of
+                 paired numerator/denominator terms; per-batch *ratios* are
+                 multiplied, taming fp over/underflow for n >~ 150.
+    parallel     Algorithm 2 with the batch dispatch mapped to ``vmap``
+                 lanes (the TPU analogue of the paper's thread pool).
+    logspace     beyond-paper — sum of log|diff|, immune to over/underflow.
+    pallas       beyond-paper — the ``prod_diff`` Pallas kernel (logspace,
+                 VMEM-tiled).
+
+All public functions index eigenvectors by ``i`` (eigenvalue index, ascending
+order) and components by ``j``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import minors as minors_lib
+
+# ---------------------------------------------------------------------------
+# Spectra helpers
+# ---------------------------------------------------------------------------
+
+
+def matrix_spectrum(a: jax.Array) -> jax.Array:
+    """Eigenvalues of ``a`` (ascending)."""
+    return jnp.linalg.eigvalsh(a)
+
+
+def minor_spectra(a: jax.Array) -> jax.Array:
+    """Eigenvalues of every minor ``M_j``; shape ``(n, n-1)`` (ascending)."""
+    return jax.vmap(jnp.linalg.eigvalsh)(minors_lib.all_minors(a))
+
+
+# ---------------------------------------------------------------------------
+# Core products from precomputed spectra
+# ---------------------------------------------------------------------------
+
+
+def denominator_products(lam: jax.Array) -> jax.Array:
+    """``prod_{k != i} (lam[i] - lam[k])`` for every ``i``; shape ``(n,)``."""
+    diff = lam[:, None] - lam[None, :]
+    diff = jnp.where(jnp.eye(lam.shape[0], dtype=bool), 1.0, diff)
+    return jnp.prod(diff, axis=-1)
+
+
+def numerator_products(lam: jax.Array, mu: jax.Array) -> jax.Array:
+    """``prod_k (lam[i] - mu[j, k])`` for every ``(i, j)``; shape ``(n, n)``.
+
+    ``mu`` has shape ``(n_minors, n-1)``; output ``(n, n_minors)``.
+    """
+    diff = lam[:, None, None] - mu[None, :, :]
+    return jnp.prod(diff, axis=-1)
+
+
+def logabs_denominator(lam: jax.Array) -> jax.Array:
+    """``sum_{k != i} log|lam[i] - lam[k]|``; shape ``(n,)``."""
+    diff = lam[:, None] - lam[None, :]
+    diff = jnp.where(jnp.eye(lam.shape[0], dtype=bool), 1.0, diff)
+    return jnp.sum(jnp.log(jnp.abs(diff)), axis=-1)
+
+
+def logabs_denominator_dot(lam: jax.Array, chunk_i: int = 1024) -> jax.Array:
+    """``logabs_denominator`` as a fused ones-contraction (no (n, n) temp).
+
+    Beyond-paper (EXPERIMENTS.md §Perf, iterations 3 & 5): after the
+    numerator was fused, the replicated (n, n) denominator table dominated
+    per-device HLO bytes; expressing its k-reduction as a dot fuses the
+    masked log-difference producer the same way.  Chunked over ``i`` for the
+    same fusion-threshold reason as ``logabs_numerator_dot``.
+    """
+    n = lam.shape[0]
+    ones = jnp.ones((n,), jnp.float32)
+    # Diagonal exclusion without masks or aux tensors: lam[i]-lam[i] is
+    # bitwise zero, so log(diff + tiny) contributes exactly log(tiny) on the
+    # diagonal — subtract it per row.  Off-diagonal terms see a relative
+    # perturbation < tiny/gap, below f32 resolution for any resolvable gap.
+    tiny = jnp.asarray(1e-30, lam.dtype)
+    log_tiny = jnp.log(tiny)
+
+    def block(i0):
+        lam_blk = lam[i0:i0 + chunk_i]  # static slice (ragged-tail safe)
+        diff = jnp.abs(lam_blk[:, None] - lam[None, :])
+        log_d = jnp.log(diff + tiny)
+        return jnp.einsum("ik,k->i", log_d, ones) - log_tiny
+
+    if n <= chunk_i:
+        return block(0)
+    return jnp.concatenate([block(i0) for i0 in range(0, n, chunk_i)])
+
+
+def logabs_numerator(lam: jax.Array, mu: jax.Array) -> jax.Array:
+    """``sum_k log|lam[i] - mu[j, k]|``; shape ``(n, n_minors)``."""
+    diff = jnp.abs(lam[:, None, None] - mu[None, :, :])
+    return jnp.sum(jnp.log(diff), axis=-1)
+
+
+def logabs_numerator_dot(lam: jax.Array, mu: jax.Array,
+                         floor: float | jax.Array = 0.0,
+                         chunk_i: int = 1024) -> jax.Array:
+    """``logabs_numerator`` with the k-reduction expressed as a contraction
+    with a ones-vector.
+
+    Beyond-paper (EXPERIMENTS.md §Perf, paper-eei iterations 1 & 4): XLA
+    fuses the elementwise ``log|lam - mu|`` producer into the dot, so the
+    (i, j, k) tensor is never materialized — HLO bytes drop to the input
+    size (~260x on the dry-run memory term) and the reduction runs on the
+    MXU.  The contraction is chunked over ``i`` because past ~4e9 fused
+    elements XLA stops fusing the producer (measured; iteration 4) — each
+    chunk re-reads ``mu``, a ~2x input-read cost that buys back the ~20x
+    materialization.  This is the jnp-level expression of what the
+    ``prod_diff`` Pallas kernel does with explicit VMEM tiles.
+    """
+    n_i = lam.shape[0]
+    ones = jnp.ones((mu.shape[-1],), jnp.float32)
+
+    def block(lam_blk):
+        d = jnp.abs(lam_blk[:, None, None] - mu[None, :, :])
+        if not (isinstance(floor, float) and floor == 0.0):
+            d = jnp.maximum(d, floor)
+        return jnp.einsum("ijk,k->ij", jnp.log(d), ones)
+
+    if n_i <= chunk_i:
+        return block(lam)
+    out = [block(lam[i0:i0 + chunk_i]) for i0 in range(0, n_i, chunk_i)]
+    return jnp.concatenate(out, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Variant: baseline (Algorithm 1, faithful)
+# ---------------------------------------------------------------------------
+
+
+def component_baseline(a: jax.Array, i: int, j: int) -> jax.Array:
+    """Algorithm 1 of the paper: recompute spectra per call, scalar loops.
+
+    Deliberately naive — this is the paper's baseline and exists to anchor the
+    benchmark ladder.  Not jit-able over ``i, j`` loops by design (python
+    loops, like the reference implementation of Denton et al.).
+    """
+    n = a.shape[0]
+    lam = jnp.linalg.eigvalsh(a)
+    mu = jnp.linalg.eigvalsh(minors_lib.minor(a, jnp.asarray(j)))
+    numerator = jnp.asarray(1.0, dtype=a.dtype)
+    for k in range(n - 1):
+        numerator = numerator * (lam[i] - mu[k])
+    denominator = jnp.asarray(1.0, dtype=a.dtype)
+    for k in range(n):
+        if k != i:
+            denominator = denominator * (lam[i] - lam[k])
+    return numerator / denominator
+
+
+# ---------------------------------------------------------------------------
+# Variant: cached (spectra once, scalar loops)
+# ---------------------------------------------------------------------------
+
+
+def component_cached(lam: jax.Array, mu_j: jax.Array, i: int) -> jax.Array:
+    """Spectra precomputed; python-loop products (paper's first improvement)."""
+    n = lam.shape[0]
+    numerator = jnp.asarray(1.0, dtype=lam.dtype)
+    for k in range(n - 1):
+        numerator = numerator * (lam[i] - mu_j[k])
+    denominator = jnp.asarray(1.0, dtype=lam.dtype)
+    for k in range(n):
+        if k != i:
+            denominator = denominator * (lam[i] - lam[k])
+    return numerator / denominator
+
+
+# ---------------------------------------------------------------------------
+# Variant: vectorized
+# ---------------------------------------------------------------------------
+
+
+def component_vectorized(lam: jax.Array, mu_j: jax.Array, i) -> jax.Array:
+    """Array products over ``k`` (paper's vectorized variant)."""
+    n = lam.shape[0]
+    numer = jnp.prod(lam[i] - mu_j)
+    denom_terms = jnp.where(jnp.arange(n) == i, 1.0, lam[i] - lam)
+    return numer / jnp.prod(denom_terms)
+
+
+# ---------------------------------------------------------------------------
+# Variant: batched (Algorithm 2) and parallel (vmap dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _paired_terms(lam: jax.Array, mu_j: jax.Array, i):
+    """Length ``n-1`` paired numerator/denominator terms of Algorithm 2.
+
+    Line 6 of Algorithm 2 deletes ``lam[i]`` from the matrix spectrum so both
+    products have ``n-1`` terms that can be batch-paired.
+    """
+    lam_wo_i = minors_lib.delete_index(lam, jnp.asarray(i))
+    numer_terms = lam[i] - mu_j
+    denom_terms = lam[i] - lam_wo_i
+    return numer_terms, denom_terms
+
+
+def component_batched(lam, mu_j, i, batch_size: int = 64) -> jax.Array:
+    """Algorithm 2: per-batch partial ratios, multiplied sequentially.
+
+    Pairing each numerator term with a denominator term keeps every partial
+    ratio O(1) in magnitude (interlacing makes paired terms comparable), which
+    is what fixes the paper's observed overflow at ``n >~ 150``.
+    """
+    numer_terms, denom_terms = _paired_terms(lam, mu_j, i)
+    m = numer_terms.shape[0]
+    pad = (-m) % batch_size
+    numer_terms = jnp.concatenate([numer_terms, jnp.ones((pad,), lam.dtype)])
+    denom_terms = jnp.concatenate([denom_terms, jnp.ones((pad,), lam.dtype)])
+    nb = numer_terms.shape[0] // batch_size
+    num_b = jnp.prod(numer_terms.reshape(nb, batch_size), axis=1)
+    den_b = jnp.prod(denom_terms.reshape(nb, batch_size), axis=1)
+    # Sequential multiply of per-batch ratios (Algorithm 2 line 13-15).
+    return jnp.prod(num_b / den_b)
+
+
+def component_parallel(lam, mu_j, i, batch_size: int = 64) -> jax.Array:
+    """Algorithm 2 with batch dispatch on ``vmap`` lanes (TPU thread-pool)."""
+    numer_terms, denom_terms = _paired_terms(lam, mu_j, i)
+    m = numer_terms.shape[0]
+    pad = (-m) % batch_size
+    numer_terms = jnp.concatenate([numer_terms, jnp.ones((pad,), lam.dtype)])
+    denom_terms = jnp.concatenate([denom_terms, jnp.ones((pad,), lam.dtype)])
+    nb = numer_terms.shape[0] // batch_size
+
+    def batch_ratio(nt, dt):  # one dispatched batch
+        return jnp.prod(nt) / jnp.prod(dt)
+
+    ratios = jax.vmap(batch_ratio)(
+        numer_terms.reshape(nb, batch_size), denom_terms.reshape(nb, batch_size)
+    )
+    return jnp.prod(ratios)
+
+
+# ---------------------------------------------------------------------------
+# Variant: logspace (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def component_logspace(lam, mu_j, i, eps: float | None = None) -> jax.Array:
+    """log-domain EEI: immune to fp over/underflow at any ``n``.
+
+    The overall sign is guaranteed non-negative by Cauchy interlacing, so only
+    ``log|diff|`` is needed.  Degenerate gaps are clamped at ``eps * scale``.
+    """
+    n = lam.shape[0]
+    scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
+    if eps is None:
+        eps = float(jnp.finfo(lam.dtype).eps)
+    floor = eps * scale
+    numer = jnp.sum(jnp.log(jnp.maximum(jnp.abs(lam[i] - mu_j), floor)))
+    denom_terms = jnp.where(
+        jnp.arange(n) == i, 1.0, jnp.maximum(jnp.abs(lam[i] - lam), floor)
+    )
+    denom = jnp.sum(jnp.log(denom_terms))
+    return jnp.exp(numer - denom)
+
+
+# ---------------------------------------------------------------------------
+# Full-row / full-matrix APIs (what applications actually call)
+# ---------------------------------------------------------------------------
+
+
+def magnitudes_from_spectra(lam: jax.Array, mu: jax.Array, logspace: bool = True,
+                            reduce: str = "sum"):
+    """All ``|v[i, j]|^2`` from precomputed spectra; shape ``(n, n)``.
+
+    ``i`` indexes eigenvalues (rows), ``j`` components (columns).
+    ``reduce="dot"`` selects the fused contraction form of the numerator
+    (see ``logabs_numerator_dot``).  Degenerate gaps are clamped at
+    ``eps * spectral scale`` so exactly-repeated eigenvalues stay finite.
+    """
+    if logspace:
+        scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
+        floor = jnp.finfo(lam.dtype).eps * scale
+        if reduce == "dot":
+            log_num = logabs_numerator_dot(lam, mu, floor=floor)
+            log_den = logabs_denominator_dot(lam)
+        else:
+            diff_n = jnp.maximum(jnp.abs(lam[:, None, None] - mu[None, :, :]),
+                                 floor)
+            log_num = jnp.sum(jnp.log(diff_n), axis=-1)  # (n, n)
+            diff_d = jnp.abs(lam[:, None] - lam[None, :])
+            diff_d = jnp.where(jnp.eye(lam.shape[0], dtype=bool), 1.0,
+                               jnp.maximum(diff_d, floor))
+            log_den = jnp.sum(jnp.log(diff_d), axis=-1)  # (n,)
+        return jnp.exp(log_num - log_den[:, None])
+    return numerator_products(lam, mu) / denominator_products(lam)[:, None]
+
+
+def eigenvector_magnitudes(a: jax.Array, i, logspace: bool = True) -> jax.Array:
+    """``|v[i, :]|^2`` — one full eigenvector's component magnitudes."""
+    lam = matrix_spectrum(a)
+    mu = minor_spectra(a)
+    fn = component_logspace if logspace else component_vectorized
+    return jax.vmap(lambda j: fn(lam, mu[j], i))(jnp.arange(a.shape[0]))
+
+
+def eigenmatrix_magnitudes(a: jax.Array, logspace: bool = True) -> jax.Array:
+    """``|v[i, j]|^2`` for all ``(i, j)``; rows are eigenvectors."""
+    lam = matrix_spectrum(a)
+    mu = minor_spectra(a)
+    return magnitudes_from_spectra(lam, mu, logspace=logspace)
+
+
+def component(
+    a: jax.Array, i, j, variant: str = "logspace", batch_size: int = 64
+) -> jax.Array:
+    """Single component ``|v[i, j]|^2`` via a named variant."""
+    if variant == "baseline":
+        return component_baseline(a, i, j)
+    lam = matrix_spectrum(a)
+    mu_j = jnp.linalg.eigvalsh(minors_lib.minor(a, jnp.asarray(j)))
+    if variant == "cached":
+        return component_cached(lam, mu_j, i)
+    if variant == "vectorized":
+        return component_vectorized(lam, mu_j, i)
+    if variant == "batched":
+        return component_batched(lam, mu_j, i, batch_size)
+    if variant == "parallel":
+        return component_parallel(lam, mu_j, i, batch_size)
+    if variant == "logspace":
+        return component_logspace(lam, mu_j, i)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+VARIANTS: dict[str, Callable] = {
+    "baseline": component_baseline,
+    "cached": component_cached,
+    "vectorized": component_vectorized,
+    "batched": component_batched,
+    "parallel": component_parallel,
+    "logspace": component_logspace,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "batch_size"))
+def component_jit(a, i, j, variant: str = "logspace", batch_size: int = 64):
+    """Jitted single-component entry point (variants except baseline/cached)."""
+    return component(a, i, j, variant=variant, batch_size=batch_size)

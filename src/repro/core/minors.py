@@ -1,0 +1,76 @@
+"""Minor construction for the eigenvector-eigenvalue identity.
+
+The identity needs the spectra of all principal minors ``M_j`` of a Hermitian
+matrix ``A`` (delete row and column ``j``).  Two representations are provided:
+
+* dense minors — a gather-based ``delete`` that works under ``vmap``/``jit``
+  with a *traced* index ``j`` (``np.delete`` does not);
+* tridiagonal minors — removing row/column ``j`` of a symmetric tridiagonal
+  matrix ``T`` yields two *decoupled* tridiagonal blocks, expressible as a
+  single tridiagonal system with a zeroed coupling entry.  This is the
+  TPU-native representation: no data movement, index arithmetic only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delete_index(x: jax.Array, j: jax.Array) -> jax.Array:
+    """Remove element ``j`` from a 1-D array (traced-``j`` safe)."""
+    n = x.shape[0]
+    idx = jnp.arange(n - 1)
+    return x[idx + (idx >= j)]
+
+
+def minor(a: jax.Array, j: jax.Array) -> jax.Array:
+    """Principal minor of ``a`` obtained by deleting row and column ``j``.
+
+    Works with a traced ``j`` (uses gathers, not boolean masks), so it can be
+    ``vmap``-ed over ``j`` to build all minors at once.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n - 1)
+    sel = idx + (idx >= j)
+    return a[sel][:, sel]
+
+
+def all_minors(a: jax.Array) -> jax.Array:
+    """Stack of all ``n`` principal minors, shape ``(n, n-1, n-1)``.
+
+    Memory is O(n^3); for large ``n`` prefer the tridiagonal representation
+    (``tridiagonal_minor_bands``) which is O(n^2).
+    """
+    n = a.shape[0]
+    return jax.vmap(lambda j: minor(a, j))(jnp.arange(n))
+
+
+def tridiagonal_minor_bands(d: jax.Array, e: jax.Array, j: jax.Array):
+    """Bands of the minor ``M_j`` of a symmetric tridiagonal matrix.
+
+    Removing row/column ``j`` from ``T = tridiag(e, d, e)`` (``d``: shape
+    ``(n,)`` diagonal, ``e``: shape ``(n-1,)`` off-diagonal) produces a matrix
+    that is *again* tridiagonal: the leading block ``T[:j, :j]`` and the
+    trailing block ``T[j+1:, j+1:]`` are decoupled.  In the new indexing the
+    off-diagonal entry bridging them is exactly zero.
+
+    Returns ``(d_minor, e_minor)`` with shapes ``(n-1,)`` and ``(n-2,)``.
+
+    Derivation: with ``f(p) = p + (p >= j)`` the new off-diagonal is
+    ``e'_p = T[f(p), f(p+1)]`` which equals ``e[f(p)]`` when the old indices
+    are adjacent (``p != j-1``) and ``0`` when they straddle the removed index
+    (``p == j-1``).
+    """
+    n = d.shape[0]
+    p = jnp.arange(n - 1)
+    d_minor = d[p + (p >= j)]
+    q = jnp.arange(n - 2)
+    e_minor = jnp.where(q == j - 1, 0.0, e[jnp.minimum(q + (q >= j), n - 2)])
+    return d_minor, e_minor
+
+
+def all_tridiagonal_minor_bands(d: jax.Array, e: jax.Array):
+    """Bands for every minor: shapes ``(n, n-1)`` and ``(n, n-2)``."""
+    n = d.shape[0]
+    return jax.vmap(lambda j: tridiagonal_minor_bands(d, e, j))(jnp.arange(n))

@@ -1,0 +1,143 @@
+"""SpectralEngine — the framework-facing façade over the EEI pipeline.
+
+Consumers (the ``eigenpre`` optimizer, spectral monitors, examples) ask for
+*partial* spectral information of symmetric matrices; the engine routes to one
+of three paths:
+
+    eigh          ``jnp.linalg.eigh`` — LAPACK-equivalent oracle (the paper's
+                  "state of the art" comparison point).
+    eei_dense     paper-faithful: ``eigvalsh`` of A and of every dense minor,
+                  then EEI products (logspace by default).
+    eei_tridiag   TPU-native: Householder tridiagonalize once -> Sturm
+                  bisection for λ(A) and for all (decoupled tridiagonal)
+                  minors -> EEI on the tridiagonal form -> recurrence signs ->
+                  back-transform the requested components with Q.
+
+The tridiagonal path is the beyond-paper contribution: minor spectra cost
+O(n^2 · iters) *total* instead of n LAPACK calls of size n-1 (O(n^4)), and
+every stage is Pallas-kernelized (``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import identity, minors
+from repro.core.directions import inverse_iteration_signs, tridiagonal_signs
+from repro.linalg import householder, sturm
+
+Method = Literal["eigh", "eei_dense", "eei_tridiag"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralEngine:
+    """Partial-spectrum queries over symmetric matrices."""
+
+    method: Method = "eei_tridiag"
+    use_kernels: bool = False  # route products/bisection through Pallas
+    bisect_iters: int = 0  # 0 -> dtype default
+
+    # -- eigenvalues ---------------------------------------------------------
+
+    def eigenvalues(self, a: jax.Array) -> jax.Array:
+        if self.method == "eigh" or self.method == "eei_dense":
+            return jnp.linalg.eigvalsh(a)
+        d, e, _ = householder.tridiagonalize(a, with_q=False)
+        return self._tridiag_eigvals(d, e)
+
+    def _tridiag_eigvals(self, d, e):
+        if self.use_kernels:
+            from repro.kernels.sturm import ops as sturm_ops
+
+            return sturm_ops.sturm_eigenvalues(
+                d[None], e[None], n_iter=self.bisect_iters
+            )[0]
+        return sturm.bisect_eigenvalues(d, e, n_iter=self.bisect_iters)
+
+    def _tridiag_eigvals_batched(self, d, e):
+        if self.use_kernels:
+            from repro.kernels.sturm import ops as sturm_ops
+
+            return sturm_ops.sturm_eigenvalues(d, e, n_iter=self.bisect_iters)
+        return sturm.bisect_eigenvalues_batched(d, e, n_iter=self.bisect_iters)
+
+    # -- component magnitudes -------------------------------------------------
+
+    def component_magnitudes(self, a: jax.Array) -> jax.Array:
+        """All ``|v[i, j]|^2`` — shape (n, n); rows are eigenvectors.
+
+        For the tridiagonal path these are magnitudes of the *tridiagonal*
+        eigenvectors ``w``; dense-basis magnitudes require the back-transform
+        (see ``topk_eigenpairs``).
+        """
+        if self.method == "eigh":
+            _, v = jnp.linalg.eigh(a)
+            return (v * v).T
+        if self.method == "eei_dense":
+            lam = jnp.linalg.eigvalsh(a)
+            mu = identity.minor_spectra(a)
+            return self._magnitudes(lam, mu)
+        d, e, _ = householder.tridiagonalize(a, with_q=False)
+        lam, mu = self._tridiag_spectra(d, e)
+        return self._magnitudes(lam, mu)
+
+    def _tridiag_spectra(self, d, e):
+        lam = self._tridiag_eigvals(d, e)
+        dm, em = minors.all_tridiagonal_minor_bands(d, e)
+        mu = self._tridiag_eigvals_batched(dm, em)
+        return lam, mu
+
+    def _magnitudes(self, lam, mu):
+        if self.use_kernels:
+            from repro.kernels.prod_diff import ops as pd_ops
+
+            return pd_ops.eei_magnitudes(lam, mu)
+        return identity.magnitudes_from_spectra(lam, mu, logspace=True)
+
+    # -- signed eigenpairs -----------------------------------------------------
+
+    def topk_eigenpairs(self, a: jax.Array, k: int, largest: bool = True):
+        """Top-k (eigenvalue, signed eigenvector) pairs in the dense basis.
+
+        This is the partial-spectrum query the paper's use cases (web ranking,
+        signal preprocessing, spectral preconditioning) actually issue — the
+        regime where EEI beats full eigh.
+        """
+        n = a.shape[0]
+        if self.method == "eigh":
+            lam, v = jnp.linalg.eigh(a)
+            idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
+            return lam[idx], v[:, idx].T
+
+        if self.method == "eei_dense":
+            lam = jnp.linalg.eigvalsh(a)
+            mu = identity.minor_spectra(a)
+            mags = self._magnitudes(lam, mu)
+            idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
+
+            def signed(i):
+                return inverse_iteration_signs(a, lam[i], mags[i])
+
+            vecs = jax.vmap(signed)(idx)
+            return lam[idx], _renormalize(vecs)
+
+        d, e, q = householder.tridiagonalize(a, with_q=True)
+        lam, mu = self._tridiag_spectra(d, e)
+        mags = self._magnitudes(lam, mu)
+        idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
+
+        def signed(i):
+            w = tridiagonal_signs(d, e, lam[i], mags[i])
+            return q @ w  # back-transform: v = Q w
+
+        vecs = jax.vmap(signed)(idx)
+        return lam[idx], _renormalize(vecs)
+
+
+def _renormalize(vecs: jax.Array) -> jax.Array:
+    nrm = jnp.linalg.norm(vecs, axis=-1, keepdims=True)
+    return vecs / jnp.maximum(nrm, 1e-30)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import BinTokenDataset, PrefetchIterator  # noqa: F401
+from repro.data.synthetic import SyntheticLM, make_synthetic  # noqa: F401

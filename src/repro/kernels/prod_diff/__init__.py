@@ -1,0 +1,1 @@
+from repro.kernels.prod_diff.ops import eei_magnitudes, logabs_sum  # noqa: F401

@@ -1,0 +1,84 @@
+"""Jit'd public wrappers for the prod_diff kernel (padding, masking, EEI)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prod_diff import kernel as _kernel
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+)
+def logabs_sum(
+    lam: jax.Array,  # (I,)
+    mu: jax.Array,  # (J, K)
+    floor: jax.Array | float,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """``out[i, j] = sum_k log(max(|lam[i] - mu[j, k]|, floor))`` via Pallas."""
+    if interpret is None:
+        interpret = default_interpret()
+    i_n = lam.shape[0]
+    j_n, k_n = mu.shape
+    block_i = min(block_i, max(8, i_n))
+    block_j = min(block_j, max(8, j_n))
+    block_k = min(block_k, max(8, k_n))
+    lam_col = _pad_to(lam[:, None], 0, block_i)
+    mask = jnp.ones((j_n, k_n), lam.dtype)
+    mu_p = _pad_to(_pad_to(mu, 0, block_j), 1, block_k)
+    mask_p = _pad_to(_pad_to(mask, 0, block_j), 1, block_k)
+    floor_arr = jnp.asarray(floor, lam.dtype).reshape(1, 1)
+    out = _kernel.logabs_sum_padded(
+        lam_col,
+        jnp.swapaxes(mu_p, 0, 1),
+        jnp.swapaxes(mask_p, 0, 1),
+        floor_arr,
+        block_i=block_i,
+        block_j=block_j,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:i_n, :j_n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def eei_magnitudes(
+    lam: jax.Array, mu: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """All ``|v[i, j]|^2`` from spectra; numerator table via the kernel.
+
+    lam: (n,) matrix spectrum (ascending); mu: (n, n-1) minor spectra.
+    The O(n^2) denominator stays in jnp — it is not a hot spot.
+    """
+    n = lam.shape[0]
+    eps = jnp.finfo(lam.dtype).eps
+    scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
+    floor = eps * scale
+    log_num = logabs_sum(lam, mu, floor, interpret=interpret)
+    diff = jnp.abs(lam[:, None] - lam[None, :])
+    diff = jnp.where(jnp.eye(n, dtype=bool), 1.0, jnp.maximum(diff, floor))
+    log_den = jnp.sum(jnp.log(diff), axis=-1)
+    return jnp.exp(log_num - log_den[:, None])

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the prod_diff kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logabs_sum(lam: jax.Array, mu: jax.Array, floor: float | jax.Array) -> jax.Array:
+    """``out[i, j] = sum_k log(max(|lam[i] - mu[j, k]|, floor))``.
+
+    lam: (I,), mu: (J, K) -> (I, J).
+    """
+    ad = jnp.abs(lam[:, None, None] - mu[None, :, :])
+    return jnp.sum(jnp.log(jnp.maximum(ad, floor)), axis=-1)
+
+
+def eei_magnitudes(lam: jax.Array, mu: jax.Array, floor_eps: float | None = None):
+    """All ``|v[i, j]|^2`` from spectra (logspace); lam (n,), mu (n, n-1)."""
+    n = lam.shape[0]
+    if floor_eps is None:
+        floor_eps = float(jnp.finfo(lam.dtype).eps)
+    scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
+    floor = floor_eps * scale
+    log_num = logabs_sum(lam, mu, floor)
+    diff = jnp.abs(lam[:, None] - lam[None, :])
+    diff = jnp.where(jnp.eye(n, dtype=bool), 1.0, jnp.maximum(diff, floor))
+    log_den = jnp.sum(jnp.log(diff), axis=-1)
+    return jnp.exp(log_num - log_den[:, None])

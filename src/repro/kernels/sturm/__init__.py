@@ -1,0 +1,1 @@
+from repro.kernels.sturm.ops import sturm_eigenvalues  # noqa: F401

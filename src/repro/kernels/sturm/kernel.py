@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched Sturm-sequence bisection eigenvalues.
+
+One program instance computes a ``(bb, bm)`` tile of eigenvalues — ``bb``
+tridiagonal matrices on sublanes, ``bm`` eigenvalue indices on lanes.  Every
+bisection iteration runs the Sturm recurrence sequentially over the matrix
+dimension ``N`` (a ``fori_loop`` of rank-2 VPU ops) with all ``bb * bm``
+bisection brackets advancing in lockstep — bisection is branch-free, so the
+"divide" of divide-&-conquer becomes pure lane parallelism, which is the TPU
+adaptation of LAPACK's recursion (see DESIGN.md §2).
+
+Inputs are pre-padded by ``ops.py``:
+  d      (B, N)   diagonals (padded rows = 0)
+  e      (B, N)   off-diagonals, entry N-1 (and padding) = 0
+  bounds (B, 4)   [lo, hi, pivmin, n_valid] per matrix; padded eigenvalue
+                  indices (>= n_valid) converge onto ``hi`` and are sliced
+                  off by the wrapper.
+
+The full ``(bb, N)`` band rows live in VMEM (N f32 pairs: N=8192 -> 64 KiB
+per row-block at bb=8), well inside the ~16 MiB budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total):
+    d = d_ref[...]  # (bb, N)
+    e = e_ref[...]  # (bb, N)
+    e2 = e * e
+    lo0 = bounds_ref[:, 0:1]  # (bb, 1)
+    hi0 = bounds_ref[:, 1:2]
+    pivmin = bounds_ref[:, 2:3]
+
+    m0 = pl.program_id(1) * block_m
+    targets = m0 + jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)  # (1, bm)
+
+    bb = d.shape[0]
+    lo = jnp.broadcast_to(lo0, (bb, block_m))
+    hi = jnp.broadcast_to(hi0, (bb, block_m))
+
+    def count_below(x):
+        """#eigenvalues < x per (matrix, lane); x: (bb, bm)."""
+        q0 = jax.lax.dynamic_slice_in_dim(d, 0, 1, axis=1) - x  # (bb, bm)
+        q0 = jnp.where(jnp.abs(q0) < pivmin, -pivmin, q0)
+        c0 = (q0 < 0).astype(jnp.int32)
+
+        def body(k, carry):
+            q, c = carry
+            dk = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)  # (bb, 1)
+            e2k = jax.lax.dynamic_slice_in_dim(e2, k - 1, 1, axis=1)  # (bb, 1)
+            q = dk - x - e2k / q
+            q = jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+            return q, c + (q < 0).astype(jnp.int32)
+
+        _, c = jax.lax.fori_loop(1, n_total, body, (q0, c0))
+        return c
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        c = count_below(mid)
+        go_right = c <= targets
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, bisect, (lo, hi))
+    out_ref[...] = 0.5 * (lo + hi)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
+)
+def sturm_padded(
+    d: jax.Array,  # (B, N)
+    e: jax.Array,  # (B, N)
+    bounds: jax.Array,  # (B, 4)
+    *,
+    n_iter: int,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool = False,
+):
+    b_total, n_total = d.shape
+    grid = (b_total // block_b, n_total // block_m)
+    return pl.pallas_call(
+        functools.partial(
+            _sturm_kernel, n_iter=n_iter, block_m=block_m, n_total=n_total
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_total), lambda b, m: (b, 0)),
+            pl.BlockSpec((block_b, n_total), lambda b, m: (b, 0)),
+            pl.BlockSpec((block_b, 4), lambda b, m: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_m), lambda b, m: (b, m)),
+        out_shape=jax.ShapeDtypeStruct((b_total, n_total), d.dtype),
+        interpret=interpret,
+    )(d, e, bounds)

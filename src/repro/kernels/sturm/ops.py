@@ -1,0 +1,89 @@
+"""Jit'd public wrapper for the sturm kernel (bounds, padding, slicing)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sturm import kernel as _kernel
+
+
+def _default_iters(dtype) -> int:
+    return 64 if dtype == jnp.float64 else 32
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
+)
+def sturm_eigenvalues(
+    d: jax.Array,  # (B, n)
+    e: jax.Array,  # (B, n-1)
+    *,
+    n_iter: int = 0,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """All eigenvalues of ``B`` symmetric tridiagonal matrices, ``(B, n)``.
+
+    Decoupled systems (zero off-diagonal entries, e.g. EEI minors of a
+    tridiagonal matrix) need no special handling — the Sturm count is exact
+    across decoupling points.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b_n, n = d.shape
+    dtype = d.dtype
+    if n_iter == 0:
+        n_iter = _default_iters(dtype)
+
+    # Per-matrix Gershgorin bounds + pivmin (computed on unpadded bands).
+    abs_e = jnp.abs(e)
+    r = jnp.zeros_like(d)
+    if n > 1:
+        r = r.at[:, :-1].add(abs_e)
+        r = r.at[:, 1:].add(abs_e)
+    lo = jnp.min(d - r, axis=1)
+    hi = jnp.max(d + r, axis=1)
+    span = jnp.maximum(hi - lo, 1.0)
+    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
+    lo = lo - eps * span
+    hi = hi + eps * span
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(d), axis=1),
+        jnp.max(abs_e, axis=1) if n > 1 else jnp.zeros((b_n,), dtype),
+    )
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    pivmin = jnp.maximum(eps * eps * scale * scale, tiny)
+    bounds = jnp.stack([lo, hi, pivmin, jnp.full((b_n,), n, dtype)], axis=1)
+
+    block_m = min(block_m, max(8, n))
+    block_b = min(block_b, max(1, b_n))
+    pad_n = (-n) % block_m
+    pad_b = (-b_n) % block_b
+    # Padded diagonal entries sit above hi (decoupled via zero e), so padded
+    # eigenvalue indices converge onto hi and are sliced off below.
+    d_p = jnp.pad(d, ((0, pad_b), (0, pad_n)), constant_values=0.0)
+    if pad_n or n >= 1:
+        big = (jnp.abs(hi) + span)[:, None]
+        col = jnp.arange(n + pad_n)[None, :]
+        d_p = jnp.where(
+            col >= n, jnp.pad(big, ((0, pad_b), (0, 0)), constant_values=1.0), d_p
+        )
+    e_p = jnp.zeros_like(d_p)
+    if n > 1:
+        e_p = e_p.at[:b_n, : n - 1].set(e)
+    bounds_p = jnp.pad(bounds, ((0, pad_b), (0, 0)), constant_values=1.0)
+
+    out = _kernel.sturm_padded(
+        d_p,
+        e_p,
+        bounds_p,
+        n_iter=n_iter,
+        block_b=block_b,
+        block_m=block_m,
+        interpret=interpret,
+    )
+    return out[:b_n, :n]

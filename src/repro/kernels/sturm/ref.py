@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the sturm kernel: repro.linalg.sturm re-exported with
+the kernel's batched calling convention."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.linalg import sturm as _sturm
+
+
+def sturm_eigenvalues(d: jax.Array, e: jax.Array, n_iter: int = 0) -> jax.Array:
+    """Eigenvalues of a batch of tridiagonals; d (B, n), e (B, n-1) -> (B, n)."""
+    return _sturm.bisect_eigenvalues_batched(d, e, n_iter=n_iter)

@@ -1,0 +1,1 @@
+from repro.launch.mesh import chips, make_local_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,326 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) cell, extract
+memory analysis, cost analysis, collective bytes, and roofline terms.
+
+Importable without touching jax device state; the ``dryrun`` entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* importing
+this module.  Tests call ``dryrun_cell`` on a small local mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCHS, get_config
+from repro.models.lm import LanguageModel
+from repro.roofline import (
+    CostVector,
+    Roofline,
+    collective_bytes,
+    cost_vector,
+    extrapolate,
+    model_flops,
+    slstm_extra_flops,
+)
+from repro.sharding import rules as rules_lib
+from repro.train import steps as steps_lib
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, fsdp: bool | None = None):
+    """Lower the cell's step on ``mesh``; returns the jax Lowered object."""
+    from repro.sharding import hints
+
+    model = LanguageModel(cfg)
+    if fsdp is None:
+        fsdp = rules_lib.fsdp_recommended(model.n_params(), mesh)
+    rules = rules_lib.make_rules(mesh, fsdp=fsdp)
+    param_specs = steps_lib.param_pspecs(model, rules)
+    param_sh = _named(mesh, param_specs)
+    repl = NamedSharding(mesh, P())
+
+    with mesh, hints.axis_hints(data=rules_lib.data_axes(mesh), model="model",
+                                model_size=rules_lib.mesh_axis_size(mesh, "model")):
+        if shape.kind == "train":
+            state_sh = _named(mesh, steps_lib.state_pspecs(model, rules))
+            batch_sh = _named(mesh, steps_lib.batch_pspecs(cfg, mesh))
+            step = steps_lib.make_train_step(model)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None))
+            state = steps_lib.abstract_state(model)
+            batch = steps_lib.input_specs(cfg, shape)
+            return fn.lower(state, batch)
+        if shape.kind == "prefill":
+            batch_sh = _named(mesh, steps_lib.batch_pspecs(cfg, mesh))
+            cache_shapes = model.cache_spec(shape.global_batch, shape.seq_len,
+                                            jnp.bfloat16)
+            cache_sh = _named(mesh, steps_lib.prune_specs(
+                steps_lib.cache_pspecs(model, mesh), cache_shapes, mesh))
+
+            def prefill_step(params, batch):
+                params = steps_lib.cast_tree(params, jnp.bfloat16)
+                return model.prefill(params, batch, shape.seq_len,
+                                     cache_dtype=jnp.bfloat16)
+
+            fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(repl, cache_sh))
+            batch = steps_lib.input_specs(cfg, shape)
+            return fn.lower(model.abstract(jnp.float32), batch)
+        # decode
+        spec = steps_lib.input_specs(cfg, shape)
+        cache_specs = steps_lib.prune_specs(
+            steps_lib.cache_pspecs(model, mesh), spec["caches"], mesh)
+        cache_sh = _named(mesh, cache_specs)
+        serve = steps_lib.make_serve_step(model)
+        fn = jax.jit(serve, in_shardings=(param_sh, cache_sh, repl, repl),
+                     out_shardings=(repl, cache_sh))
+        return fn.lower(model.abstract(jnp.float32), spec["caches"],
+                        spec["token"], spec["pos"])
+
+
+# ---------------------------------------------------------------------------
+# Cost extraction
+# ---------------------------------------------------------------------------
+
+
+def compile_and_extract(lowered) -> dict:
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    compile_s = time.monotonic() - t0
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    mem: dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # CPU backend may not implement everything
+        mem["error"] = str(e)
+    return {
+        "compile_s": compile_s,
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "memory": mem,
+    }
+
+
+def _scaled_pattern(cfg: ModelConfig, repeats: list[int]) -> ModelConfig:
+    pattern = tuple(
+        (r, kinds) for r, (_, kinds) in zip(repeats, cfg.pattern)
+    )
+    n_layers = sum(r * len(k) for r, k in pattern)
+    # unroll_groups: the extrapolation lowerings must not hide per-layer cost
+    # inside a while body (cost_analysis visits it once regardless of trip
+    # count) — unrolled scans make cost(L) exactly linear in L.
+    return dataclasses.replace(cfg, pattern=pattern, n_layers=n_layers,
+                               unroll_groups=True)
+
+
+def _with_enc(cfg: ModelConfig, n_enc: int) -> ModelConfig:
+    return dataclasses.replace(cfg, n_enc_layers=n_enc)
+
+
+def roofline_for_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      fsdp: bool | None = None) -> dict:
+    """L-extrapolated cost vector + roofline terms (see analysis module)."""
+    repeats = [r for r, _ in cfg.pattern]
+    base_cfg = _scaled_pattern(cfg, [1] * len(repeats))
+    if cfg.n_enc_layers:
+        base_cfg = _with_enc(base_cfg, 1)
+    ex_base = compile_and_extract(lower_cell(base_cfg, shape, mesh, fsdp))
+    c_base = cost_vector(ex_base["cost"], ex_base["collectives"])
+
+    slopes: list[CostVector] = []
+    lowerings = {"base": ex_base}
+    for g in range(len(repeats)):
+        reps = [1] * len(repeats)
+        reps[g] = 2
+        cfg_g = _scaled_pattern(cfg, reps)
+        if cfg.n_enc_layers:
+            cfg_g = _with_enc(cfg_g, 1)
+        ex_g = compile_and_extract(lower_cell(cfg_g, shape, mesh, fsdp))
+        lowerings[f"group{g}x2"] = ex_g
+        slopes.append(cost_vector(ex_g["cost"], ex_g["collectives"]))
+    total = extrapolate(c_base, slopes, repeats)
+
+    if cfg.n_enc_layers:
+        cfg_e = _with_enc(_scaled_pattern(cfg, [1] * len(repeats)), 2)
+        ex_e = compile_and_extract(lower_cell(cfg_e, shape, mesh, fsdp))
+        lowerings["encx2"] = ex_e
+        enc_slope = cost_vector(ex_e["cost"], ex_e["collectives"]) - c_base
+        total = total + enc_slope.scale(cfg.n_enc_layers - 1)
+
+    # cost_analysis reports the per-device SPMD program (verified in
+    # EXPERIMENTS.md §Methodology) — globalize by chip count so the roofline
+    # formula's global/(chips*peak) convention holds.
+    total = total.scale(float(mesh.devices.size))
+
+    rl = Roofline(
+        flops=total.flops,
+        bytes_accessed=total.bytes_accessed,
+        collective_bytes=total.collective.get("total", 0.0),
+        chips=int(mesh.devices.size),
+        model_flops=model_flops(cfg, shape),
+        extra_flops=slstm_extra_flops(cfg, shape),
+    )
+    return {
+        "roofline": rl.as_dict(),
+        "collective_breakdown": total.collective,
+        "lowerings": {
+            k: {kk: v[kk] for kk in ("compile_s", "cost", "collectives")}
+            for k, v in lowerings.items()
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell driver
+# ---------------------------------------------------------------------------
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *, roofline: bool = False,
+                full_compile: bool = True, fsdp: bool | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "chips": int(mesh.devices.size),
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+    try:
+        if full_compile:
+            lowered = lower_cell(cfg, shape, mesh, fsdp)
+            result["full"] = compile_and_extract(lowered)
+        if roofline:
+            result.update(roofline_for_cell(cfg, shape, mesh, fsdp))
+        result["status"] = "ok"
+    except Exception as e:
+        result["status"] = "failed"
+        result["error"] = f"{type(e).__name__}: {e}"
+        raise
+    return result
+
+
+def save_artifact(result: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if result.get("chips", 0) > 256 else "pod"
+    path = os.path.join(
+        out_dir, f"{result['arch']}__{result['shape']}__{mesh_tag}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload as a dry-run citizen: distributed EEI at scale
+# ---------------------------------------------------------------------------
+
+
+def lower_paper_eei(mesh, n: int = 4096, logspace: bool = True,
+                    reduce: str = "sum"):
+    """Lower the EEI component-table computation (Algorithm 2's hot loop) on
+    the production mesh: spectra replicated, minors sharded on ``model``,
+    batch of matrices on ``data``.
+
+    The O(n^3) difference-product stage dominates (the bisection/minor-spectra
+    stages are O(n^2 * iters), ~500x smaller at n=4096 — counted analytically
+    in EXPERIMENTS.md).  Pure-jnp lowering so cost_analysis sees every flop
+    (no LAPACK custom-calls, no while loops).
+    """
+    from repro.core import identity
+
+    repl = NamedSharding(mesh, P())
+    d_axes = rules_lib.data_axes(mesh)
+    lam_sh = NamedSharding(mesh, P(d_axes, None))
+    mu_sh = NamedSharding(mesh, P(d_axes, "model", None))
+    out_sh = NamedSharding(mesh, P(d_axes, None, "model"))
+    batch = rules_lib.mesh_axis_size(mesh, "data") * rules_lib.mesh_axis_size(
+        mesh, "pod")
+
+    # "dot_bf16": minor spectra stored/shipped in bf16 (eigenvalue *gaps*
+    # carry the signal; bf16's 8-bit mantissa costs ~0.4% per log term,
+    # averaged over n-1 terms), upcast fused into the contraction.
+    mu_dtype = jnp.bfloat16 if reduce == "dot_bf16" else jnp.float32
+    reduce_kind = "dot" if reduce.startswith("dot") else reduce
+
+    def eei_table(lam, mu):
+        mu = mu.astype(jnp.float32)
+        if reduce_kind == "dot":
+            # §Perf iteration 6: the (n,) denominator is replicated work —
+            # shard its producer chain over `model` (16 KB all-gather joins).
+            log_num = jax.vmap(identity.logabs_numerator_dot)(lam, mu)
+            log_den = jax.vmap(identity.logabs_denominator_dot)(lam)
+            log_den = jax.lax.with_sharding_constraint(
+                log_den, NamedSharding(mesh, P(d_axes, "model")))
+            return jnp.exp(log_num - log_den[:, :, None])
+        return jax.vmap(
+            lambda l, m: identity.magnitudes_from_spectra(
+                l, m, logspace=logspace, reduce=reduce_kind)
+        )(lam, mu)
+
+    with mesh:
+        fn = jax.jit(eei_table, in_shardings=(lam_sh, mu_sh),
+                     out_shardings=out_sh)
+        lam = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+        mu = jax.ShapeDtypeStruct((batch, n, n - 1), mu_dtype)
+        return fn.lower(lam, mu)
+
+
+def dryrun_paper_eei(mesh, n: int = 4096, reduce: str = "sum") -> dict:
+    ex = compile_and_extract(lower_paper_eei(mesh, n, reduce=reduce))
+    chips = int(mesh.devices.size)
+    total = cost_vector(ex["cost"], ex["collectives"]).scale(float(chips))
+    batch = rules_lib.mesh_axis_size(mesh, "data") * rules_lib.mesh_axis_size(
+        mesh, "pod")
+    # useful flops: 3 ops (sub, log-abs, add) per (i, j, k) numerator term
+    # + n^2 denominator, per matrix in the batch.
+    useful = 3.0 * batch * (float(n) ** 3)
+    rl = Roofline(
+        flops=total.flops,
+        bytes_accessed=total.bytes_accessed,
+        collective_bytes=total.collective.get("total", 0.0),
+        chips=chips,
+        model_flops=useful,
+    )
+    return {
+        "arch": "paper-eei", "shape": f"n{n}",
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "chips": chips, "status": "ok",
+        "full": ex,
+        "roofline": rl.as_dict(),
+        "collective_breakdown": total.collective,
+    }

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips; the ``pod`` axis is pure DCN data parallelism.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before the first jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over available devices (tests, CPU smoke)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,25 @@
+"""Dense symmetric eigensolver substrate: Householder tridiagonalization,
+Sturm-sequence bisection, and interlacing utilities.
+
+These are the pure-JAX reference implementations; the performance-critical
+paths have Pallas kernels under ``repro.kernels``.
+"""
+
+from repro.linalg.householder import tridiagonalize, tridiagonal_matrix
+from repro.linalg.sturm import (
+    gershgorin_bounds,
+    sturm_count,
+    bisect_eigenvalues,
+    bisect_eigenvalues_batched,
+)
+from repro.linalg.interlace import interlacing_holds
+
+__all__ = [
+    "tridiagonalize",
+    "tridiagonal_matrix",
+    "gershgorin_bounds",
+    "sturm_count",
+    "bisect_eigenvalues",
+    "bisect_eigenvalues_batched",
+    "interlacing_holds",
+]

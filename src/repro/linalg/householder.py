@@ -1,0 +1,84 @@
+"""Householder tridiagonalization of a symmetric matrix, pure JAX.
+
+``Q^T A Q = T`` with ``T`` tridiagonal and ``Q`` orthogonal.  This is the
+matmul-rich (MXU-friendly) stage of the TPU-native EEI pipeline: once ``A`` is
+tridiagonal, every minor spectrum is a decoupled tridiagonal problem
+(``repro.core.minors.tridiagonal_minor_bands``) solvable by the Sturm kernel.
+
+Static shapes throughout (masked full-size updates inside ``lax.fori_loop``),
+so the function jits once per ``n``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _householder_vector(x: jax.Array, k: jax.Array):
+    """Householder vector annihilating ``x[k+2:]`` (entries <= k are masked).
+
+    ``x`` is a full-length column; only indices ``>= k+1`` participate.
+    Returns ``(v, beta)`` with ``H = I - beta v v^T`` and ``v`` zero outside
+    the active range.  ``beta = 0`` (identity) when the tail is already zero.
+    """
+    n = x.shape[0]
+    active = jnp.arange(n) > k  # rows k+1 .. n-1
+    xa = jnp.where(active, x, 0.0)
+    head_idx = k + 1
+    x0 = xa[head_idx]
+    sigma = jnp.sum(jnp.where(jnp.arange(n) > head_idx, xa * xa, 0.0))
+    norm = jnp.sqrt(x0 * x0 + sigma)
+    # alpha = -sign(x0) * ||x_active|| avoids cancellation.
+    sign = jnp.where(x0 >= 0, 1.0, -1.0)
+    alpha = -sign * norm
+    v0 = x0 - alpha
+    v = jnp.where(jnp.arange(n) == head_idx, v0, xa)
+    v = jnp.where(active, v, 0.0)
+    vnorm2 = jnp.sum(v * v)
+    beta = jnp.where(vnorm2 > 0, 2.0 / jnp.maximum(vnorm2, 1e-300), 0.0)
+    # Degenerate tail (sigma == 0 and x0 == 0): identity reflection.
+    beta = jnp.where(norm > 0, beta, 0.0)
+    return v, beta
+
+
+def tridiagonalize(a: jax.Array, with_q: bool = True):
+    """Reduce symmetric ``a`` to tridiagonal form.
+
+    Returns ``(d, e, q)``: diagonal ``(n,)``, off-diagonal ``(n-1,)``, and the
+    accumulated orthogonal ``q`` (``q.T @ a @ q`` is tridiagonal); ``q`` is
+    ``None`` when ``with_q=False``.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+
+    def body(k, carry):
+        a_k, q_k = carry
+        v, beta = _householder_vector(a_k[:, k], k)
+        # Symmetric two-sided update: A <- H A H with H = I - beta v v^T.
+        p = beta * (a_k @ v)  # (n,)
+        kv = 0.5 * beta * jnp.dot(p, v)
+        w = p - kv * v
+        a_next = a_k - jnp.outer(v, w) - jnp.outer(w, v)
+        if with_q:
+            # Q <- Q H
+            qv = beta * (q_k @ v)
+            q_next = q_k - jnp.outer(qv, v)
+        else:
+            q_next = q_k
+        return a_next, q_next
+
+    q0 = jnp.eye(n, dtype=dtype) if with_q else jnp.zeros((1, 1), dtype)
+    a_fin, q_fin = jax.lax.fori_loop(0, max(n - 2, 0), body, (a, q0))
+    d = jnp.diagonal(a_fin)
+    e = jnp.diagonal(a_fin, offset=1)
+    return d, e, (q_fin if with_q else None)
+
+
+def tridiagonal_matrix(d: jax.Array, e: jax.Array) -> jax.Array:
+    """Dense ``tridiag(e, d, e)`` for testing."""
+    n = d.shape[0]
+    t = jnp.diag(d)
+    if n > 1:
+        t = t + jnp.diag(e, 1) + jnp.diag(e, -1)
+    return t

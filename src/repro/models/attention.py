@@ -1,0 +1,390 @@
+"""Attention mixers: GQA/MQA (RoPE, sliding window, softcap), MLA, cross-attn.
+
+All attention is *chunked* (online-softmax over KV chunks, statically
+unrolled) so no ``S x S`` score matrix is ever materialized — the lowered HLO
+contains no while-loops (a hard requirement of the roofline methodology, see
+EXPERIMENTS.md §Methodology) and fully-masked chunk pairs are skipped at
+trace time (real FLOP savings for sliding-window layers).
+
+Conventions:
+  x          (B, S, d)
+  q          (B, S, H, Dh);  k/v (B, S, Hkv, Dh)
+  cache      {"k": (B, Smax, Hkv, Dh), "v": ...} + scalar position carried by
+             the caller; decode is a single unchunked einsum over Smax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.params import ParamDecl, ParamTable
+from repro.sharding import hints
+
+
+def _sequence_parallel_qkv(cfg, q, k, v):
+    """Context-parallel fallback for head counts indivisible by the model
+    axis (whisper 20H, starcoder2 36H, gemma2 8H on a 16-way axis).
+
+    Without this, head-sharding fails divisibility and GSPMD replicates the
+    whole attention computation per model shard (measured 5-12x useful-flops
+    inflation; EXPERIMENTS.md §Perf whisper iteration 1).  Sharding the query
+    sequence dimension instead divides score/output flops by the model size;
+    K/V stay sequence-sharded until the chunked loop gathers them (KV tensors
+    are the small GQA side).
+    """
+    if cfg.n_heads % hints.model_axis_size() == 0:
+        # Head sharding divides — but pin it explicitly: prefill writes the
+        # KV cache with *sequence*-sharded layout, and GSPMD propagates that
+        # backward into the attention K/V, turning every AV/score einsum
+        # into a partial-sum all-reduce (measured: ~1.1e11 B/device/layer on
+        # deepseek prefill — the whole collective-bound verdict; §Perf D3).
+        if cfg.n_kv_heads % hints.model_axis_size() == 0:
+            k = hints.constrain(k, "data", None, "model", None)
+            v = hints.constrain(v, "data", None, "model", None)
+        q = hints.constrain(q, "data", None, "model", None)
+        return q, k, v
+    q = hints.constrain(q, "data", "model", None, None)
+    k = hints.constrain(k, "data", "model", None, None)
+    v = hints.constrain(v, "data", "model", None, None)
+    return q, k, v
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: int | None = None  # sliding window (gemma2 local layers)
+    softcap: float | None = None  # attn logit softcap (gemma2)
+    use_rope: bool = True
+    chunk_q: int = 1024
+    chunk_k: int = 1024
+
+    @property
+    def rep(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_param_table(cfg: AttnConfig) -> ParamTable:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDecl((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((d, hk, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d, hk, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((h, dh, d), ("heads", "head_dim", "embed"), init="output",
+                        fan_in=h * dh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core
+# ---------------------------------------------------------------------------
+
+
+def _chunk_skippable(cfg, q_lo, q_hi, k_lo, k_hi) -> bool:
+    """Static: is the (q-chunk, k-chunk) pair fully masked?"""
+    if cfg.causal and k_lo > q_hi:
+        return True
+    if cfg.window is not None and k_hi <= q_lo - cfg.window:
+        return True
+    return False
+
+
+def _fit_chunk(s: int, c: int) -> int:
+    """Largest divisor of ``s`` that is <= c (chunking odd sequence lengths
+    like whisper's 1500 encoder frames)."""
+    c = min(c, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(
+    cfg: AttnConfig,
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,  # (B, Sk, Hkv, Dh)
+    q_start: int = 0,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv, rep = cfg.n_kv_heads, cfg.rep
+    scale = 1.0 / math.sqrt(dh)
+    cq = _fit_chunk(sq, cfg.chunk_q)
+    ck = _fit_chunk(sk, cfg.chunk_k)
+
+    qr = q.reshape(b, sq, hkv, rep, dh)
+    out_chunks = []
+    for qi in range(sq // cq):
+        q_lo, q_hi = q_start + qi * cq, q_start + (qi + 1) * cq - 1
+        qc = qr[:, qi * cq : (qi + 1) * cq]  # (B,Cq,hkv,rep,Dh)
+        m = jnp.full((b, hkv, rep, cq), common.NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, rep, cq), jnp.float32)
+        acc = jnp.zeros((b, hkv, rep, cq, dh), jnp.float32)
+        q_pos = q_start + qi * cq + jnp.arange(cq)
+        for ki in range(sk // ck):
+            k_lo, k_hi = ki * ck, (ki + 1) * ck - 1
+            if _chunk_skippable(cfg, q_lo, q_hi, k_lo, k_hi):
+                continue
+            kc = k[:, ki * ck : (ki + 1) * ck]
+            vc = v[:, ki * ck : (ki + 1) * ck]
+            s = jnp.einsum(
+                "bqgrd,bkgd->bgrqk", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            if cfg.softcap is not None:
+                s = common.softcap(s, cfg.softcap)
+            k_pos = ki * ck + jnp.arange(ck)
+            if cfg.causal:
+                mask = common.causal_window_mask(q_pos, k_pos, cfg.window)
+            elif cfg.window is not None:
+                mask = jnp.abs(k_pos[None, :] - q_pos[:, None]) < cfg.window
+            else:
+                mask = None
+            if mask is not None:
+                s = jnp.where(mask[None, None, None], s, common.NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            m = m_new
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out_chunks.append(
+            out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, dh).astype(q.dtype)
+        )
+    return jnp.concatenate(out_chunks, axis=1) if len(out_chunks) > 1 else out_chunks[0]
+
+
+def decode_attention(
+    cfg: AttnConfig,
+    q: jax.Array,  # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, Smax, Hkv, Dh)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32 — current position (same for the batch)
+) -> jax.Array:
+    b, _, h, dh = q.shape
+    smax = k_cache.shape[1]
+    hkv, rep = cfg.n_kv_heads, cfg.rep
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(b, hkv, rep, dh)
+    s = jnp.einsum(
+        "bgrd,bkgd->bgrk", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if cfg.softcap is not None:
+        s = common.softcap(s, cfg.softcap)
+    k_pos = jnp.arange(smax)
+    valid = k_pos <= pos
+    if cfg.window is not None:
+        valid = jnp.logical_and(valid, k_pos > pos - cfg.window)
+    s = jnp.where(valid[None, None, None], s, common.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention block mixer
+# ---------------------------------------------------------------------------
+
+
+def self_attention(cfg: AttnConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Training / prefill. Returns (out, kv) so callers may fill a cache."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.use_rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = _sequence_parallel_qkv(cfg, q, k, v)
+    out = chunked_attention(cfg, q, k, v)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
+
+
+def self_attention_decode(
+    cfg: AttnConfig, p: dict, x: jax.Array, cache: dict, pos: jax.Array
+):
+    """Single-token decode; cache entries updated at ``pos``."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.use_rope:
+        posb = jnp.full((x.shape[0], 1), pos)
+        q = common.apply_rope(q, posb, cfg.rope_theta)
+        k = common.apply_rope(k, posb, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    out = decode_attention(cfg, q, k_cache, v_cache, pos)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), {"k": k_cache, "v": v_cache}
+
+
+def attn_cache_spec(cfg: AttnConfig, batch: int, smax: int, dtype):
+    shp = (batch, smax, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype), "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder, vision-LM image layers)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(cfg: AttnConfig, p: dict, x: jax.Array, kv_src: jax.Array):
+    """kv_src: (B, Se, d) encoder/vision states. Bidirectional over kv_src."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_src, p["wv"])
+    xcfg = dataclasses.replace(cfg, causal=False, window=None, use_rope=False)
+    se = k.shape[1]
+    ck = se if se < xcfg.chunk_k else xcfg.chunk_k
+    while se % ck:
+        ck -= 1
+    xcfg = dataclasses.replace(xcfg, chunk_k=ck, chunk_q=min(xcfg.chunk_q, x.shape[1]))
+    out = chunked_attention(xcfg, q, k, v)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
+
+
+def cross_attention_cached(cfg: AttnConfig, p: dict, x: jax.Array, cache: dict):
+    """Decode-side cross-attn against precomputed (k, v)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    b, _, h, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(b, cfg.n_kv_heads, cfg.rep, dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qr, cache["k"],
+                   preferred_element_type=jnp.float32) * scale
+    pbs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", pbs.astype(cache["v"].dtype), cache["v"],
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, dh).astype(x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+    chunk_q: int = 1024
+    chunk_k: int = 1024
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_param_table(cfg: MLAConfig) -> ParamTable:
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "wdq": ParamDecl((d, cfg.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": ParamDecl((cfg.q_lora_rank,), ("q_lora",), init="zeros"),
+        "wuq": ParamDecl((cfg.q_lora_rank, h, cfg.qk_dim),
+                         ("q_lora", "heads", "head_dim")),
+        "wdkv": ParamDecl((d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                          ("embed", "kv_lora")),
+        "kv_norm": ParamDecl((cfg.kv_lora_rank,), ("kv_lora",), init="zeros"),
+        "wuk": ParamDecl((cfg.kv_lora_rank, h, cfg.qk_nope_dim),
+                         ("kv_lora", "heads", "head_dim")),
+        "wuv": ParamDecl((cfg.kv_lora_rank, h, cfg.v_dim),
+                         ("kv_lora", "heads", "head_dim")),
+        "wo": ParamDecl((h, cfg.v_dim, d), ("heads", "head_dim", "embed"),
+                        init="output", fan_in=h * cfg.v_dim),
+    }
+
+
+def _mla_q(cfg: MLAConfig, p: dict, x: jax.Array, positions: jax.Array):
+    ql = common.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", ql, p["wuq"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = common.apply_rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: MLAConfig, p: dict, x: jax.Array, positions: jax.Array):
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    latent = common.rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = common.apply_rope(
+        dkv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]  # (B, S, dr) — single shared rope key
+    return latent, k_rope
+
+
+def mla_attention(cfg: MLAConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Prefill/train: materialize per-head K/V from the latent, chunked."""
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", latent, p["wuk"])
+    v = jnp.einsum("bsr,rhe->bshe", latent, p["wuv"])
+    h = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_rope.shape[:2], h, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    acfg = AttnConfig(
+        d_model=cfg.d_model, n_heads=h, n_kv_heads=h, head_dim=cfg.qk_dim,
+        use_rope=False, chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+    )
+    # Pin attention-time sharding to heads: the latent cache output is
+    # sequence-sharded and would otherwise propagate into these K/V (§Perf D3).
+    q, k, v = _sequence_parallel_qkv(acfg, q, k, v)
+    # v_dim != qk_dim: pad V to qk_dim for the shared core, then slice.
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, cfg.qk_dim - cfg.v_dim)))
+    out = chunked_attention(acfg, q, k, v_p)[..., : cfg.v_dim]
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, (latent, k_rope)
+
+
+def mla_attention_decode(cfg: MLAConfig, p: dict, x: jax.Array, cache: dict,
+                         pos: jax.Array):
+    """Absorbed decode: scores and values live in the latent space — the KV
+    cache is ``(latent, k_rope)`` only (MLA's memory win)."""
+    b = x.shape[0]
+    posb = jnp.full((b, 1), pos)
+    q_nope, q_rope = _mla_q(cfg, p, x, posb)  # (B,1,H,*)
+    latent_new, k_rope_new = _mla_latent(cfg, p, x, posb)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    # Absorb W_uk into the query: q_abs (B,H,r)
+    q_abs = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], p["wuk"])
+    s = jnp.einsum("bhr,bkr->bhk", q_abs, latent, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhe,bke->bhk", q_rope[:, 0], k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.qk_dim)
+    k_posn = jnp.arange(latent.shape[1])
+    s = jnp.where((k_posn <= pos)[None, None], s, common.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", pr.astype(latent.dtype), latent,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhr,rhe->bhe", o_lat, p["wuv"])
+    y = jnp.einsum("bhe,hed->bd", out, p["wo"])[:, None]
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_cache_spec(cfg: MLAConfig, batch: int, smax: int, dtype):
+    return {
+        "latent": jax.ShapeDtypeStruct((batch, smax, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, smax, cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,326 @@
+"""Block assembly: ModelConfig block-kind -> params, apply, decode, cache.
+
+A "block" is one residual unit.  Attention-family blocks are
+(pre-norm mixer + pre-norm FFN); recurrent blocks (mamba/mlstm/slstm) are
+self-contained.  All functions are pure; parameters are flat
+``{path: array}`` dicts scoped by the caller.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common, mlp, moe, ssm, xlstm
+from repro.models.params import ParamDecl, ParamTable, merge_tables, prefix_table
+
+
+# ---------------------------------------------------------------------------
+# Sub-config builders
+# ---------------------------------------------------------------------------
+
+
+def attn_config(cfg: ModelConfig, kind: str) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        causal=kind != "attn_bidir",
+        window=cfg.window if kind == "attn_local" else None,
+        softcap=cfg.attn_softcap,
+        use_rope=kind != "attn_bidir" or cfg.family != "audio",
+        chunk_q=cfg.attn_chunk,
+        chunk_k=cfg.attn_chunk,
+    )
+
+
+def mla_config(cfg: ModelConfig) -> attn.MLAConfig:
+    return attn.MLAConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank,
+        kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_dim=cfg.qk_nope_dim,
+        qk_rope_dim=cfg.qk_rope_dim,
+        v_dim=cfg.v_head_dim,
+        rope_theta=cfg.rope_theta,
+        chunk_q=cfg.attn_chunk,
+        chunk_k=cfg.attn_chunk,
+    )
+
+
+def mlp_config(cfg: ModelConfig) -> mlp.MLPConfig:
+    return mlp.MLPConfig(cfg.d_model, cfg.d_ff, cfg.activation)
+
+
+def moe_config(cfg: ModelConfig) -> moe.MoEConfig:
+    return moe.MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff or cfg.d_ff,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        n_shared=cfg.n_shared_experts,
+    )
+
+
+def mamba_config(cfg: ModelConfig) -> ssm.Mamba2Config:
+    return ssm.Mamba2Config(
+        d_model=cfg.d_model, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+    )
+
+
+def mlstm_config(cfg: ModelConfig) -> xlstm.MLSTMConfig:
+    return xlstm.MLSTMConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, chunk=cfg.ssm_chunk
+    )
+
+
+def slstm_config(cfg: ModelConfig) -> xlstm.SLSTMConfig:
+    return xlstm.SLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_kv_heads)
+
+
+def _norm(name: str, d: int) -> ParamTable:
+    return {name: ParamDecl((d,), ("embed",), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# Param tables per block kind
+# ---------------------------------------------------------------------------
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_bidir", "attn_moe", "attn_shared")
+
+
+def block_param_table(cfg: ModelConfig, kind: str) -> ParamTable:
+    d = cfg.d_model
+    if kind in _ATTN_KINDS:
+        t = merge_tables(
+            _norm("ln1", d),
+            prefix_table("attn", attn.attn_param_table(attn_config(cfg, kind))),
+            _norm("ln2", d),
+        )
+        if kind == "attn_moe":
+            return merge_tables(t, prefix_table("moe", moe.moe_param_table(moe_config(cfg))))
+        return merge_tables(t, prefix_table("mlp", mlp.mlp_param_table(mlp_config(cfg))))
+    if kind in ("mla", "mla_moe"):
+        t = merge_tables(
+            _norm("ln1", d),
+            prefix_table("attn", attn.mla_param_table(mla_config(cfg))),
+            _norm("ln2", d),
+        )
+        if kind == "mla_moe":
+            return merge_tables(t, prefix_table("moe", moe.moe_param_table(moe_config(cfg))))
+        return merge_tables(t, prefix_table("mlp", mlp.mlp_param_table(mlp_config(cfg))))
+    if kind == "cross":
+        return merge_tables(
+            _norm("ln1", d),
+            prefix_table("xattn", attn.attn_param_table(attn_config(cfg, kind))),
+            _norm("ln2", d),
+            prefix_table("mlp", mlp.mlp_param_table(mlp_config(cfg))),
+            {"xgate": ParamDecl((1,), (None,), init="zeros")},  # llama-vision gate
+        )
+    if kind == "dec_cross":
+        return merge_tables(
+            _norm("ln1", d),
+            prefix_table("attn", attn.attn_param_table(attn_config(cfg, kind))),
+            _norm("lnx", d),
+            prefix_table("xattn", attn.attn_param_table(attn_config(cfg, kind))),
+            _norm("ln2", d),
+            prefix_table("mlp", mlp.mlp_param_table(mlp_config(cfg))),
+        )
+    if kind == "mamba":
+        return merge_tables(
+            _norm("ln1", d),
+            prefix_table("mamba", ssm.mamba2_param_table(mamba_config(cfg))),
+        )
+    if kind == "mlstm":
+        return merge_tables(
+            _norm("ln1", d),
+            prefix_table("mlstm", xlstm.mlstm_param_table(mlstm_config(cfg))),
+        )
+    if kind == "slstm":
+        return prefix_table("slstm", xlstm.slstm_param_table(slstm_config(cfg)))
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _sub(p: dict, prefix: str) -> dict:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in p.items() if k.startswith(pre)}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, ctx: dict):
+    """Returns (x, aux_loss, kv) — kv is the prefill cache payload or None."""
+    eps = cfg.norm_eps
+    zero = jnp.zeros((), jnp.float32)
+    if kind in _ATTN_KINDS:
+        acfg = attn_config(cfg, kind)
+        h, kv = attn.self_attention(acfg, _sub(p, "attn"),
+                                    common.rms_norm(x, p["ln1"], eps),
+                                    ctx["positions"])
+        x = x + h
+        if kind == "attn_moe":
+            h, aux = moe.moe(moe_config(cfg), _sub(p, "moe"),
+                             common.rms_norm(x, p["ln2"], eps))
+            return x + h, aux, kv
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, zero, kv
+    if kind in ("mla", "mla_moe"):
+        mcfg = mla_config(cfg)
+        h, kv = attn.mla_attention(mcfg, _sub(p, "attn"),
+                                   common.rms_norm(x, p["ln1"], eps),
+                                   ctx["positions"])
+        x = x + h
+        if kind == "mla_moe":
+            h, aux = moe.moe(moe_config(cfg), _sub(p, "moe"),
+                             common.rms_norm(x, p["ln2"], eps))
+            return x + h, aux, kv
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, zero, kv
+    if kind == "cross":
+        acfg = attn_config(cfg, kind)
+        h, kv = attn.cross_attention(acfg, _sub(p, "xattn"),
+                                     common.rms_norm(x, p["ln1"], eps),
+                                     ctx["kv_src"])
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * h
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, zero, kv
+    if kind == "dec_cross":
+        acfg = attn_config(cfg, kind)
+        h, kv_self = attn.self_attention(acfg, _sub(p, "attn"),
+                                         common.rms_norm(x, p["ln1"], eps),
+                                         ctx["positions"])
+        x = x + h
+        h, kv_cross = attn.cross_attention(acfg, _sub(p, "xattn"),
+                                           common.rms_norm(x, p["lnx"], eps),
+                                           ctx["kv_src"])
+        x = x + h
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, zero, (kv_self, kv_cross)
+    if kind == "mamba":
+        h, state = ssm.mamba2(mamba_config(cfg), _sub(p, "mamba"),
+                              common.rms_norm(x, p["ln1"], eps))
+        return x + h, zero, state
+    if kind == "mlstm":
+        h, state = xlstm.mlstm(mlstm_config(cfg), _sub(p, "mlstm"),
+                               common.rms_norm(x, p["ln1"], eps))
+        return x + h, zero, state
+    if kind == "slstm":
+        y, carry = xlstm.slstm(slstm_config(cfg), _sub(p, "slstm"), x)
+        return y, zero, carry
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, cache update)
+# ---------------------------------------------------------------------------
+
+
+def decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                 cache, ctx: dict):
+    eps = cfg.norm_eps
+    pos = ctx["pos"]
+    if kind in _ATTN_KINDS:
+        acfg = attn_config(cfg, kind)
+        h, cache_new = attn.self_attention_decode(
+            acfg, _sub(p, "attn"), common.rms_norm(x, p["ln1"], eps), cache, pos)
+        x = x + h
+        if kind == "attn_moe":
+            h, _ = moe.moe(moe_config(cfg), _sub(p, "moe"),
+                           common.rms_norm(x, p["ln2"], eps))
+        else:
+            h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                        common.rms_norm(x, p["ln2"], eps))
+        return x + h, cache_new
+    if kind in ("mla", "mla_moe"):
+        mcfg = mla_config(cfg)
+        h, cache_new = attn.mla_attention_decode(
+            mcfg, _sub(p, "attn"), common.rms_norm(x, p["ln1"], eps), cache, pos)
+        x = x + h
+        if kind == "mla_moe":
+            h, _ = moe.moe(moe_config(cfg), _sub(p, "moe"),
+                           common.rms_norm(x, p["ln2"], eps))
+        else:
+            h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                        common.rms_norm(x, p["ln2"], eps))
+        return x + h, cache_new
+    if kind == "cross":
+        acfg = attn_config(cfg, kind)
+        h, cache_new = attn.cross_attention_cached(
+            acfg, _sub(p, "xattn"), common.rms_norm(x, p["ln1"], eps), cache)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * h
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, cache_new
+    if kind == "dec_cross":
+        acfg = attn_config(cfg, kind)
+        h, self_new = attn.self_attention_decode(
+            acfg, _sub(p, "attn"), common.rms_norm(x, p["ln1"], eps),
+            cache["self"], pos)
+        x = x + h
+        h, cross_new = attn.cross_attention_cached(
+            acfg, _sub(p, "xattn"), common.rms_norm(x, p["lnx"], eps),
+            cache["cross"])
+        x = x + h
+        h = mlp.mlp(mlp_config(cfg), _sub(p, "mlp"),
+                    common.rms_norm(x, p["ln2"], eps))
+        return x + h, {"self": self_new, "cross": cross_new}
+    if kind == "mamba":
+        h, cache_new = ssm.mamba2_decode(
+            mamba_config(cfg), _sub(p, "mamba"),
+            common.rms_norm(x, p["ln1"], eps), cache)
+        return x + h, cache_new
+    if kind == "mlstm":
+        h, cache_new = xlstm.mlstm_decode(
+            mlstm_config(cfg), _sub(p, "mlstm"),
+            common.rms_norm(x, p["ln1"], eps), cache)
+        return x + h, cache_new
+    if kind == "slstm":
+        y, cache_new = xlstm.slstm_decode(slstm_config(cfg), _sub(p, "slstm"),
+                                          x, cache)
+        return y, cache_new
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, smax: int, dtype):
+    if kind in _ATTN_KINDS:
+        return attn.attn_cache_spec(attn_config(cfg, kind), batch, smax, dtype)
+    if kind in ("mla", "mla_moe"):
+        return attn.mla_cache_spec(mla_config(cfg), batch, smax, dtype)
+    if kind == "cross":
+        acfg = attn_config(cfg, kind)
+        shp = (batch, cfg.img_seq, acfg.n_kv_heads, acfg.head_dim)
+        return {"k": jax.ShapeDtypeStruct(shp, dtype),
+                "v": jax.ShapeDtypeStruct(shp, dtype)}
+    if kind == "dec_cross":
+        acfg = attn_config(cfg, kind)
+        xshp = (batch, cfg.enc_seq, acfg.n_kv_heads, acfg.head_dim)
+        return {
+            "self": attn.attn_cache_spec(acfg, batch, smax, dtype),
+            "cross": {"k": jax.ShapeDtypeStruct(xshp, dtype),
+                      "v": jax.ShapeDtypeStruct(xshp, dtype)},
+        }
+    if kind == "mamba":
+        return ssm.mamba2_cache_spec(mamba_config(cfg), batch, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_cache_spec(mlstm_config(cfg), batch, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_cache_spec(slstm_config(cfg), batch, dtype)
+    raise ValueError(f"unknown block kind {kind!r}")

@@ -1,0 +1,306 @@
+"""Model assembly: embedding -> scanned block groups -> head.
+
+One assembly covers all ten assigned architectures; family differences enter
+through the block pattern (ModelConfig.pattern), the optional encoder stack
+(audio), and the cross-attention context (audio/vlm stubs).
+
+Layer groups are ``lax.scan``-ned over stacked parameters (compile time and
+HLO size are O(1) in depth); the roofline pipeline recovers true per-layer
+costs by L-extrapolation (EXPERIMENTS.md §Methodology).  Remat wraps each
+group body (activation checkpointing).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, common
+from repro.models.params import (
+    ParamDecl,
+    ParamTable,
+    abstract_params,
+    init_params,
+    logical_axes,
+    merge_tables,
+    num_params,
+    prefix_table,
+    stack_table,
+)
+
+
+def _enc_pattern(cfg: ModelConfig):
+    return ((cfg.n_enc_layers, ("attn_bidir",)),) if cfg.n_enc_layers else ()
+
+
+class LanguageModel:
+    """Functional model bound to a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameter table -----------------------------------------------------
+
+    def param_table(self) -> ParamTable:
+        cfg = self.cfg
+        t: ParamTable = {
+            "embed/tokens": ParamDecl((cfg.vocab_size, cfg.d_model),
+                                      ("vocab", "embed"), init="embed"),
+            "final_norm": ParamDecl((cfg.d_model,), ("embed",), init="zeros"),
+        }
+        if not cfg.tie_embeddings:
+            t["unembed"] = ParamDecl((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), init="output")
+        for gi, (repeat, kinds) in enumerate(cfg.pattern):
+            group: ParamTable = {}
+            for bi, kind in enumerate(kinds):
+                if kind in cfg.shared_blocks:
+                    continue
+                group = merge_tables(
+                    group,
+                    prefix_table(f"b{bi}:{kind}",
+                                 blocks.block_param_table(cfg, kind)),
+                )
+            t.update(prefix_table(f"dec/g{gi}", stack_table(group, repeat)))
+        for kind in cfg.shared_blocks:
+            t.update(prefix_table(f"shared/{kind}",
+                                  blocks.block_param_table(cfg, kind)))
+        for gi, (repeat, kinds) in enumerate(_enc_pattern(cfg)):
+            group = prefix_table("b0:attn_bidir",
+                                 blocks.block_param_table(cfg, "attn_bidir"))
+            t.update(prefix_table(f"enc/g{gi}", stack_table(group, repeat)))
+        if cfg.n_enc_layers:
+            t["enc_pos"] = ParamDecl((cfg.enc_seq, cfg.d_model),
+                                     (None, "embed"), init="embed")
+            t["enc_final_norm"] = ParamDecl((cfg.d_model,), ("embed",),
+                                            init="zeros")
+        return t
+
+    def init(self, rng, dtype=jnp.float32):
+        return init_params(self.param_table(), rng, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.param_table(), dtype)
+
+    def axes(self):
+        return logical_axes(self.param_table())
+
+    def n_params(self) -> int:
+        return num_params(self.param_table())
+
+    # -- group plumbing --------------------------------------------------------
+
+    def _group_params(self, params: dict, scope: str, gi: int, kinds) -> dict:
+        """Nested {bkey: {path: stacked array}} for scan."""
+        out: dict[str, dict[str, Any]] = {}
+        pre = f"{scope}/g{gi}/"
+        for k, v in params.items():
+            if not k.startswith(pre):
+                continue
+            rest = k[len(pre):]
+            bkey, ppath = rest.split("/", 1)
+            out.setdefault(bkey, {})[ppath] = v
+        return out
+
+    def _shared_params(self, params: dict, kind: str) -> dict:
+        pre = f"shared/{kind}/"
+        return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+    def _run_groups(self, params, x, ctx, pattern, scope, collect_kv=False):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        kv_all: list[Any] = []
+        for gi, (repeat, kinds) in enumerate(pattern):
+            gparams = self._group_params(params, scope, gi, kinds)
+            shared = {k: self._shared_params(params, k)
+                      for k in cfg.shared_blocks}
+
+            def body(carry, layer_params, _kinds=kinds, _shared=shared):
+                xx, aux = carry
+                kvs = {}
+                for bi, kind in enumerate(_kinds):
+                    p = (_shared[kind] if kind in cfg.shared_blocks
+                         else layer_params[f"b{bi}:{kind}"])
+                    xx, aux_b, kv = blocks.apply_block(cfg, kind, p, xx, ctx)
+                    aux = aux + aux_b
+                    if collect_kv:
+                        kvs[f"b{bi}:{kind}"] = kv
+                return (xx, aux), (kvs if collect_kv else None)
+
+            if cfg.remat:
+                policy = (jax.checkpoint_policies.checkpoint_dots
+                          if cfg.remat_policy == "dots" else None)
+                body = jax.checkpoint(body, policy=policy)
+            (x, aux_total), kvs = jax.lax.scan(
+                body, (x, aux_total), gparams,
+                unroll=repeat if cfg.unroll_groups else 1)
+            kv_all.append(kvs)
+        return x, aux_total, kv_all
+
+    # -- embedding / head -------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed/tokens"], tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        return x
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = (params["embed/tokens"].T if cfg.tie_embeddings
+             else params["unembed"])
+        logits = jnp.einsum("...d,dv->...v", x, w).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = common.softcap(logits, cfg.final_softcap)
+        return logits
+
+    def _encode(self, params, frames):
+        """Audio encoder over precomputed frame embeddings (frontend stub)."""
+        cfg = self.cfg
+        x = frames + params["enc_pos"][None, : frames.shape[1]].astype(frames.dtype)
+        pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                               frames.shape[:2])
+        ectx = {"positions": pos, "kv_src": None}
+        x, _, _ = self._run_groups(params, x, ectx, _enc_pattern(cfg), "enc")
+        return common.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _context(self, params, batch, seq_len):
+        cfg = self.cfg
+        pos = jnp.broadcast_to(jnp.arange(seq_len)[None],
+                               (batch["tokens"].shape[0], seq_len))
+        kv_src = None
+        if cfg.family == "audio":
+            kv_src = self._encode(params, batch["frames"])
+        elif cfg.family == "vlm":
+            kv_src = batch["images"]
+        return {"positions": pos, "kv_src": kv_src}
+
+    # -- training loss -----------------------------------------------------------
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = masked)."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = self._embed(params, tokens)
+        ctx = self._context(params, batch, tokens.shape[1])
+        x, aux, _ = self._run_groups(params, x, ctx, cfg.pattern, "dec")
+        logits = self._head(params, x)
+        mask = (labels >= 0).astype(jnp.float32)
+        labels_safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+        ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- serving -----------------------------------------------------------------
+
+    def cache_spec(self, batch: int, smax: int, dtype):
+        cfg = self.cfg
+        spec = []
+        for repeat, kinds in cfg.pattern:
+            group = {}
+            for bi, kind in enumerate(kinds):
+                one = blocks.block_cache_spec(cfg, kind, batch, smax, dtype)
+                group[f"b{bi}:{kind}"] = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((repeat, *s.shape), s.dtype),
+                    one,
+                )
+            spec.append(group)
+        return spec
+
+    def init_cache(self, batch: int, smax: int, dtype):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_spec(batch, smax, dtype))
+
+    def decode_step(self, params, caches, token, pos, kv_ctx=None):
+        """token: (B,) int32; pos: scalar int32. Returns (logits (B,V), caches).
+
+        ``caches`` layout == ``cache_spec``; cross-attention caches inside it
+        are static (written by prefill).
+        """
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+        ctx = {"pos": pos, "kv_src": kv_ctx}
+        new_caches = []
+        for gi, (repeat, kinds) in enumerate(cfg.pattern):
+            gparams = self._group_params(params, "dec", gi, kinds)
+            shared = {k: self._shared_params(params, k)
+                      for k in cfg.shared_blocks}
+
+            def body(xx, scanned, _kinds=kinds, _shared=shared):
+                layer_params, layer_cache = scanned
+                new_cache = {}
+                for bi, kind in enumerate(_kinds):
+                    bkey = f"b{bi}:{kind}"
+                    p = (_shared[kind] if kind in cfg.shared_blocks
+                         else layer_params[bkey])
+                    xx, c = blocks.decode_block(cfg, kind, p, xx,
+                                                layer_cache[bkey], ctx)
+                    new_cache[bkey] = c
+                return xx, new_cache
+
+            x, nc = jax.lax.scan(body, x, (gparams, caches[gi]),
+                                 unroll=repeat if cfg.unroll_groups else 1)
+            new_caches.append(nc)
+        logits = self._head(params, x[:, 0])
+        return logits, new_caches
+
+    def prefill(self, params, batch, smax, cache_dtype=None):
+        """Run the full prompt, return (last-token logits, filled caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        dtype = cache_dtype or params["embed/tokens"].dtype
+        x = self._embed(params, tokens)
+        ctx = self._context(params, batch, s)
+        x, _, kv_all = self._run_groups(params, x, ctx, cfg.pattern, "dec",
+                                        collect_kv=True)
+        logits = self._head(params, x[:, -1])
+        caches = self.init_cache(b, smax, dtype)
+        for gi, (repeat, kinds) in enumerate(cfg.pattern):
+            for bi, kind in enumerate(kinds):
+                bkey = f"b{bi}:{kind}"
+                payload = kv_all[gi][bkey]
+                caches[gi][bkey] = _payload_to_cache(
+                    cfg, kind, payload, caches[gi][bkey], s)
+        return logits, caches
+
+
+def _scatter_seq(cache_arr, kv, s):
+    """kv: (L, B, S, ...) -> write into cache (L, B, Smax, ...)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, kv.astype(cache_arr.dtype), 0, axis=2)
+
+
+def _payload_to_cache(cfg, kind, payload, cache, s):
+    if kind in blocks._ATTN_KINDS:
+        k, v = payload
+        return {"k": _scatter_seq(cache["k"], k, s),
+                "v": _scatter_seq(cache["v"], v, s)}
+    if kind in ("mla", "mla_moe"):
+        latent, k_rope = payload
+        return {"latent": _scatter_seq(cache["latent"], latent, s),
+                "k_rope": _scatter_seq(cache["k_rope"], k_rope, s)}
+    if kind == "cross":
+        k, v = payload
+        return {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    if kind == "dec_cross":
+        (k, v), (kx, vx) = payload
+        return {
+            "self": {"k": _scatter_seq(cache["self"]["k"], k, s),
+                     "v": _scatter_seq(cache["self"]["v"], v, s)},
+            "cross": {"k": kx.astype(cache["cross"]["k"].dtype),
+                      "v": vx.astype(cache["cross"]["v"].dtype)},
+        }
+    if kind in ("mamba", "mlstm"):
+        return jax.tree.map(lambda c, p: p.astype(c.dtype), cache, payload)
+    if kind == "slstm":
+        return {"carry": [p.astype(c.dtype) for c, p in
+                          zip(cache["carry"], list(payload))]}
+    raise ValueError(kind)

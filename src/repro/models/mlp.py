@@ -1,0 +1,39 @@
+"""Dense MLP blocks (SwiGLU / GeLU)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.params import ParamDecl, ParamTable
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"  # swiglu | gelu | gelu_tanh
+
+
+def mlp_param_table(cfg: MLPConfig) -> ParamTable:
+    d, f = cfg.d_model, cfg.d_ff
+    t: ParamTable = {
+        "w_up": ParamDecl((d, f), ("embed", "mlp")),
+        "w_down": ParamDecl((f, d), ("mlp", "embed"), init="output"),
+    }
+    if cfg.activation == "swiglu":
+        t["w_gate"] = ParamDecl((d, f), ("embed", "mlp"))
+    return t
+
+
+def mlp(cfg: MLPConfig, p: dict, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if cfg.activation == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = common.swiglu(gate, up)
+    else:
+        h = common.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

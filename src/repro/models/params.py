@@ -1,0 +1,103 @@
+"""Declarative parameter tables with logical sharding axes.
+
+Every model declares its parameters once as a flat ``{path: ParamDecl}``
+table; the same table drives
+
+* ``init_params``      — RNG materialization (training),
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (dry-run, no alloc),
+* ``logical_axes``     — per-param logical axis names, mapped to mesh axes by
+  ``repro.sharding.rules`` (T5X-style logical axis rules).
+
+Stacked (scanned) layer groups prepend a ``layers`` axis to the declared
+shape; the ``layers`` logical axis always maps to ``None`` (it is the scan
+dimension, never sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | output
+    fan_in: int | None = None  # overrides shape-derived fan-in for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTable = dict[str, ParamDecl]
+
+
+def stack_table(table: ParamTable, count: int) -> ParamTable:
+    """Prepend a scanned ``layers`` axis of size ``count`` to every decl."""
+    return {
+        path: ParamDecl(
+            shape=(count, *decl.shape),
+            axes=("layers", *decl.axes),
+            init=decl.init,
+            fan_in=decl.fan_in,
+        )
+        for path, decl in table.items()
+    }
+
+
+def prefix_table(prefix: str, table: ParamTable) -> ParamTable:
+    return {f"{prefix}/{path}": decl for path, decl in table.items()}
+
+
+def merge_tables(*tables: ParamTable) -> ParamTable:
+    out: ParamTable = {}
+    for t in tables:
+        for k, v in t.items():
+            if k in out:
+                raise ValueError(f"duplicate param path {k!r}")
+            out[k] = v
+    return out
+
+
+def _init_one(decl: ParamDecl, key: jax.Array, dtype) -> jax.Array:
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    if decl.init == "embed":
+        return jax.random.normal(key, decl.shape, dtype)
+    # fan-in scaled normal (truncated variance scaling is overkill here)
+    if decl.fan_in is not None:
+        fan_in = decl.fan_in
+    else:
+        # contracting dim: last-but-one for matrices, last for vectors
+        fan_in = decl.shape[-2] if len(decl.shape) >= 2 else decl.shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    if decl.init == "output":
+        std = std * 0.5
+    return (jax.random.normal(key, decl.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(table: ParamTable, rng: jax.Array, dtype=jnp.float32):
+    paths = sorted(table)
+    keys = jax.random.split(rng, len(paths))
+    return {p: _init_one(table[p], k, dtype) for p, k in zip(paths, keys)}
+
+
+def abstract_params(table: ParamTable, dtype=jnp.float32):
+    return {
+        p: jax.ShapeDtypeStruct(d.shape, dtype) for p, d in sorted(table.items())
+    }
+
+
+def logical_axes(table: ParamTable) -> dict[str, tuple[str | None, ...]]:
+    return {p: d.axes for p, d in table.items()}
+
+
+def num_params(table: ParamTable) -> int:
+    return sum(math.prod(d.shape) for d in table.values())

@@ -1,0 +1,283 @@
+"""State-space / gated-linear-attention mixers: shared chunked core + Mamba2.
+
+The core computes, per head, the gated linear-attention recurrence
+
+    S_t = exp(log_decay_t) * S_{t-1} + exp(gate_t) * v_t k_t^T
+    n_t = exp(log_decay_t) * n_{t-1} + exp(gate_t) * k_t          (optional)
+    y_t = q_t @ S_t   [ / max(|q_t . n_t|, 1) ]
+
+in *chunked* form: quadratic (matmul-rich, MXU-friendly) within chunks of
+length ``Lc``, and a **log-depth ``associative_scan``** across chunks — the
+lowered HLO contains no while-loops (roofline methodology requirement) and
+wall-clock depth is O(log(S/Lc)), the TPU-native substitute for sequential
+recurrence.
+
+Mamba2 (SSD) maps onto the core with q=C, k=B, v=dt*x, log_decay=dt*A and no
+normalizer; mLSTM (repro.models.xlstm) adds sigmoid-forget decays, clamped
+exponential input gates and the normalizer state.  Numerical boundedness:
+log_decay <= 0 always (decays), gates are clamped, so no cross-chunk
+stabilizer is needed (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.params import ParamDecl, ParamTable
+
+# ---------------------------------------------------------------------------
+# Shared chunked core
+# ---------------------------------------------------------------------------
+
+
+def _assoc_combine(a, b):
+    """(decay, S, n) segments: b follows a."""
+    da, sa, na = a
+    db, sb, nb = b
+    return (da * db, db[..., None, None] * sa + sb, db[..., None] * na + nb)
+
+
+def chunked_gla(
+    q: jax.Array,  # (B, S, H, Dk)
+    k: jax.Array,  # (B, S, H, Dk)
+    v: jax.Array,  # (B, S, H, Dv)
+    log_decay: jax.Array,  # (B, S, H), <= 0
+    gate: jax.Array,  # (B, S, H), log input weights
+    chunk: int = 128,
+    normalize: bool = False,
+    state: tuple | None = None,  # (S0 (B,H,Dk,Dv), n0 (B,H,Dk))
+):
+    """Returns (y (B,S,H,Dv), (S_final, n_final))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    lc = min(chunk, s)
+    while s % lc:
+        lc //= 2
+    nc = s // lc
+
+    def cshape(x):
+        return x.reshape(b, nc, lc, *x.shape[2:])
+
+    qc, kc, vc = cshape(q), cshape(k), cshape(v)
+    ldc, gc = cshape(log_decay), cshape(gate)
+    lcum = jnp.cumsum(ldc.astype(jnp.float32), axis=2)  # (B,nc,Lc,H) inclusive
+    l_last = lcum[:, :, -1]  # (B,nc,H)
+
+    # ---- within-chunk quadratic part -------------------------------------
+    # W[t, t'] = exp(L_t - L_{t'} + g_{t'}) for t' <= t
+    wexp = lcum[:, :, :, None, :] - lcum[:, :, None, :, :] + gc[:, :, None, :, :]
+    t_idx = jnp.arange(lc)
+    causal = (t_idx[:, None] >= t_idx[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, jnp.exp(wexp), 0.0)  # (B,nc,Lc,Lc',H)
+    sqk = jnp.einsum("bclhd,bcmhd->bclmh", qc, kc,
+                     preferred_element_type=jnp.float32)
+    ws = w * sqk
+    y_intra = jnp.einsum("bclmh,bcmhv->bclhv", ws.astype(v.dtype), vc,
+                         preferred_element_type=jnp.float32)
+    if normalize:
+        n_intra = jnp.einsum("bclmh,bcmhd->bclhd", w.astype(k.dtype), kc,
+                             preferred_element_type=jnp.float32)
+
+    # ---- chunk summaries ---------------------------------------------------
+    w_end = jnp.exp(l_last[:, :, None] - lcum + gc)  # (B,nc,Lc,H)
+    s_chunk = jnp.einsum("bclh,bclhd,bclhv->bchdv", w_end.astype(k.dtype), kc, vc,
+                         preferred_element_type=jnp.float32)
+    n_chunk = jnp.einsum("bclh,bclhd->bchd", w_end.astype(k.dtype), kc,
+                         preferred_element_type=jnp.float32)
+    decay_chunk = jnp.exp(l_last)  # (B,nc,H)
+
+    # ---- inter-chunk associative scan (log-depth, no while loop) ----------
+    dec_i, s_i, n_i = jax.lax.associative_scan(
+        _assoc_combine, (decay_chunk, s_chunk, n_chunk), axis=1
+    )
+    if state is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        s0, n0 = state
+        s0 = s0.astype(jnp.float32)
+        n0 = n0.astype(jnp.float32)
+    # exclusive prefix: state seen by chunk c = dec_i[c-1]*s0 + s_i[c-1]
+    dec_prev = jnp.concatenate([jnp.ones((b, 1, h), jnp.float32), dec_i[:, :-1]],
+                               axis=1)
+    s_prev = jnp.concatenate([jnp.zeros_like(s_i[:, :1]), s_i[:, :-1]], axis=1)
+    s_prev = s_prev + dec_prev[..., None, None] * s0[:, None]
+    n_prev = jnp.concatenate([jnp.zeros_like(n_i[:, :1]), n_i[:, :-1]], axis=1)
+    n_prev = n_prev + dec_prev[..., None] * n0[:, None]
+
+    # ---- inter-chunk contribution ------------------------------------------
+    elc = jnp.exp(lcum)  # (B,nc,Lc,H)
+    y_inter = jnp.einsum("bclh,bclhd,bchdv->bclhv", elc.astype(q.dtype), qc,
+                         s_prev.astype(q.dtype), preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).astype(jnp.float32)
+
+    if normalize:
+        n_t = n_intra + elc[..., None] * n_prev[:, :, None].astype(jnp.float32)
+        denom = jnp.abs(jnp.einsum("bclhd,bclhd->bclh", qc.astype(jnp.float32),
+                                   n_t))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+
+    s_fin = dec_i[:, -1][..., None, None] * s0 + s_i[:, -1]
+    n_fin = dec_i[:, -1][..., None] * n0 + n_i[:, -1]
+    return y.reshape(b, s, h, dv).astype(v.dtype), (s_fin, n_fin)
+
+
+def gla_decode_step(q, k, v, log_decay, gate, state, normalize: bool = False):
+    """One-token recurrent update. q/k/v: (B,H,D*); state (S, n)."""
+    s_st, n_st = state
+    d = jnp.exp(log_decay.astype(jnp.float32))  # (B,H)
+    g = jnp.exp(gate.astype(jnp.float32))
+    s_new = d[..., None, None] * s_st + g[..., None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", k, v
+    ).astype(jnp.float32)
+    n_new = d[..., None] * n_st + g[..., None] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), s_new)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y.astype(v.dtype), (s_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width 4), static shifts — no while loops
+# ---------------------------------------------------------------------------
+
+
+def causal_conv4(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (C, 4); returns silu(conv(x))."""
+    acc = x * w[None, None, :, 3]
+    for i in range(1, 4):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + shifted * w[None, None, :, 3 - i]
+    return jax.nn.silu(acc + b[None, None])
+
+
+def causal_conv4_step(x_t: jax.Array, conv_state: jax.Array, w, b):
+    """x_t: (B, C); conv_state: (B, 3, C) last 3 inputs. Returns (y, state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,4,C)
+    y = jnp.einsum("bkc,ck->bc", window, w) + b[None]
+    return jax.nn.silu(y), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_param_table(cfg: Mamba2Config) -> ParamTable:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "w_z": ParamDecl((d, di), ("embed", "inner")),
+        "w_x": ParamDecl((d, di), ("embed", "inner")),
+        "w_b": ParamDecl((d, n), ("embed", "state")),
+        "w_c": ParamDecl((d, n), ("embed", "state")),
+        "w_dt": ParamDecl((d, h), ("embed", "heads")),
+        "dt_bias": ParamDecl((h,), ("heads",), init="zeros"),
+        "a_log": ParamDecl((h,), ("heads",), init="zeros"),
+        "d_skip": ParamDecl((h,), ("heads",), init="ones"),
+        "conv_x_w": ParamDecl((di, 4), ("inner", None)),
+        "conv_x_b": ParamDecl((di,), ("inner",), init="zeros"),
+        "conv_b_w": ParamDecl((n, 4), ("state", None)),
+        "conv_b_b": ParamDecl((n,), ("state",), init="zeros"),
+        "conv_c_w": ParamDecl((n, 4), ("state", None)),
+        "conv_c_b": ParamDecl((n,), ("state",), init="zeros"),
+        "norm": ParamDecl((di,), ("inner",), init="zeros"),
+        "w_out": ParamDecl((di, d), ("inner", "embed"), init="output"),
+    }
+
+
+def _mamba2_inputs(cfg: Mamba2Config, p: dict, x: jax.Array):
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    bb = jnp.einsum("bsd,dn->bsn", x, p["w_b"])
+    cc = jnp.einsum("bsd,dn->bsn", x, p["w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    return z, xi, bb, cc, dt
+
+
+def mamba2(cfg: Mamba2Config, p: dict, x: jax.Array):
+    """Training/prefill. Returns (y, decode-ready cache payload)."""
+    b, s, _ = x.shape
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z, xi, bb, cc, dt = _mamba2_inputs(cfg, p, x)
+    xi_raw, bb_raw, cc_raw = xi, bb, cc  # pre-conv inputs (decode conv windows)
+    xi = causal_conv4(xi, p["conv_x_w"], p["conv_x_b"])
+    bb = causal_conv4(bb, p["conv_b_w"], p["conv_b_b"])
+    cc = causal_conv4(cc, p["conv_c_w"], p["conv_c_b"])
+    xh = xi.reshape(b, s, h, pd)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (h,) < 0
+    log_decay = dt * a[None, None, :]  # (B,S,H) <= 0
+    qh = jnp.broadcast_to(cc[:, :, None], (b, s, h, n)).astype(x.dtype)
+    kh = jnp.broadcast_to(bb[:, :, None], (b, s, h, n)).astype(x.dtype)
+    vh = (xh * dt[..., None]).astype(x.dtype)
+    y, (s_fin, _) = chunked_gla(qh, kh, vh, log_decay, jnp.zeros_like(log_decay),
+                                chunk=cfg.chunk)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"])
+    cache = {"ssm": s_fin, "conv_x": xi_raw[:, -3:], "conv_b": bb_raw[:, -3:],
+             "conv_c": cc_raw[:, -3:]}
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), cache
+
+
+def mamba2_decode(cfg: Mamba2Config, p: dict, x: jax.Array, cache: dict):
+    """x: (B, 1, d). cache: {"ssm": (B,H,N,P), "conv_x": (B,3,di), ...}."""
+    b = x.shape[0]
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z, xi, bb, cc, dt = _mamba2_inputs(cfg, p, x)
+    xi1, conv_x = causal_conv4_step(xi[:, 0], cache["conv_x"], p["conv_x_w"],
+                                    p["conv_x_b"])
+    bb1, conv_b = causal_conv4_step(bb[:, 0], cache["conv_b"], p["conv_b_w"],
+                                    p["conv_b_b"])
+    cc1, conv_c = causal_conv4_step(cc[:, 0], cache["conv_c"], p["conv_c_w"],
+                                    p["conv_c_b"])
+    xh = xi1.reshape(b, h, pd)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]  # (B,H)
+    qh = jnp.broadcast_to(cc1[:, None], (b, h, n)).astype(x.dtype)
+    kh = jnp.broadcast_to(bb1[:, None], (b, h, n)).astype(x.dtype)
+    vh = (xh * dt1[..., None]).astype(x.dtype)
+    y, (s_new, _) = gla_decode_step(
+        qh, kh, vh, dt1 * a[None], jnp.zeros_like(dt1),
+        (cache["ssm"], jnp.zeros((b, h, n), jnp.float32)),
+    )
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"ssm": s_new, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}
+
+
+def mamba2_cache_spec(cfg: Mamba2Config, batch: int, dtype):
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, n, pd), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, 3, cfg.d_inner), dtype),
+        "conv_b": jax.ShapeDtypeStruct((batch, 3, n), dtype),
+        "conv_c": jax.ShapeDtypeStruct((batch, 3, n), dtype),
+    }

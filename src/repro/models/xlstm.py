@@ -1,0 +1,228 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked) and sLSTM (scalar memory).
+
+mLSTM rides the shared ``chunked_gla`` core (repro.models.ssm): sigmoid
+forget gates give log-decays <= 0, input gates are exponential with a softcap
+clamp (boundedness replaces the running-max stabilizer; DESIGN.md §7), and
+the normalizer state ``n`` implements ``h = C q / max(|n . q|, 1)``.
+
+sLSTM has true recurrence (gates read h_{t-1} through block-diagonal R), so it
+scans over time — the one deliberate while-loop in the model zoo; its FLOPs
+are corrected analytically in the roofline (EXPERIMENTS.md §Methodology).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.params import ParamDecl, ParamTable
+from repro.models.ssm import (
+    causal_conv4,
+    causal_conv4_step,
+    chunked_gla,
+    gla_decode_step,
+)
+
+GATE_CLAMP = 15.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    expand: int = 2
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_param_table(cfg: MLSTMConfig) -> ParamTable:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": ParamDecl((d, di), ("embed", "inner")),
+        "w_z": ParamDecl((d, di), ("embed", "inner")),
+        "conv_w": ParamDecl((di, 4), ("inner", None)),
+        "conv_b": ParamDecl((di,), ("inner",), init="zeros"),
+        "w_q": ParamDecl((di, di), ("inner", "inner2")),
+        "w_k": ParamDecl((di, di), ("inner", "inner2")),
+        "w_v": ParamDecl((di, di), ("inner", "inner2")),
+        "w_i": ParamDecl((di, h), ("inner", "heads")),
+        "w_f": ParamDecl((di, h), ("inner", "heads")),
+        "b_i": ParamDecl((h,), ("heads",), init="zeros"),
+        "b_f": ParamDecl((h,), ("heads",), init="ones"),
+        "norm": ParamDecl((di,), ("inner",), init="zeros"),
+        "w_down": ParamDecl((di, d), ("inner", "embed"), init="output"),
+    }
+
+
+def _mlstm_qkv_gates(cfg: MLSTMConfig, p: dict, x: jax.Array):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    c = causal_conv4(up, p["conv_w"], p["conv_b"])
+    q = jnp.einsum("bse,ef->bsf", c, p["w_q"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", c, p["w_k"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bse,ef->bsf", up, p["w_v"]).reshape(b, s, h, dh)
+    i_raw = jnp.einsum("bse,eh->bsh", up, p["w_i"]) + p["b_i"]
+    f_raw = jnp.einsum("bse,eh->bsh", up, p["w_f"]) + p["b_f"]
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    log_i = common.softcap(i_raw.astype(jnp.float32), GATE_CLAMP)
+    k = k / jnp.sqrt(jnp.asarray(dh, jnp.float32)).astype(k.dtype)
+    return q, k, v, log_f, log_i, z, up
+
+
+def mlstm(cfg: MLSTMConfig, p: dict, x: jax.Array):
+    b, s, _ = x.shape
+    q, k, v, log_f, log_i, z, up = _mlstm_qkv_gates(cfg, p, x)
+    y, state = chunked_gla(q, k, v, log_f, log_i, chunk=cfg.chunk,
+                           normalize=True)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = common.rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    cache = {"s": state[0], "n": state[1], "conv": up[:, -3:]}
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"]), cache
+
+
+def mlstm_decode(cfg: MLSTMConfig, p: dict, x: jax.Array, cache: dict):
+    b = x.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])[:, 0]
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])[:, 0]
+    c, conv_state = causal_conv4_step(up, cache["conv"], p["conv_w"], p["conv_b"])
+    q = (c @ p["w_q"]).reshape(b, h, dh)
+    k = (c @ p["w_k"]).reshape(b, h, dh) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    ).astype(x.dtype)
+    v = (up @ p["w_v"]).reshape(b, h, dh)
+    log_f = jax.nn.log_sigmoid((up @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+    log_i = common.softcap((up @ p["w_i"] + p["b_i"]).astype(jnp.float32),
+                           GATE_CLAMP)
+    y, state = gla_decode_step(q, k, v, log_f, log_i,
+                               (cache["s"], cache["n"]), normalize=True)
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = common.rms_norm(y, p["norm"]) * jax.nn.silu(z)[:, None]
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, {"s": state[0], "n": state[1], "conv": conv_state}
+
+
+def mlstm_cache_spec(cfg: MLSTMConfig, batch: int, dtype):
+    h, dh = cfg.n_heads, cfg.head_dim
+    return {
+        "s": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, cfg.d_inner), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+    ff_factor: float = 4.0 / 3.0
+
+
+def slstm_param_table(cfg: SLSTMConfig) -> ParamTable:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    dff = int(cfg.ff_factor * d)
+    t: ParamTable = {
+        "norm": ParamDecl((d,), ("embed",), init="zeros"),
+        "w_gates": ParamDecl((d, 4 * d), ("embed", "inner")),  # i,f,z,o
+        "r_gates": ParamDecl((h, dh, 4 * dh), ("heads", None, None)),  # blockdiag
+        "b_gates": ParamDecl((4 * d,), ("inner",), init="zeros"),
+        "gnorm": ParamDecl((d,), ("embed",), init="zeros"),
+        "ffn/w_gate": ParamDecl((d, dff), ("embed", "mlp")),
+        "ffn/w_up": ParamDecl((d, dff), ("embed", "mlp")),
+        "ffn/w_down": ParamDecl((dff, d), ("mlp", "embed"), init="output"),
+        "ffn_norm": ParamDecl((d,), ("embed",), init="zeros"),
+    }
+    return t
+
+
+def _slstm_cell(cfg: SLSTMConfig, p: dict, wx_t, carry):
+    """One step. wx_t: (B, 4d) precomputed input contributions."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    b = h_prev.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    hh = h_prev.reshape(b, nh, dh)
+    rx = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"]).reshape(b, 4 * cfg.d_model)
+    gates = (wx_t + rx + p["b_gates"]).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m_prev, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * (c_new / jnp.maximum(n_new, 1.0))
+    return (h_new, c_new, n_new, m_new), h_new.astype(wx_t.dtype)
+
+
+def slstm(cfg: SLSTMConfig, p: dict, x: jax.Array, carry=None):
+    """x: (B, S, d). The deliberate sequential scan (see module docstring)."""
+    b, s, d = x.shape
+    xn = common.rms_norm(x, p["norm"])
+    wx = jnp.einsum("bsd,de->bse", xn, p["w_gates"])  # (B,S,4d)
+    if carry is None:
+        carry = slstm_init_carry(cfg, b)
+    carry, hs = jax.lax.scan(
+        lambda c, w: _slstm_cell(cfg, p, w, c), carry, wx.transpose(1, 0, 2)
+    )
+    y = hs.transpose(1, 0, 2)  # (B,S,d)
+    y = x + common.rms_norm(y, p["gnorm"])
+    # post-FFN (xLSTM block structure)
+    yn = common.rms_norm(y, p["ffn_norm"])
+    ff = common.swiglu(
+        jnp.einsum("bsd,df->bsf", yn, p["ffn/w_gate"]),
+        jnp.einsum("bsd,df->bsf", yn, p["ffn/w_up"]),
+    )
+    y = y + jnp.einsum("bsf,fd->bsd", ff, p["ffn/w_down"])
+    return y, carry
+
+
+def slstm_init_carry(cfg: SLSTMConfig, batch: int):
+    d = cfg.d_model
+    return (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.full((batch, d), -1e30, jnp.float32),
+    )
+
+
+def slstm_decode(cfg: SLSTMConfig, p: dict, x: jax.Array, cache: dict):
+    y, carry = slstm(cfg, p, x, carry=tuple(cache["carry"]))
+    return y, {"carry": list(carry)}
+
+
+def slstm_cache_spec(cfg: SLSTMConfig, batch: int, dtype):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {"carry": [
+        jax.ShapeDtypeStruct((batch, d), f32),
+        jax.ShapeDtypeStruct((batch, d), f32),
+        jax.ShapeDtypeStruct((batch, d), f32),
+        jax.ShapeDtypeStruct((batch, d), f32),
+    ]}

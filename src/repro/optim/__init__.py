@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm  # noqa: F401
+from repro.optim.eigenpre import EigenPre, EigenPreState  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,77 @@
+"""AdamW with bf16-compressed first moment — pure JAX, optax-style API.
+
+Distributed-optimization tricks baked in:
+
+* optimizer state inherits parameter sharding (with FSDP rules this is
+  ZeRO-3: params, m, v all fully sharded);
+* the first moment is stored in bf16 (state compression — halves optimizer
+  HBM for free at these scales; v stays fp32 for rsqrt stability);
+* updates are computed in fp32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any  # bf16 pytree
+    v: Any  # fp32 pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compress_m: bool = True
+
+    def init(self, params) -> AdamWState:
+        m = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16 if self.compress_m else jnp.float32),
+            params,
+        )
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), m, v)
+
+    def update(self, grads, state: AdamWState, params, lr_scale=1.0):
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * clip
+            m32 = m.astype(jnp.float32)
+            m_new = self.b1 * m32 + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m_new / (1 - self.b1 ** count.astype(jnp.float32))
+            vhat = v_new / (1 - self.b2 ** count.astype(jnp.float32))
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (
+                (-self.lr * lr_scale * step).astype(p.dtype),
+                m_new.astype(m.dtype),
+                v_new,
+            )
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return new_params, AdamWState(count, m, v), {"grad_norm": gnorm}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (  # noqa: F401
+    CostVector,
+    Roofline,
+    active_params,
+    cost_vector,
+    extrapolate,
+    model_flops,
+    slstm_extra_flops,
+)
+from repro.roofline.hlo_collectives import collective_bytes  # noqa: F401

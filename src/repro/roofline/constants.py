@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_LINK_BW = 50e9  # B/s per link (the roofline formula uses one link/chip)
+HBM_PER_CHIP = 16e9  # bytes

@@ -1,0 +1,87 @@
+"""Collective-byte accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` does not expose collective traffic, so we parse
+the post-optimization HLO module.  Modern HLO printing omits operand types,
+so byte counts derive from the *output* shape on the LHS plus the op's
+semantics and the replica-group size G:
+
+    all-reduce / all-to-all / collective-permute : operand = output
+    all-gather                                   : operand = output / G
+    reduce-scatter                               : operand = output * G
+
+(the reported number is the spec's "operand size" per op).  Collectives
+inside ``while`` bodies are counted once — same convention as cost_analysis —
+and extrapolated over scan trip counts by the caller (EXPERIMENTS.md
+§Methodology).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <types> opcode(" — capture everything between '=' and the opcode.
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\("
+)
+_DONE_RE = re.compile(r"-done\(")
+# iota-style groups: replica_groups=[2,4]<=[8] -> 2 groups of 4
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# explicit groups: replica_groups={{0,1},{2,3}}
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        n = math.prod(int(d) for d in dims.split(",") if d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """{op_kind: operand_bytes_total} + {"total": sum} over the module."""
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or _DONE_RE.search(line):
+            continue
+        lhs_types, op = m.group(1), m.group(2)
+        out_bytes = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(lhs_types))
+        g = _group_size(line)
+        if op == "all-gather":
+            nbytes = out_bytes // g
+        elif op == "reduce-scatter":
+            nbytes = out_bytes * g
+        else:
+            nbytes = out_bytes
+        out[op] += nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)

@@ -1,0 +1,49 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+Checkpoints are mesh-independent (unsharded leaves), so elasticity is:
+pick the best (data, model) grid for the surviving device count, rebuild
+shardings from the same logical rules, and ``CheckpointManager.restore`` with
+the new shardings.  ``best_grid`` keeps the model axis no larger than
+required (TP degree is a *model* property; losing nodes shrinks data
+parallelism first).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import rules as rules_lib
+
+
+def best_grid(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid with model axis == requested TP degree.
+
+    Falls back to shrinking TP by powers of two if the device count cannot
+    sustain it (e.g. 12 survivors of a 16-TP job -> (3, 4) ... -> (12, 1)).
+    """
+    tp = model_parallel
+    while tp > 1 and n_devices % tp:
+        tp //= 2
+    return max(n_devices // tp, 1), tp
+
+
+def make_elastic_mesh(model_parallel: int, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    data, model = best_grid(len(devices), model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devices[: data * model])
+
+
+def reshard_state(manager, abstract_state, mesh, model, fsdp=None, step=None):
+    """Restore the latest checkpoint onto ``mesh`` (any size)."""
+    from repro.train import steps as steps_lib
+
+    if fsdp is None:
+        fsdp = rules_lib.fsdp_recommended(model.n_params(), mesh)
+    rules = rules_lib.make_rules(mesh, fsdp=fsdp)
+    specs = steps_lib.state_pspecs(model, rules)
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    return manager.restore(abstract_state, step=step, shardings=shardings)

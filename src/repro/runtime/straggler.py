@@ -1,0 +1,51 @@
+"""Straggler detection & mitigation hooks.
+
+On a real fleet the SPMD step is a barrier: one slow host drags the world.
+The watchdog keeps a rolling step-time distribution; a step slower than
+``threshold x median`` flags a straggler event.  Mitigations wired here:
+
+* log + counter (always) — feeds the fleet scheduler's drain decision;
+* ``on_straggler`` callback — production deployments attach host-swap /
+  re-mesh logic (see repro.runtime.elastic);
+* optional deadline — step exceeding a hard deadline raises, which the
+  Supervisor converts into checkpoint-restore on a healthy mesh.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    window: int = 50
+    threshold: float = 2.0
+    deadline_s: float | None = None
+    on_straggler: Callable | None = None
+
+    def __post_init__(self):
+        self._times = collections.deque(maxlen=self.window)
+        self.events = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if flagged as straggler."""
+        flagged = False
+        if len(self._times) >= 10:
+            med = statistics.median(self._times)
+            if dt > self.threshold * med:
+                self.events += 1
+                flagged = True
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+        if self.deadline_s is not None and dt > self.deadline_s:
+            raise RuntimeError(
+                f"step {step} exceeded deadline {self.deadline_s}s ({dt:.1f}s)")
+        self._times.append(dt)
+        return flagged
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._times) if self._times else 0.0

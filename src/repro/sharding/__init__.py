@@ -1,0 +1,11 @@
+from repro.sharding.rules import (  # noqa: F401
+    FSDP_RULES,
+    TP_RULES,
+    ShardingRules,
+    batch_spec,
+    cache_spec,
+    data_axes,
+    fsdp_recommended,
+    make_rules,
+    mesh_axis_size,
+)

@@ -1,0 +1,61 @@
+"""Activation-sharding hints for model internals.
+
+Model code (e.g. the MoE dispatch path) sometimes needs explicit
+``with_sharding_constraint`` annotations — GSPMD's propagation otherwise
+picks pathological shardings for high-rank intermediates (measured: the
+(groups, tokens, experts, capacity) dispatch tensor drew ~58x the expected
+collective traffic on deepseek-v3 prefill; EXPERIMENTS.md §Perf).
+
+Hints are process-local context (set by the launcher/dry-run around
+lowering); when unset, constraints are no-ops so unit tests and single-device
+runs never see mesh machinery.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_HINTS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "sharding_hints", default=None)
+
+
+@contextlib.contextmanager
+def axis_hints(data=None, model=None, model_size: int = 1):
+    """Declare mesh axis names (+ model-axis size) for activation constraints."""
+    token = _HINTS.set({"data": data, "model": model,
+                        "model_size": model_size})
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)
+
+
+def current() -> dict | None:
+    return _HINTS.get()
+
+
+def model_axis_size() -> int:
+    hints = _HINTS.get()
+    return hints.get("model_size", 1) if hints else 1
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """``with_sharding_constraint(x, P(*mapped_axes))`` under active hints.
+
+    ``axes`` entries are "data" / "model" / None, mapped through the hint
+    table; no-op when hints are absent.
+    """
+    hints = _HINTS.get()
+    if hints is None:
+        return x
+    mapped = tuple(hints.get(a) if isinstance(a, str) else a for a in axes)
+    if all(m is None for m in mapped):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*mapped))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context — leave unconstrained

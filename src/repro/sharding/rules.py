@@ -1,0 +1,123 @@
+"""Logical-axis -> mesh-axis rules (T5X-style), with divisibility fallback.
+
+Two rule sets:
+
+* ``tp``       — tensor/expert parallelism only: weights sharded on ``model``,
+                 replicated across ``data`` (small models; cheapest comms).
+* ``tp_fsdp``  — additionally shards the ``embed`` (d_model) dimension of every
+                 weight over ``data`` (ZeRO-3/FSDP): required for the >=90B
+                 configs, where data-replicated parameters cannot fit HBM.
+                 FSDP stays *within* a pod — the ``pod`` axis carries pure data
+                 parallelism (one DCN gradient all-reduce per step), the
+                 standard multi-pod posture.
+
+A logical axis maps to its mesh axis only when the dimension is divisible by
+the mesh axis size (e.g. granite's kv_heads=1 falls back to replicated; the
+KV *cache* then shards on sequence instead — see ``activation_rules``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "inner": "model",
+    "inner2": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "state": None,
+    "embed": None,
+    "layers": None,
+}
+
+FSDP_RULES = dict(TP_RULES, embed="data", q_lora="data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+    mesh: Mesh
+
+    def spec_for(self, shape, axes) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        mesh_shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used: set[str] = set()
+        out = []
+        for dim, ax in zip(shape, axes):
+            mapped = self.rules.get(ax) if ax is not None else None
+            if (
+                mapped is not None
+                and mapped not in used
+                and mapped in mesh_shape
+                and dim % mesh_shape[mapped] == 0
+            ):
+                out.append(mapped)
+                used.add(mapped)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+    def param_specs(self, table_axes: dict, table_shapes: dict) -> dict:
+        return {
+            path: self.spec_for(table_shapes[path], axes)
+            for path, axes in table_axes.items()
+        }
+
+
+def make_rules(mesh: Mesh, fsdp: bool = False) -> ShardingRules:
+    return ShardingRules(FSDP_RULES if fsdp else TP_RULES, mesh)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying the global batch ('pod' + 'data' when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh))
+
+
+def cache_spec(mesh: Mesh, n_kv_heads: int, kind: str = "attn") -> P:
+    """KV-cache sharding: (layers, batch, seq, heads, dim).
+
+    Heads shard on ``model`` when divisible; otherwise the sequence dimension
+    takes ``model`` (flash-decoding style — GSPMD inserts the LSE-combine
+    all-reduce in the softmax).  MLA latent caches always shard on sequence
+    (the latent dim is contracted every step).
+    """
+    model = mesh.devices.shape[mesh.axis_names.index("model")] if "model" in mesh.axis_names else 1
+    d = data_axes(mesh)
+    if kind == "mla":
+        return P(None, d, "model", None)
+    if n_kv_heads % model == 0:
+        return P(None, d, None, "model", None)
+    return P(None, d, "model", None, None)
+
+
+def fsdp_recommended(n_params: int, mesh: Mesh, hbm_per_chip: float = 16e9) -> bool:
+    """FSDP when fp32 params + Adam(m, v) replicated over data would overflow.
+
+    12 bytes/param (fp32 master + m + v) divided by the model axis only.
+    """
+    model = mesh.devices.shape[mesh.axis_names.index("model")] if "model" in mesh.axis_names else 1
+    bytes_per_chip = 12.0 * n_params / model
+    return bytes_per_chip > 0.5 * hbm_per_chip
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.devices.shape[mesh.axis_names.index(name)]

@@ -1,0 +1,9 @@
+from repro.train.steps import (  # noqa: F401
+    CompiledPrograms,
+    TrainState,
+    abstract_state,
+    build_programs,
+    input_specs,
+    make_serve_step,
+    make_train_step,
+)

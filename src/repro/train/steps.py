@@ -1,0 +1,350 @@
+"""train_step / serve_step factories with full sharding annotations.
+
+These are the functions the dry-run lowers and the launcher runs:
+
+    train_step(state, batch)          -> (state, metrics)
+    serve_step(params, caches, token, pos) -> (next_token, caches)
+
+Sharding: parameters via logical-axis rules (TP or TP+FSDP), batch on the
+data axes, KV caches per block kind (heads when divisible, else sequence).
+Mixed precision: fp32 master params, bf16 compute cast at step entry, fp32
+softmax/loss; gradient all-reduces happen in bf16 (compression) because the
+cast tree is what autodiff differentiates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import blocks
+from repro.models.lm import LanguageModel
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import warmup_cosine
+from repro.sharding import rules as rules_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Spec trees
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs(model: LanguageModel, rules: rules_lib.ShardingRules) -> dict:
+    table = model.param_table()
+    return {p: rules.spec_for(d.shape, d.axes) for p, d in table.items()}
+
+
+def state_pspecs(model: LanguageModel, rules: rules_lib.ShardingRules):
+    ps = param_pspecs(model, rules)
+    return TrainState(
+        params=ps,
+        opt_state=AdamWState(count=P(), m=dict(ps), v=dict(ps)),
+        step=P(),
+    )
+
+
+def batch_pspecs(cfg: ModelConfig, mesh) -> dict:
+    d = rules_lib.data_axes(mesh)
+    specs = {"tokens": P(d, None), "labels": P(d, None)}
+    if cfg.family == "audio":
+        specs["frames"] = P(d, None, None)
+    if cfg.family == "vlm":
+        specs["images"] = P(d, None, None)
+    return specs
+
+
+def _kv_heads_spec(mesh, n_kv_heads: int) -> P:
+    """(L, B, S, Hkv, Dh): heads on model if divisible, else sequence."""
+    d = rules_lib.data_axes(mesh)
+    if n_kv_heads % rules_lib.mesh_axis_size(mesh, "model") == 0:
+        return P(None, d, None, "model", None)
+    return P(None, d, "model", None, None)
+
+
+def cache_pspecs(model: LanguageModel, mesh):
+    """Spec tree matching ``model.cache_spec`` exactly."""
+    cfg = model.cfg
+    d = rules_lib.data_axes(mesh)
+    msz = rules_lib.mesh_axis_size(mesh, "model")
+
+    def attn_spec():
+        return {"k": _kv_heads_spec(mesh, cfg.n_kv_heads),
+                "v": _kv_heads_spec(mesh, cfg.n_kv_heads)}
+
+    def cross_spec():
+        return {"k": _kv_heads_spec(mesh, cfg.n_kv_heads),
+                "v": _kv_heads_spec(mesh, cfg.n_kv_heads)}
+
+    def kind_spec(kind: str):
+        if kind in blocks._ATTN_KINDS:
+            return attn_spec()
+        if kind in ("mla", "mla_moe"):
+            return {"latent": P(None, d, "model", None),
+                    "k_rope": P(None, d, "model", None)}
+        if kind == "cross":
+            return cross_spec()
+        if kind == "dec_cross":
+            return {"self": attn_spec(), "cross": cross_spec()}
+        if kind == "mamba":
+            mcfg = blocks.mamba_config(cfg)
+            h_ax = "model" if mcfg.n_heads % msz == 0 else None
+            di_ax = "model" if mcfg.d_inner % msz == 0 else None
+            return {
+                "ssm": P(None, d, h_ax, None, None),
+                "conv_x": P(None, d, None, di_ax),
+                "conv_b": P(None, d, None, None),
+                "conv_c": P(None, d, None, None),
+            }
+        if kind == "mlstm":
+            mcfg = blocks.mlstm_config(cfg)
+            h_ax = "model" if mcfg.n_heads % msz == 0 else None
+            di_ax = "model" if mcfg.d_inner % msz == 0 else None
+            return {
+                "s": P(None, d, h_ax, None, None),
+                "n": P(None, d, h_ax, None),
+                "conv": P(None, d, None, di_ax),
+            }
+        if kind == "slstm":
+            return {"carry": [P(None, d, None)] * 4}
+        raise ValueError(kind)
+
+    return [
+        {f"b{bi}:{kind}": kind_spec(kind) for bi, kind in enumerate(kinds)}
+        for _, kinds in cfg.pattern
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def prune_specs(spec_tree, shape_tree, mesh):
+    """Drop spec axes that do not divide the actual dimension (e.g. batch=1
+    long-context caches on a 16-way data axis)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            out = 1
+            for a in ax:
+                out *= mesh_shape.get(a, 1)
+            return out
+        return mesh_shape.get(ax, 1)
+
+    def prune(spec: P, shaped) -> P:
+        dims = shaped.shape
+        out = list(spec) + [None] * (len(dims) - len(spec))
+        for i, ax in enumerate(out):
+            if dims[i] % size(ax):
+                out[i] = None
+        return P(*out)
+
+    return jax.tree.map(prune, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def make_train_step(
+    model: LanguageModel,
+    optimizer: AdamW | Any = None,
+    compute_dtype=jnp.bfloat16,
+    schedule: Callable = warmup_cosine,
+    microbatch: int | None = None,
+):
+    optimizer = optimizer or AdamW()
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(cast_tree(p, compute_dtype), batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatch and microbatch > 1:
+            from repro.train.microbatch import accumulated_grads
+
+            loss, metrics, grads = accumulated_grads(grad_fn, state.params,
+                                                     batch, microbatch)
+        else:
+            loss, metrics, grads = grad_fn(state.params, batch)
+        lr_scale = schedule(state.step)
+        new_params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt_state, state.params, lr_scale
+        )
+        metrics = dict(metrics, loss=loss, lr_scale=lr_scale, **opt_metrics)
+        return TrainState(new_params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(model: LanguageModel, compute_dtype=jnp.bfloat16):
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode_step(
+            cast_tree(params, compute_dtype), caches, token, pos
+        )
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Jitted, mesh-aware wrappers (used by launcher and dry-run)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledPrograms:
+    train_step: Any = None
+    serve_step: Any = None
+    state_shardings: Any = None
+    batch_shardings: Any = None
+    cache_shardings: Any = None
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_programs(
+    model: LanguageModel,
+    mesh,
+    fsdp: bool | None = None,
+    optimizer=None,
+    compute_dtype=jnp.bfloat16,
+    microbatch: int | None = None,
+    cache_shapes=None,  # pass model.cache_spec(...) to prune indivisible axes
+) -> CompiledPrograms:
+    cfg = model.cfg
+    if fsdp is None:
+        fsdp = rules_lib.fsdp_recommended(model.n_params(), mesh)
+    rules = rules_lib.make_rules(mesh, fsdp=fsdp)
+
+    state_specs = state_pspecs(model, rules)
+    batch_specs = batch_pspecs(cfg, mesh)
+    cache_specs = cache_pspecs(model, mesh)
+    if cache_shapes is not None:
+        cache_specs = prune_specs(cache_specs, cache_shapes, mesh)
+
+    state_sh = _named(mesh, state_specs)
+    batch_sh = _named(mesh, batch_specs)
+    cache_sh = _named(mesh, cache_specs)
+    param_sh = state_sh.params
+    repl = NamedSharding(mesh, P())
+
+    train_step = make_train_step(model, optimizer, compute_dtype,
+                                 microbatch=microbatch)
+    serve_step = make_serve_step(model, compute_dtype)
+
+    # Bind activation-sharding hints at trace time (MoE dispatch pinning,
+    # sequence-parallel attention fallback — see repro.sharding.hints).
+    from repro.sharding import hints as hints_lib
+
+    def _hinted(fn):
+        def wrapped(*a, **k):
+            with hints_lib.axis_hints(
+                data=rules_lib.data_axes(mesh), model="model",
+                model_size=rules_lib.mesh_axis_size(mesh, "model"),
+            ):
+                return fn(*a, **k)
+        return wrapped
+
+    train_step = _hinted(train_step)
+    serve_step = _hinted(serve_step)
+
+    train_jit = jax.jit(
+        train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    serve_jit = jax.jit(
+        serve_step,
+        in_shardings=(param_sh, cache_sh, repl, repl),
+        out_shardings=(repl, cache_sh),
+        donate_argnums=(1,),
+    )
+    return CompiledPrograms(
+        train_step=train_jit,
+        serve_step=serve_jit,
+        state_shardings=state_sh,
+        batch_shardings=batch_sh,
+        cache_shardings=cache_sh,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct) — shared by dry-run and tests
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, compute_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of a workload cell."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), compute_dtype)
+        if cfg.family == "vlm":
+            specs["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.img_seq, cfg.d_model), compute_dtype)
+        return specs
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), compute_dtype)
+        if cfg.family == "vlm":
+            specs["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.img_seq, cfg.d_model), compute_dtype)
+        return specs
+    # decode: one new token against a cache of seq_len
+    model = LanguageModel(cfg)
+    return {
+        "caches": model.cache_spec(b, shape.seq_len, compute_dtype),
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def abstract_state(model: LanguageModel, optimizer=None) -> TrainState:
+    optimizer = optimizer or AdamW()
+    params = model.abstract(jnp.float32)
+    opt = jax.eval_shape(optimizer.init, params)
+    return TrainState(params=params, opt_state=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,27 @@
+import os
+
+# Tests see the real device count (the dry-run entrypoint sets its own flag);
+# a handful of mesh tests request a small host-device mesh via this env var
+# being absent — they use whatever is available and skip if too few.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_symmetric(rng, n, dtype=np.float64):
+    a = rng.standard_normal((n, n)).astype(dtype)
+    return (a + a.T) / 2

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; decode path consistency with the parallel
+forward pass (cache correctness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, reduced_config
+from repro.models.lm import LanguageModel
+from repro.optim import AdamW
+from repro.train import TrainState, make_train_step
+
+RNG = jax.random.PRNGKey(0)
+B, S, SMAX = 2, 12, 24
+
+
+def make_batch(cfg, toks):
+    b = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(RNG, (B, cfg.enc_seq, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        b["images"] = jax.random.normal(RNG, (B, cfg.img_seq, cfg.d_model)) * 0.1
+    return b
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    cfg = reduced_config(get_config(request.param))
+    model = LanguageModel(cfg)
+    params = model.init(RNG)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab_size)
+    return cfg, model, params, toks
+
+
+def test_forward_loss_finite(arch_setup):
+    cfg, model, params, toks = arch_setup
+    loss, metrics = jax.jit(model.loss)(params, make_batch(cfg, toks))
+    assert np.isfinite(float(loss)), cfg.name
+    assert float(metrics["ce"]) > 0
+
+
+def test_train_step_updates_params(arch_setup):
+    cfg, model, params, toks = arch_setup
+    opt = AdamW(lr=1e-3)
+    step = make_train_step(model, opt, compute_dtype=jnp.float32)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    state2, metrics = jax.jit(step)(state, make_batch(cfg, toks))
+    assert np.isfinite(float(metrics["loss"]))
+    # at least one param changed, none went NaN
+    changed = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, state2.params)
+    assert any(jax.tree.leaves(changed)), cfg.name
+    finite = jax.tree.map(lambda x: bool(jnp.all(jnp.isfinite(x))),
+                          state2.params)
+    assert all(jax.tree.leaves(finite)), cfg.name
+
+
+def test_prefill_decode_shapes_and_consistency(arch_setup):
+    cfg, model, params, toks = arch_setup
+    batch = make_batch(cfg, toks)
+    logits_full, _ = model.prefill(params, batch, SMAX)
+    assert logits_full.shape == (B, cfg.vocab_size)
+
+    batch_m1 = dict(batch, tokens=toks[:, : S - 1], labels=toks[:, : S - 1])
+    _, caches = model.prefill(params, batch_m1, SMAX)
+    logits_dec, caches = model.decode_step(
+        params, caches, toks[:, S - 1], jnp.asarray(S - 1, jnp.int32))
+    assert logits_dec.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_dec)).all()
+
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec))) / scale
+    # capacity-based MoE routes prefill groups differently from single-token
+    # decode (token drops differ per group), so exact logit agreement is not
+    # expected there — bound the drift loosely and tightly elsewhere.
+    tol = 0.5 if cfg.n_experts else 2e-4
+    assert err < tol, (cfg.name, err)
+
+
+def test_multistep_decode_finite(arch_setup):
+    cfg, model, params, toks = arch_setup
+    batch = make_batch(cfg, toks)
+    logits, caches = model.prefill(params, batch, SMAX)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(3):
+        logits, caches = model.decode_step(
+            params, caches, tok, jnp.asarray(S + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        assert np.isfinite(np.asarray(logits)).all(), cfg.name

@@ -1,0 +1,170 @@
+"""EEI core correctness: every variant against the eigh oracle, plus the
+hypothesis property suite on the system's invariants."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import identity, minors, numpy_ref
+from repro.core.spectral import SpectralEngine
+from repro.linalg import interlace
+
+
+def _sym(seed: int, n: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    return jnp.asarray((a + a.T) / 2)
+
+
+def _oracle(a):
+    lam, v = jnp.linalg.eigh(a)
+    return lam, (v * v).T  # |v[i, j]|^2, rows = eigenvectors
+
+
+VARIANTS = ["baseline", "cached", "vectorized", "batched", "parallel",
+            "logspace"]
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("n", [2, 5, 12])
+def test_single_component_matches_eigh(variant, n):
+    a = _sym(n, n)
+    _, ref = _oracle(a)
+    for i, j in [(0, 0), (n // 2, n - 1), (n - 1, 0)]:
+        got = identity.component(a, i, j, variant=variant, batch_size=3)
+        np.testing.assert_allclose(float(got), float(ref[i, j]),
+                                   rtol=1e-8, atol=1e-12)
+
+
+@pytest.mark.parametrize("logspace", [True, False])
+def test_full_matrix_matches_eigh(logspace):
+    a = _sym(3, 16)
+    _, ref = _oracle(a)
+    got = identity.eigenmatrix_magnitudes(a, logspace=logspace)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-10)
+
+
+def test_numpy_reference_matches_jax():
+    """The paper-faithful NumPy Algorithm 1/2 agree with the JAX ladder."""
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((10, 10))
+    a = (a + a.T) / 2
+    aj = jnp.asarray(a)
+    for i, j in [(0, 3), (9, 9), (5, 0)]:
+        base = numpy_ref.eigen_component_baseline(a, i, j)
+        opt = numpy_ref.eigen_component_optimized(a, i, j, batch_size=4)
+        jax_v = float(identity.component(aj, i, j, variant="logspace"))
+        np.testing.assert_allclose(base, opt, rtol=1e-10)
+        np.testing.assert_allclose(base, jax_v, rtol=1e-8)
+
+
+def test_batched_fixes_large_n_overflow():
+    """Paper section 3: naive products over/underflow at n >~ 150; paired
+    batching (Algorithm 2) and logspace stay finite."""
+    n = 200
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)) * 10
+    a = (a + a.T) / 2
+    lam = np.linalg.eigvalsh(a)
+    minor = np.delete(np.delete(a, 0, 0), 0, 1)
+    mu = np.linalg.eigvalsh(minor)
+    naive_num = np.prod(lam[n // 2] - mu)
+    naive_den = np.prod(np.delete(lam[n // 2] - lam, n // 2))
+    assert (not np.isfinite(naive_num)) or (not np.isfinite(naive_den)) or \
+        naive_num == 0.0 or naive_den == 0.0, "matrix too small to overflow"
+    aj = jnp.asarray(a)
+    batched = identity.component(aj, n // 2, 0, variant="batched")
+    logsp = identity.component(aj, n // 2, 0, variant="logspace")
+    _, ref = _oracle(aj)
+    np.testing.assert_allclose(float(batched), float(ref[n // 2, 0]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(logsp), float(ref[n // 2, 0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24))
+def test_property_rows_are_unit_vectors(seed, n):
+    """sum_j |v[i, j]|^2 == 1 for every eigenvector i."""
+    a = _sym(seed, n)
+    mags = identity.eigenmatrix_magnitudes(a)
+    np.testing.assert_allclose(np.asarray(jnp.sum(mags, axis=1)),
+                               np.ones(n), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24))
+def test_property_columns_are_unit_vectors(seed, n):
+    """Orthogonal eigenbasis: sum_i |v[i, j]|^2 == 1 for every component j."""
+    a = _sym(seed, n)
+    mags = identity.eigenmatrix_magnitudes(a)
+    np.testing.assert_allclose(np.asarray(jnp.sum(mags, axis=0)),
+                               np.ones(n), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 24),
+       j=st.integers(0, 23))
+def test_property_cauchy_interlacing(seed, n, j):
+    a = _sym(seed, n)
+    j = j % n
+    lam = jnp.linalg.eigvalsh(a)
+    mu = jnp.linalg.eigvalsh(minors.minor(a, jnp.asarray(j)))
+    assert bool(interlace.interlacing_holds(lam, mu))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_degenerate_spectrum_is_finite(seed):
+    """Repeated eigenvalues: EEI must stay finite (0/0 -> clamped)."""
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((8, 8)))
+    lam = np.array([1.0, 1.0, 1.0, 2.0, 2.0, 3.0, 4.0, 5.0])
+    a = jnp.asarray(q @ np.diag(lam) @ q.T)
+    mags = identity.eigenmatrix_magnitudes(a)
+    assert bool(jnp.all(jnp.isfinite(mags)))
+
+
+def test_minor_construction_traced_index():
+    a = _sym(0, 9)
+    for j in range(9):
+        expected = np.delete(np.delete(np.asarray(a), j, 0), j, 1)
+        got = minors.minor(a, jnp.asarray(j))
+        np.testing.assert_array_equal(np.asarray(got), expected)
+
+
+@pytest.mark.parametrize("method", ["eigh", "eei_dense", "eei_tridiag"])
+def test_spectral_engine_topk(method):
+    a = _sym(7, 20)
+    lam, v = jnp.linalg.eigh(a)
+    eng = SpectralEngine(method=method)
+    ev, vecs = eng.topk_eigenpairs(a, 4)
+    np.testing.assert_allclose(np.asarray(ev), np.asarray(lam[-4:]),
+                               rtol=1e-8, atol=1e-8)
+    vref = np.asarray(v[:, -4:].T)
+    got = np.asarray(vecs)
+    err = np.minimum(np.abs(got - vref), np.abs(got + vref)).max()
+    assert err < 1e-6, err
+
+
+def test_spectral_engine_kernelized():
+    a = _sym(11, 24)
+    eng = SpectralEngine(method="eei_tridiag", use_kernels=True)
+    ref = SpectralEngine(method="eigh")
+    ev, vecs = eng.topk_eigenpairs(a, 3)
+    ev_r, vecs_r = ref.topk_eigenpairs(a, 3)
+    np.testing.assert_allclose(np.asarray(ev), np.asarray(ev_r), rtol=1e-8,
+                               atol=1e-8)
+    err = np.minimum(np.abs(np.asarray(vecs) - np.asarray(vecs_r)),
+                     np.abs(np.asarray(vecs) + np.asarray(vecs_r))).max()
+    assert err < 1e-6, err

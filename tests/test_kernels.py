@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import identity
+from repro.kernels.prod_diff import ops as pd_ops
+from repro.kernels.prod_diff import ref as pd_ref
+from repro.kernels.sturm import ops as st_ops
+from repro.kernels.sturm import ref as st_ref
+from repro.linalg.householder import tridiagonal_matrix
+
+
+# -- prod_diff ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("shape", [(4, 4, 3), (12, 12, 11), (40, 33, 17),
+                                   (130, 5, 140), (8, 129, 64)])
+def test_prod_diff_shape_dtype_sweep(shape, dtype):
+    i_n, j_n, k_n = shape
+    rng = np.random.default_rng(i_n * 100 + j_n)
+    lam = jnp.asarray(np.sort(rng.standard_normal(i_n)), dtype)
+    mu = jnp.asarray(rng.standard_normal((j_n, k_n)), dtype)
+    out_k = pd_ops.logabs_sum(lam, mu, 1e-9)
+    out_r = pd_ref.logabs_sum(lam, mu, 1e-9)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 8, 32), (128, 128, 128)])
+def test_prod_diff_block_shapes(blocks):
+    bi, bj, bk = blocks
+    rng = np.random.default_rng(0)
+    lam = jnp.asarray(np.sort(rng.standard_normal(20)))
+    mu = jnp.asarray(rng.standard_normal((20, 19)))
+    out_k = pd_ops.logabs_sum(lam, mu, 1e-9, block_i=bi, block_j=bj, block_k=bk)
+    out_r = pd_ref.logabs_sum(lam, mu, 1e-9)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_prod_diff_eei_magnitudes_vs_eigh():
+    rng = np.random.default_rng(3)
+    n = 24
+    a = rng.standard_normal((n, n))
+    a = jnp.asarray((a + a.T) / 2)
+    lam, v = jnp.linalg.eigh(a)
+    mu = identity.minor_spectra(a)
+    mags = pd_ops.eei_magnitudes(lam, mu)
+    np.testing.assert_allclose(np.asarray(mags), np.asarray((v * v).T),
+                               rtol=1e-6, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(i_n=st.integers(1, 40), j_n=st.integers(1, 40), k_n=st.integers(1, 40),
+       seed=st.integers(0, 1000))
+def test_property_prod_diff_any_shape(i_n, j_n, k_n, seed):
+    rng = np.random.default_rng(seed)
+    lam = jnp.asarray(rng.standard_normal(i_n))
+    mu = jnp.asarray(rng.standard_normal((j_n, k_n)))
+    out_k = pd_ops.logabs_sum(lam, mu, 1e-9)
+    out_r = pd_ref.logabs_sum(lam, mu, 1e-9)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-9, atol=1e-9)
+
+
+# -- sturm --------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("bn", [(1, 4), (5, 23), (3, 64), (9, 130)])
+def test_sturm_shape_dtype_sweep(bn, dtype):
+    b, n = bn
+    rng = np.random.default_rng(b * 10 + n)
+    d = jnp.asarray(rng.standard_normal((b, n)), dtype)
+    e = jnp.asarray(rng.standard_normal((b, n - 1)), dtype)
+    ev_k = st_ops.sturm_eigenvalues(d, e)
+    ev_r = st_ref.sturm_eigenvalues(d, e)
+    tol = 2e-5 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(ev_k), np.asarray(ev_r),
+                               rtol=tol, atol=tol)
+    ref = jnp.stack([
+        jnp.linalg.eigvalsh(tridiagonal_matrix(d[i].astype(jnp.float64),
+                                               e[i].astype(jnp.float64)))
+        for i in range(b)
+    ])
+    np.testing.assert_allclose(np.asarray(ev_k, dtype=np.float64),
+                               np.asarray(ref), atol=3e-4 if
+                               dtype == jnp.float32 else 1e-10)
+
+
+def test_sturm_decoupled_and_degenerate():
+    d = jnp.asarray([[1.0, 1.0, 1.0, 5.0, 5.0, 2.0]])
+    e = jnp.asarray([[0.0, 0.5, 0.0, 0.0, 1.0]])
+    ev = st_ops.sturm_eigenvalues(d, e)
+    ref = jnp.linalg.eigvalsh(tridiagonal_matrix(d[0], e[0]))
+    np.testing.assert_allclose(np.asarray(ev[0]), np.asarray(ref), atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 6), n=st.integers(2, 48), seed=st.integers(0, 1000))
+def test_property_sturm_sorted_and_exact(b, n, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.standard_normal((b, n)))
+    e = jnp.asarray(rng.standard_normal((b, n - 1)))
+    ev = np.asarray(st_ops.sturm_eigenvalues(d, e))
+    assert (np.diff(ev, axis=1) >= -1e-12).all(), "eigenvalues must be sorted"
+    for i in range(b):
+        ref = np.asarray(jnp.linalg.eigvalsh(tridiagonal_matrix(d[i], e[i])))
+        np.testing.assert_allclose(ev[i], ref, atol=1e-9)

@@ -1,0 +1,92 @@
+"""Householder tridiagonalization + Sturm bisection against LAPACK oracles."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import minors
+from repro.linalg import householder, sturm
+
+
+def _sym(seed, n, scale=1.0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)) * scale
+    return jnp.asarray((a + a.T) / 2)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 8, 33])
+def test_tridiagonalize_similarity(n):
+    a = _sym(n, n)
+    d, e, q = householder.tridiagonalize(a)
+    t = householder.tridiagonal_matrix(d, e)
+    np.testing.assert_allclose(np.asarray(q.T @ a @ q), np.asarray(t),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(n), atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 32),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_property_tridiagonalize_preserves_spectrum(seed, n, scale):
+    a = _sym(seed, n, scale)
+    d, e, _ = householder.tridiagonalize(a, with_q=False)
+    t = householder.tridiagonal_matrix(d, e)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.eigvalsh(t)), np.asarray(jnp.linalg.eigvalsh(a)),
+        rtol=1e-9, atol=1e-9 * scale)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 16, 64])
+def test_sturm_bisection_matches_eigvalsh(n):
+    rng = np.random.default_rng(n)
+    d = jnp.asarray(rng.standard_normal(n))
+    e = jnp.asarray(rng.standard_normal(max(n - 1, 0)))
+    ev = sturm.bisect_eigenvalues(d, e)
+    ref = jnp.linalg.eigvalsh(householder.tridiagonal_matrix(d, e))
+    np.testing.assert_allclose(np.asarray(ev), np.asarray(ref), atol=1e-10)
+
+
+def test_sturm_count_monotone():
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(rng.standard_normal(12))
+    e = jnp.asarray(rng.standard_normal(11))
+    xs = jnp.linspace(-6, 6, 41)
+    counts = np.asarray(sturm.sturm_count(d, e, xs))
+    assert (np.diff(counts) >= 0).all()
+    assert counts[0] == 0 and counts[-1] == 12
+
+
+def test_sturm_decoupled_minors():
+    """EEI minors of a tridiagonal are block-decoupled; Sturm handles the
+    zero off-diagonal exactly."""
+    rng = np.random.default_rng(2)
+    n = 14
+    d = jnp.asarray(rng.standard_normal(n))
+    e = jnp.asarray(rng.standard_normal(n - 1))
+    dm, em = minors.all_tridiagonal_minor_bands(d, e)
+    ev = sturm.bisect_eigenvalues_batched(dm, em)
+    t = householder.tridiagonal_matrix(d, e)
+    for j in range(n):
+        ref = jnp.linalg.eigvalsh(minors.minor(t, jnp.asarray(j)))
+        np.testing.assert_allclose(np.asarray(ev[j]), np.asarray(ref),
+                                   atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24))
+def test_property_tridiag_minor_bands_match_dense(seed, n):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.standard_normal(n))
+    e = jnp.asarray(rng.standard_normal(n - 1))
+    t = householder.tridiagonal_matrix(d, e)
+    j = seed % n
+    dm, em = minors.tridiagonal_minor_bands(d, e, jnp.asarray(j))
+    dense_minor = minors.minor(t, jnp.asarray(j))
+    rebuilt = householder.tridiagonal_matrix(dm, em)
+    np.testing.assert_allclose(np.asarray(dense_minor), np.asarray(rebuilt),
+                               atol=1e-12)

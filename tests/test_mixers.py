@@ -1,0 +1,179 @@
+"""Sequence-mixer unit tests: chunked forms vs sequential recurrences,
+MoE routing invariants (hypothesis), attention masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.ssm import chunked_gla, gla_decode_step
+
+
+# -- chunked GLA vs sequential reference --------------------------------------
+
+
+def _gla_sequential(q, k, v, log_decay, gate, normalize):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st_ = np.zeros((b, h, dk, dv))
+    n = np.zeros((b, h, dk))
+    ys = []
+    for t in range(s):
+        d = np.exp(np.asarray(log_decay[:, t], np.float64))
+        g = np.exp(np.asarray(gate[:, t], np.float64))
+        st_ = d[..., None, None] * st_ + g[..., None, None] * np.einsum(
+            "bhd,bhv->bhdv", np.asarray(k[:, t], np.float64),
+            np.asarray(v[:, t], np.float64))
+        n = d[..., None] * n + g[..., None] * np.asarray(k[:, t], np.float64)
+        y = np.einsum("bhd,bhdv->bhv", np.asarray(q[:, t], np.float64), st_)
+        if normalize:
+            denom = np.abs(np.einsum("bhd,bhd->bh", np.asarray(q[:, t],
+                                                               np.float64), n))
+            y = y / np.maximum(denom, 1.0)[..., None]
+        ys.append(y)
+    return np.stack(ys, axis=1), st_
+
+
+@pytest.mark.parametrize("normalize", [False, True])
+@pytest.mark.parametrize("chunk", [2, 4, 16])
+def test_chunked_gla_matches_sequential(normalize, chunk):
+    rng = np.random.default_rng(0)
+    b, s, h, dk, dv = 2, 16, 3, 4, 5
+    q = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_decay = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))),
+                            jnp.float32)
+    gate = jnp.asarray(rng.standard_normal((b, s, h)) * 0.3, jnp.float32)
+    y, (s_fin, _) = chunked_gla(q, k, v, log_decay, gate, chunk=chunk,
+                                normalize=normalize)
+    y_ref, s_ref = _gla_sequential(q, k, v, log_decay, gate, normalize)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), s_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gla_decode_step_matches_chunked_tail():
+    rng = np.random.default_rng(1)
+    b, s, h, dk, dv = 1, 8, 2, 3, 3
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k, v = mk(b, s, h, dk), mk(b, s, h, dk), mk(b, s, h, dv)
+    ld = -jnp.abs(mk(b, s, h))
+    g = mk(b, s, h) * 0.3
+    y_all, _ = chunked_gla(q, k, v, ld, g, chunk=4, normalize=True)
+    _, state = chunked_gla(q[:, :-1], k[:, :-1], v[:, :-1], ld[:, :-1],
+                           g[:, :-1], chunk=4, normalize=True)
+    y_t, _ = gla_decode_step(q[:, -1], k[:, -1], v[:, -1], ld[:, -1],
+                             g[:, -1], state, normalize=True)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_all[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- attention masking ----------------------------------------------------------
+
+
+def _ref_attention(q, k, v, causal, window, softcap):
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qr = np.asarray(q, np.float64).reshape(b, s, hkv, rep, dh)
+    scores = np.einsum("bqgrd,bkgd->bgrqk", qr, np.asarray(k, np.float64))
+    scores /= np.sqrt(dh)
+    if softcap is not None:
+        scores = softcap * np.tanh(scores / softcap)
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= np.tril(np.ones((s, s), bool))
+    if window is not None:
+        idx = np.arange(s)
+        mask &= (idx[None, :] > idx[:, None] - window)
+    scores = np.where(mask[None, None, None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    out = np.einsum("bgrqk,bkgd->bgrqd", p, np.asarray(v, np.float64))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (None, None, True), (4, None, True), (None, 30.0, True),
+    (4, 50.0, True), (None, None, False),
+])
+def test_chunked_attention_vs_dense_reference(window, softcap, causal):
+    rng = np.random.default_rng(2)
+    b, s, hq, hkv, dh = 2, 16, 4, 2, 8
+    cfg = attn.AttnConfig(d_model=32, n_heads=hq, n_kv_heads=hkv, head_dim=dh,
+                          causal=causal, window=window, softcap=softcap,
+                          chunk_q=4, chunk_k=4)
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k, v = mk(b, s, hq, dh), mk(b, s, hkv, dh), mk(b, s, hkv, dh)
+    out = attn.chunked_attention(cfg, q, k, v)
+    ref = _ref_attention(q, k, v, causal, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_last_position():
+    rng = np.random.default_rng(3)
+    b, s, hq, hkv, dh = 2, 10, 4, 2, 8
+    cfg = attn.AttnConfig(d_model=32, n_heads=hq, n_kv_heads=hkv, head_dim=dh,
+                          chunk_q=5, chunk_k=5)
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k, v = mk(b, s, hq, dh), mk(b, s, hkv, dh), mk(b, s, hkv, dh)
+    full = attn.chunked_attention(cfg, q, k, v)
+    smax = 16
+    k_cache = jnp.zeros((b, smax, hkv, dh)).at[:, :s].set(k)
+    v_cache = jnp.zeros((b, smax, hkv, dh)).at[:, :s].set(v)
+    dec = attn.decode_attention(cfg, q[:, -1:], k_cache, v_cache,
+                                jnp.asarray(s - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- MoE invariants ---------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), e=st.sampled_from([4, 8]),
+       k=st.integers(1, 3), tokens=st.sampled_from([8, 32]))
+def test_property_moe_routing_invariants(seed, e, k, tokens):
+    rng = np.random.default_rng(seed)
+    d, f = 8, 16
+    cfg = moe_lib.MoEConfig(d_model=d, d_ff=f, n_experts=e, top_k=k,
+                            capacity_factor=1.5, group_size=16)
+    p = {
+        "router": jnp.asarray(rng.standard_normal((d, e)), jnp.float32),
+        "w_gate": jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((e, f, d)) * 0.1, jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((2, tokens // 2, d)), jnp.float32)
+    y, aux = moe_lib.moe(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.0
+    # zero input -> zero routing contribution (experts see nothing)
+    y0, _ = moe_lib.moe(cfg, p, jnp.zeros_like(x))
+    np.testing.assert_allclose(np.asarray(y0), 0.0, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 most tokens are dropped -> output near 0
+    for them; with large capacity nothing is dropped."""
+    rng = np.random.default_rng(0)
+    d, f, e = 4, 8, 4
+    p = {
+        "router": jnp.asarray(rng.standard_normal((d, e)), jnp.float32),
+        "w_gate": jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((e, f, d)), jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((1, 64, d)), jnp.float32)
+    big = moe_lib.MoEConfig(d, f, e, 1, capacity_factor=8.0, group_size=64)
+    small = moe_lib.MoEConfig(d, f, e, 1, capacity_factor=0.1, group_size=64)
+    y_big, _ = moe_lib.moe(big, p, x)
+    y_small, _ = moe_lib.moe(small, p, x)
+    nz_big = int(jnp.sum(jnp.any(jnp.abs(y_big) > 1e-7, axis=-1)))
+    nz_small = int(jnp.sum(jnp.any(jnp.abs(y_small) > 1e-7, axis=-1)))
+    assert nz_big == 64
+    assert nz_small < 32

@@ -1,0 +1,103 @@
+"""Roofline machinery: HLO collective parser, cost algebra, term math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import (
+    CostVector,
+    Roofline,
+    collective_bytes,
+    cost_vector,
+    extrapolate,
+    model_flops,
+    slstm_extra_flops,
+)
+from repro.roofline import constants as C
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+  %rs = f32[32,256]{1,0} reduce-scatter(%y), replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = bf16[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ars = f32[16]{0} all-reduce-start(%w), replica_groups=[1,8]<=[8]
+  %ard = f32[16]{0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_parser_semantics():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 128 * 256 * 4 + 16 * 4  # sync + -start form
+    assert out["all-gather"] == 128 * 256 * 4 // 4  # output / group size
+    assert out["reduce-scatter"] == 32 * 256 * 4 * 4  # output * group size
+    assert out["collective-permute"] == 64 * 2  # bf16
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_parser_ignores_done_and_noncollectives():
+    out = collective_bytes("%d = f32[8]{0} dot(%a, %b)\n"
+                           "%x = f32[8]{0} all-reduce-done(%y)\n")
+    assert out["total"] == 0
+
+
+def test_cost_vector_algebra_and_extrapolation():
+    base = CostVector(10.0, 100.0, {"all-reduce": 5.0, "total": 5.0})
+    g2 = CostVector(14.0, 160.0, {"all-reduce": 7.0, "total": 7.0})
+    # repeats=[3]: total = base + (3-1)*(g2-base)
+    total = extrapolate(base, [g2], [3])
+    assert total.flops == 10 + 2 * 4
+    assert total.bytes_accessed == 100 + 2 * 60
+    assert total.collective["total"] == 5 + 2 * 2
+    scaled = total.scale(2.0)
+    assert scaled.flops == 2 * total.flops
+
+
+def test_roofline_terms_and_dominant():
+    rl = Roofline(flops=C.PEAK_FLOPS_BF16, bytes_accessed=0.0,
+                  collective_bytes=0.0, chips=1, model_flops=C.PEAK_FLOPS_BF16)
+    assert abs(rl.t_compute - 1.0) < 1e-9
+    assert rl.dominant == "compute"
+    assert abs(rl.roofline_fraction - 1.0) < 1e-9
+    rl2 = Roofline(flops=0.0, bytes_accessed=C.HBM_BW * 2, collective_bytes=0.0,
+                   chips=1, model_flops=C.PEAK_FLOPS_BF16)
+    assert rl2.dominant == "memory"
+    assert abs(rl2.bound_time - 2.0) < 1e-9
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.roofline import active_params
+
+    dense = get_config("codeqwen1.5-7b")
+    moe = get_config("deepseek-v3-671b")
+    assert active_params(dense) == active_params(dense)  # deterministic
+    # MoE active < total: 256 routed -> 8 active per token
+    from repro.models.lm import LanguageModel
+    assert active_params(moe) < 0.1 * LanguageModel(moe).n_params()
+    train = SHAPES["train_4k"]
+    decode = SHAPES["decode_32k"]
+    assert model_flops(dense, train) > model_flops(dense, decode) * 1e4
+    # decode counts one token per sequence
+    assert model_flops(dense, decode) == 2.0 * active_params(dense) * 128
+
+
+def test_slstm_correction_only_for_slstm_archs():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+
+    assert slstm_extra_flops(get_config("codeqwen1.5-7b"),
+                             SHAPES["train_4k"]) == 0.0
+    x = slstm_extra_flops(get_config("xlstm-125m"), SHAPES["train_4k"])
+    assert x > 0.0
+
+
+def test_cost_vector_from_analysis_dict():
+    cv = cost_vector({"flops": 7.0, "bytes accessed": 3.0}, {"total": 1.0})
+    assert cv.flops == 7.0 and cv.bytes_accessed == 3.0
+    cv0 = cost_vector({}, {})
+    assert cv0.flops == 0.0

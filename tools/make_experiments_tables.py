@@ -1,0 +1,108 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python tools/make_experiments_tables.py [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def load(d):
+    cells = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        with open(p) as f:
+            c = json.load(f)
+        tag = "multipod" if c.get("chips", 0) > 256 else "pod"
+        cells[(c["arch"], c["shape"], tag)] = c
+    return cells
+
+
+ARCH_ORDER = ["xlstm-125m", "codeqwen1.5-7b", "starcoder2-7b", "gemma2-2b",
+              "granite-20b", "kimi-k2-1t-a32b", "deepseek-v3-671b",
+              "whisper-large-v3", "llama-3.2-vision-90b", "zamba2-2.7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table(cells, tag):
+    print(f"\n### Dry-run — {tag} mesh\n")
+    print("| arch | shape | status | per-device args | per-device temp | "
+          "HLO flops/dev | coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            c = cells.get((a, s, tag))
+            if c is None:
+                print(f"| {a} | {s} | MISSING | | | | |")
+                continue
+            if c["status"] == "skipped":
+                print(f"| {a} | {s} | skipped ({c['reason'][:40]}...) | | | | |")
+                continue
+            full = c.get("full", {})
+            mem = full.get("memory", {})
+            cost = full.get("cost", {})
+            coll = full.get("collectives", {})
+            print(f"| {a} | {s} | {c['status']} "
+                  f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+                  f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+                  f"| {cost.get('flops', 0):.3g} "
+                  f"| {fmt_bytes(coll.get('total', 0))} |")
+
+
+def roofline_table(cells):
+    print("\n### Roofline — single-pod (16x16 = 256 chips)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+          "MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            c = cells.get((a, s, "pod"))
+            if c is None or c.get("status") == "skipped" or "roofline" not in c:
+                continue
+            r = c["roofline"]
+            print(f"| {a} | {s} | {fmt_s(r['t_compute_s'])} "
+                  f"| {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} "
+                  f"| **{r['dominant']}** | {r['model_flops']:.3g} "
+                  f"| {r['useful_flops_ratio']:.3f} "
+                  f"| {r['roofline_fraction']:.3f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--which", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.which in ("all", "dryrun"):
+        dryrun_table(cells, "pod")
+        dryrun_table(cells, "multipod")
+    if args.which in ("all", "roofline"):
+        roofline_table(cells)
+
+
+if __name__ == "__main__":
+    main()
