@@ -34,6 +34,13 @@ def sym(seed: int, n: int, dtype=np.float64) -> np.ndarray:
     return (a + a.T) / 2
 
 
+def sym_stack(seed: int, b: int, n: int, dtype=np.float32) -> np.ndarray:
+    """Stack of ``b`` random symmetric matrices, shape ``(b, n, n)``."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((b, n, n)).astype(dtype)
+    return (a + np.swapaxes(a, 1, 2)) / 2
+
+
 class Row:
     def __init__(self, name: str, us: float, derived: str = ""):
         self.name = name

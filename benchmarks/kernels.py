@@ -9,8 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, sym, time_fn
-from repro.core import identity
-from repro.core.spectral import SpectralEngine
+from repro.engine import SolverEngine, SolverPlan
 from repro.kernels.prod_diff import ops as pd_ops
 from repro.kernels.prod_diff import ref as pd_ref
 from repro.kernels.sturm import ops as st_ops
@@ -43,8 +42,7 @@ def run() -> list[Row]:
     n = 128
     a = jnp.asarray(sym(1, n), jnp.float32)
     for method in ("eigh", "eei_dense", "eei_tridiag"):
-        eng = SpectralEngine(method=method)
-        fn = jax.jit(lambda a_, e=eng: e.topk_eigenpairs(a_, 4))
-        t = time_fn(fn, a, repeat=3)
+        eng = SolverEngine(SolverPlan(method=method))
+        t = time_fn(eng.topk, a, 4, repeat=3)
         rows.append(Row(f"pipeline/topk4/{method}/n={n}", t, "signed top-4"))
     return rows

@@ -15,7 +15,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: table1,fig1,kernels,roofline")
+                    help="comma-separated subset: "
+                         "table1,fig1,kernels,throughput,roofline")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
@@ -29,6 +30,9 @@ def main() -> None:
     if not only or "kernels" in only:
         from benchmarks import kernels
         suites.append(("kernels", kernels.run))
+    if not only or "throughput" in only:
+        from benchmarks import throughput
+        suites.append(("throughput", throughput.run))
     if not only or "roofline" in only:
         from benchmarks import roofline_report
         suites.append(("roofline", roofline_report.run))

@@ -1,0 +1,93 @@
+"""Serving throughput: batched solves/sec across SolverPlan choices.
+
+    PYTHONPATH=src python -m benchmarks.throughput [--smoke]
+
+The paper's production regime is a *stream* of top-k queries over *stacks*
+of matrices.  Pre-engine, serving b queries meant a Python loop over b
+single-matrix solves; the engine runs one batched program per stack.  This
+suite measures both (the loop is the baseline) for each plan the planner can
+emit on this host: reference / fused-jnp / pallas-interpret backends, and
+the sharded backend when >1 host device is available.
+
+``--smoke`` runs one tiny config per backend — the CI sanity gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, sym_stack, time_fn
+from repro.engine import SolverEngine, SolverPlan
+
+FULL_CONFIGS = [  # (batch, n, k)
+    (8, 32, 4),
+    (16, 64, 4),
+    (32, 64, 8),
+    (8, 128, 4),
+]
+SMOKE_CONFIGS = [(4, 16, 2)]
+
+
+def _stack(b: int, n: int) -> jax.Array:
+    return jnp.asarray(sym_stack(0, b, n))
+
+
+def _plans(smoke: bool):
+    plans = [
+        ("jnp", SolverPlan(method="eei_tridiag", backend="jnp")),
+        ("reference", SolverPlan(method="eei_tridiag", backend="reference")),
+        ("pallas", SolverPlan(method="eei_tridiag", backend="pallas")),
+    ]
+    if not smoke:
+        plans.append(("jnp_dense", SolverPlan(method="eei_dense",
+                                              backend="jnp")))
+        plans.append(("eigh", SolverPlan(method="eigh", backend="jnp")))
+    if jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+        plans.append(("sharded", SolverPlan(
+            method="eei_tridiag", backend="sharded", mesh=mesh)))
+    return plans
+
+
+def run(smoke: bool = False) -> list[Row]:
+    rows = []
+    configs = SMOKE_CONFIGS if smoke else FULL_CONFIGS
+    for b, n, k in configs:
+        a = _stack(b, n)
+        for name, plan in _plans(smoke):
+            if plan.backend == "sharded" and b % plan.batch_axis_size:
+                continue
+            engine = SolverEngine(plan)
+            us = time_fn(engine.topk, a, k, repeat=3, warmup=1)
+            rows.append(Row(
+                f"throughput/{name}/b={b},n={n},k={k}", us,
+                f"solves_per_s={b / (us * 1e-6):.1f}"))
+        # Baseline: the pre-engine Python loop over single-matrix solves.
+        loop_engine = SolverEngine(SolverPlan(method="eei_tridiag",
+                                              backend="jnp"))
+
+        def solve_loop(stack):
+            return [loop_engine.topk(stack[i], k) for i in range(b)]
+
+        us = time_fn(solve_loop, a, repeat=3, warmup=1)
+        rows.append(Row(
+            f"throughput/python_loop/b={b},n={n},k={k}", us,
+            f"solves_per_s={b / (us * 1e-6):.1f} (pre-engine baseline)"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config per backend (CI sanity run)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config, reduced_config
-from repro.core.spectral import SpectralEngine
+from repro.engine import SolverEngine, SolverPlan
 from repro.data import make_synthetic
 from repro.models.lm import LanguageModel
 from repro.optim import AdamW
@@ -31,7 +31,7 @@ def main():
     state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
     step_fn = jax.jit(make_train_step(model, opt, compute_dtype=jnp.float32))
     src = make_synthetic(cfg, ShapeConfig("t", 32, 4, "train"))
-    engine = SpectralEngine(method="eei_tridiag", use_kernels=True)
+    engine = SolverEngine(SolverPlan(method="eei_tridiag", backend="pallas"))
 
     @jax.jit
     def probe(params, batch):
@@ -39,7 +39,7 @@ def main():
         grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
         g = grads["unembed"].astype(jnp.float32)
         gram = g @ g.T / g.shape[1]
-        return engine.topk_eigenpairs(gram, 2)
+        return engine.topk(gram, 2)
 
     for i in range(30):
         batch = {k: jnp.asarray(v) for k, v in src.global_batch_at(i).items()}

@@ -1,7 +1,8 @@
 """The paper's primary contribution: the Eigenvector-Eigenvalue Identity
 implemented as a production substrate — variant ladder (faithful), TPU-native
-tridiagonal pipeline, distributed (shard_map) forms, and the SpectralEngine
-façade consumed by the optimizer and monitoring layers.
+tridiagonal pipeline, and the sharded backend (``distributed``).  The
+framework-facing entry point is ``repro.engine.SolverEngine``; the old
+``SpectralEngine`` façade remains as a deprecation shim over it.
 """
 
 from repro.core import identity, minors, directions, distributed  # noqa: F401

@@ -1,34 +1,119 @@
-"""Distributed EEI — Algorithm 2's batch dispatch mapped onto a device mesh.
+"""Distributed EEI — the SolverEngine's ``sharded`` backend.
 
-Two shardings, composable:
+Formerly a pair of free ``shard_map`` functions; now the mesh logic is a
+proper backend (``make_sharded_backend``) registered with the engine
+registry, so distributed execution is chosen by a ``SolverPlan`` like any
+other backend.  Three axes, composable:
 
-* ``minor axis`` (components ``j``): each device owns a slice of minors,
-  computes their spectra and its column-block of ``|v[i, j]|^2``.  Zero
-  collectives until the final gather — the embarrassingly-parallel outer
-  loop the paper could not express with CPython threads.
+* ``batch axis`` (= the mesh data axis): the matrix *stack* is sharded —
+  each device runs the whole tridiagonalize -> Sturm -> EEI -> signs
+  pipeline on its slice of the batch.  Zero collectives; this is the
+  serving-throughput axis the engine pads/unpads for.
+* ``minor axis`` (components ``j``, = the mesh model axis): within the
+  dense method each device owns a slice of minors, computes their spectra
+  and its column-block of ``|v[i, j]|^2`` — the embarrassingly-parallel
+  outer loop the paper could not express with CPython threads
+  (``minor_sharded_magnitudes``).
 * ``term axis`` (product terms ``k``): the *inner* product is sharded; each
-  device holds a contiguous batch of eigenvalue-difference terms and
-  contributes a partial log-sum, combined with one ``psum``.  This is
-  Algorithm 2's ``dispatch``/``join`` (lines 9-15) verbatim, with the batch
-  boundary = the shard boundary and ``join`` = ``psum`` — thread-management
-  overhead (the paper's Amdahl bottleneck) becomes a single collective.
+  device log-reduces a contiguous batch of eigenvalue-difference terms,
+  joined with one ``psum``.  This is Algorithm 2's ``dispatch``/``join``
+  (lines 9-15) verbatim with batch boundary = shard boundary — the paper's
+  Amdahl bottleneck (thread management) becomes a single collective
+  (``term_sharded_component``).
 
-Both are ``shard_map`` programs over an explicit mesh and lower/compile on
+All programs are ``shard_map`` over an explicit mesh and lower/compile on
 the production meshes (see ``launch/dryrun.py --arch paper-eei``).
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import identity, minors
+from repro.engine.plan import SolverPlan
+from repro.engine.registry import BackendStages
 
 
-def sharded_magnitudes(a: jax.Array, mesh: Mesh, axis: str = "model"):
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` when available, else the pre-0.5 experimental API.
+
+    The replication check is disabled on both APIs (``check_vma`` new /
+    ``check_rep`` legacy): stages contain custom-call primitives (eigvalsh)
+    without replication rules, and mesh axes the specs don't mention
+    (e.g. ``model``) would otherwise fail the check.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # jax versions without the check_vma kwarg
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: batch axis = data axis
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_backend(plan: SolverPlan) -> BackendStages:
+    """Stage bundle running the fused-jnp stages under ``shard_map``.
+
+    Every stage shards its leading batch axis over ``plan.batch_axis``; the
+    pipeline is batch-parallel, so no collectives are needed until a caller
+    gathers.  The engine guarantees divisibility by padding the stack.
+    """
+    from repro.engine.backends import make_jnp_backend
+
+    inner = make_jnp_backend(plan)
+    mesh, axis = plan.mesh, plan.batch_axis
+
+    def spec(rank: int) -> P:
+        return P(*((axis,) + (None,) * (rank - 1)))
+
+    def shard(fn, in_ranks, out_ranks):
+        return _shard_map(
+            fn,
+            mesh,
+            tuple(spec(r) for r in in_ranks),
+            (tuple(spec(r) for r in out_ranks)
+             if isinstance(out_ranks, tuple) else spec(out_ranks)),
+        )
+
+    def tridiagonalize(a, with_q=True):
+        if with_q:
+            return shard(lambda x: inner.tridiagonalize(x, True),
+                         (3,), (2, 2, 3))(a)
+        d, e = shard(lambda x: inner.tridiagonalize(x, False)[:2],
+                     (3,), (2, 2))(a)
+        return d, e, None
+
+    return BackendStages(
+        name="sharded",
+        tridiagonalize=tridiagonalize,
+        tridiag_eigenvalues=shard(inner.tridiag_eigenvalues, (2, 2), 2),
+        tridiag_minor_spectra=shard(inner.tridiag_minor_spectra, (2, 2), 3),
+        dense_eigenvalues=shard(inner.dense_eigenvalues, (3,), 2),
+        dense_spectra=shard(inner.dense_spectra, (3,), (2, 3)),
+        magnitudes=shard(inner.magnitudes, (2, 3), 3),
+        tridiag_signs=shard(inner.tridiag_signs, (2, 2, 2, 3), 3),
+        dense_signs=shard(inner.dense_signs, (3, 2, 3), 3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Minor / term axes (single matrix, model axis) — as before, used by the
+# dense method when one matrix must spread over many devices.
+# ---------------------------------------------------------------------------
+
+
+def minor_sharded_magnitudes(a: jax.Array, mesh: Mesh, axis: str = "model"):
     """All ``|v[i, j]|^2`` with minors sharded over ``axis``.
 
     ``n`` must be divisible by the axis size.  Input ``a`` is replicated;
@@ -47,13 +132,12 @@ def sharded_magnitudes(a: jax.Array, mesh: Mesh, axis: str = "model"):
 
     n = a.shape[0]
     j_all = jnp.arange(n)
-    fn = jax.shard_map(
-        block,
-        mesh=mesh,
-        in_specs=(P(), P(axis)),
-        out_specs=P(None, axis),
-    )
+    fn = _shard_map(block, mesh, (P(), P(axis)), P(None, axis))
     return fn(a, j_all)
+
+
+# Backwards-compatible alias (pre-engine name).
+sharded_magnitudes = minor_sharded_magnitudes
 
 
 def term_sharded_component(
@@ -81,10 +165,5 @@ def term_sharded_component(
         ones = jnp.ones((pad,), lam.dtype)
         numer_terms = jnp.concatenate([numer_terms, ones])
         denom_terms = jnp.concatenate([denom_terms, ones])
-    fn = jax.shard_map(block, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P())
+    fn = _shard_map(block, mesh, (P(axis), P(axis)), P())
     return jnp.exp(fn(numer_terms, denom_terms))
-
-
-@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
-def _noop(mesh=None, axis=None):  # pragma: no cover - placeholder for API parity
-    return None

@@ -91,7 +91,7 @@ def logabs_denominator_dot(lam: jax.Array, chunk_i: int = 1024) -> jax.Array:
     same fusion-threshold reason as ``logabs_numerator_dot``.
     """
     n = lam.shape[0]
-    ones = jnp.ones((n,), jnp.float32)
+    ones = jnp.ones((n,), lam.dtype)
     # Diagonal exclusion without masks or aux tensors: lam[i]-lam[i] is
     # bitwise zero, so log(diff + tiny) contributes exactly log(tiny) on the
     # diagonal — subtract it per row.  Off-diagonal terms see a relative
@@ -133,7 +133,7 @@ def logabs_numerator_dot(lam: jax.Array, mu: jax.Array,
     ``prod_diff`` Pallas kernel does with explicit VMEM tiles.
     """
     n_i = lam.shape[0]
-    ones = jnp.ones((mu.shape[-1],), jnp.float32)
+    ones = jnp.ones((mu.shape[-1],), lam.dtype)
 
     def block(lam_blk):
         d = jnp.abs(lam_blk[:, None, None] - mu[None, :, :])
@@ -288,13 +288,22 @@ def component_logspace(lam, mu_j, i, eps: float | None = None) -> jax.Array:
 
 def magnitudes_from_spectra(lam: jax.Array, mu: jax.Array, logspace: bool = True,
                             reduce: str = "sum"):
-    """All ``|v[i, j]|^2`` from precomputed spectra; shape ``(n, n)``.
+    """All ``|v[i, j]|^2`` from precomputed spectra; shape ``(..., n, n)``.
 
     ``i`` indexes eigenvalues (rows), ``j`` components (columns).
     ``reduce="dot"`` selects the fused contraction form of the numerator
     (see ``logabs_numerator_dot``).  Degenerate gaps are clamped at
     ``eps * spectral scale`` so exactly-repeated eigenvalues stay finite.
+
+    Leading batch axes are supported: ``lam (..., n)``, ``mu (..., n, n-1)``
+    map elementwise over the stack (the SolverEngine's batched path).
     """
+    if lam.ndim > 1:
+        from repro.linalg.batching import vmap_leading
+
+        fn = lambda l, m: magnitudes_from_spectra(
+            l, m, logspace=logspace, reduce=reduce)
+        return vmap_leading(fn, lam.ndim - 1)(lam, mu)
     if logspace:
         scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
         floor = jnp.finfo(lam.dtype).eps * scale

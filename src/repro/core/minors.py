@@ -74,3 +74,13 @@ def all_tridiagonal_minor_bands(d: jax.Array, e: jax.Array):
     """Bands for every minor: shapes ``(n, n-1)`` and ``(n, n-2)``."""
     n = d.shape[0]
     return jax.vmap(lambda j: tridiagonal_minor_bands(d, e, j))(jnp.arange(n))
+
+
+def all_tridiagonal_minor_bands_batched(d: jax.Array, e: jax.Array):
+    """``all_tridiagonal_minor_bands`` over leading batch axes.
+
+    ``d (..., n)``, ``e (..., n-1)`` -> bands ``(..., n, n-1)``/``(..., n, n-2)``.
+    """
+    from repro.linalg.batching import vmap_leading
+
+    return vmap_leading(all_tridiagonal_minor_bands, d.ndim - 1)(d, e)

@@ -1,21 +1,26 @@
-"""SpectralEngine — the framework-facing façade over the EEI pipeline.
+"""DEPRECATED — ``SpectralEngine`` is now a thin shim over ``repro.engine``.
 
-Consumers (the ``eigenpre`` optimizer, spectral monitors, examples) ask for
-*partial* spectral information of symmetric matrices; the engine routes to one
-of three paths:
+The façade's scattered dispatch (``method`` strings + a ``use_kernels`` flag
++ lazy kernel imports) is replaced by the plan-driven
+:class:`repro.engine.SolverEngine`; see ``docs/ARCHITECTURE.md`` for the
+layering and migration table.  The mapping is mechanical:
 
-    eigh          ``jnp.linalg.eigh`` — LAPACK-equivalent oracle (the paper's
-                  "state of the art" comparison point).
-    eei_dense     paper-faithful: ``eigvalsh`` of A and of every dense minor,
-                  then EEI products (logspace by default).
-    eei_tridiag   TPU-native: Householder tridiagonalize once -> Sturm
-                  bisection for λ(A) and for all (decoupled tridiagonal)
-                  minors -> EEI on the tridiagonal form -> recurrence signs ->
-                  back-transform the requested components with Q.
+    SpectralEngine(method=m)                   -> SolverEngine(SolverPlan(
+    SpectralEngine(method=m, use_kernels=True)      method=m,
+                                                    backend="pallas"|"jnp",
+                                                    bisect_iters=...))
+    .component_magnitudes(a)                   -> .solve(a).magnitudes
+    .topk_eigenpairs(a, k)                     -> .topk(a, k)
+    .eigenvalues(a)                            -> .eigenvalues(a)
 
-The tridiagonal path is the beyond-paper contribution: minor spectra cost
-O(n^2 · iters) *total* instead of n LAPACK calls of size n-1 (O(n^4)), and
-every stage is Pallas-kernelized (``repro.kernels``).
+Behavioural note: ``component_magnitudes`` with ``method="eei_tridiag"``
+used to return magnitudes in the *tridiagonal* basis; through the engine it
+returns dense-basis magnitudes (back-transformed with ``Q``) like every
+other method — strictly more useful and oracle-comparable.
+
+New code should construct a ``SolverPlan`` (or call ``plan_for``) directly;
+this shim exists only so pre-engine callers keep working and will be removed
+once nothing imports it.
 """
 
 from __future__ import annotations
@@ -24,120 +29,40 @@ import dataclasses
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import identity, minors
-from repro.core.directions import inverse_iteration_signs, tridiagonal_signs
-from repro.linalg import householder, sturm
+# Submodule imports (not the package) so this shim stays importable while
+# ``repro.engine`` itself is mid-initialization (engine -> backends ->
+# repro.core -> this module).
+from repro.engine.engine import SolverEngine
+from repro.engine.plan import SolverPlan
 
 Method = Literal["eigh", "eei_dense", "eei_tridiag"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SpectralEngine:
-    """Partial-spectrum queries over symmetric matrices."""
+    """Deprecated pre-engine façade; delegates to ``repro.engine``."""
 
     method: Method = "eei_tridiag"
-    use_kernels: bool = False  # route products/bisection through Pallas
+    use_kernels: bool = False  # historical flag -> backend="pallas"
     bisect_iters: int = 0  # 0 -> dtype default
 
-    # -- eigenvalues ---------------------------------------------------------
+    @property
+    def engine(self) -> SolverEngine:
+        return SolverEngine(SolverPlan(
+            method=self.method,
+            backend="pallas" if self.use_kernels else "jnp",
+            bisect_iters=self.bisect_iters,
+        ))
 
     def eigenvalues(self, a: jax.Array) -> jax.Array:
-        if self.method == "eigh" or self.method == "eei_dense":
-            return jnp.linalg.eigvalsh(a)
-        d, e, _ = householder.tridiagonalize(a, with_q=False)
-        return self._tridiag_eigvals(d, e)
-
-    def _tridiag_eigvals(self, d, e):
-        if self.use_kernels:
-            from repro.kernels.sturm import ops as sturm_ops
-
-            return sturm_ops.sturm_eigenvalues(
-                d[None], e[None], n_iter=self.bisect_iters
-            )[0]
-        return sturm.bisect_eigenvalues(d, e, n_iter=self.bisect_iters)
-
-    def _tridiag_eigvals_batched(self, d, e):
-        if self.use_kernels:
-            from repro.kernels.sturm import ops as sturm_ops
-
-            return sturm_ops.sturm_eigenvalues(d, e, n_iter=self.bisect_iters)
-        return sturm.bisect_eigenvalues_batched(d, e, n_iter=self.bisect_iters)
-
-    # -- component magnitudes -------------------------------------------------
+        return self.engine.eigenvalues(a)
 
     def component_magnitudes(self, a: jax.Array) -> jax.Array:
-        """All ``|v[i, j]|^2`` — shape (n, n); rows are eigenvectors.
-
-        For the tridiagonal path these are magnitudes of the *tridiagonal*
-        eigenvectors ``w``; dense-basis magnitudes require the back-transform
-        (see ``topk_eigenpairs``).
-        """
-        if self.method == "eigh":
-            _, v = jnp.linalg.eigh(a)
-            return (v * v).T
-        if self.method == "eei_dense":
-            lam = jnp.linalg.eigvalsh(a)
-            mu = identity.minor_spectra(a)
-            return self._magnitudes(lam, mu)
-        d, e, _ = householder.tridiagonalize(a, with_q=False)
-        lam, mu = self._tridiag_spectra(d, e)
-        return self._magnitudes(lam, mu)
-
-    def _tridiag_spectra(self, d, e):
-        lam = self._tridiag_eigvals(d, e)
-        dm, em = minors.all_tridiagonal_minor_bands(d, e)
-        mu = self._tridiag_eigvals_batched(dm, em)
-        return lam, mu
-
-    def _magnitudes(self, lam, mu):
-        if self.use_kernels:
-            from repro.kernels.prod_diff import ops as pd_ops
-
-            return pd_ops.eei_magnitudes(lam, mu)
-        return identity.magnitudes_from_spectra(lam, mu, logspace=True)
-
-    # -- signed eigenpairs -----------------------------------------------------
+        """All ``|v[i, j]|^2`` — shape (..., n, n); rows are eigenvectors."""
+        return self.engine.solve(a).magnitudes
 
     def topk_eigenpairs(self, a: jax.Array, k: int, largest: bool = True):
-        """Top-k (eigenvalue, signed eigenvector) pairs in the dense basis.
-
-        This is the partial-spectrum query the paper's use cases (web ranking,
-        signal preprocessing, spectral preconditioning) actually issue — the
-        regime where EEI beats full eigh.
-        """
-        n = a.shape[0]
-        if self.method == "eigh":
-            lam, v = jnp.linalg.eigh(a)
-            idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
-            return lam[idx], v[:, idx].T
-
-        if self.method == "eei_dense":
-            lam = jnp.linalg.eigvalsh(a)
-            mu = identity.minor_spectra(a)
-            mags = self._magnitudes(lam, mu)
-            idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
-
-            def signed(i):
-                return inverse_iteration_signs(a, lam[i], mags[i])
-
-            vecs = jax.vmap(signed)(idx)
-            return lam[idx], _renormalize(vecs)
-
-        d, e, q = householder.tridiagonalize(a, with_q=True)
-        lam, mu = self._tridiag_spectra(d, e)
-        mags = self._magnitudes(lam, mu)
-        idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
-
-        def signed(i):
-            w = tridiagonal_signs(d, e, lam[i], mags[i])
-            return q @ w  # back-transform: v = Q w
-
-        vecs = jax.vmap(signed)(idx)
-        return lam[idx], _renormalize(vecs)
-
-
-def _renormalize(vecs: jax.Array) -> jax.Array:
-    nrm = jnp.linalg.norm(vecs, axis=-1, keepdims=True)
-    return vecs / jnp.maximum(nrm, 1e-30)
+        """Top-k (eigenvalue, signed eigenvector) pairs in the dense basis."""
+        lam, vecs = self.engine.topk(a, k, largest=largest)
+        return lam, vecs

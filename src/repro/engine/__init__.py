@@ -1,0 +1,31 @@
+"""The EEI SolverEngine subsystem: plan -> backend registry -> engine.
+
+    from repro.engine import SolverEngine, SolverPlan, plan_for
+
+    plan = plan_for(stack.shape, k=4, mesh=mesh)     # or SolverPlan(...)
+    engine = SolverEngine(plan)
+    lam, mags = engine.solve(stack)                  # (b, n), (b, n, n)
+    top = engine.topk(stack, k=4)                    # (b, k), (b, k, n)
+
+See ``docs/ARCHITECTURE.md`` for the layering and the deprecation path of
+the old ``repro.core.spectral.SpectralEngine`` façade.
+"""
+
+from repro.engine.plan import (  # noqa: F401
+    BackendName,
+    Method,
+    SolverPlan,
+    plan_for,
+)
+from repro.engine.registry import (  # noqa: F401
+    BackendStages,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.engine import backends as _backends  # noqa: F401  (registers defaults)
+from repro.engine.engine import (  # noqa: F401
+    SolveResult,
+    SolverEngine,
+    TopkResult,
+)

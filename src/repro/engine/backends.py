@@ -1,0 +1,155 @@
+"""Default backends: reference, fused-jnp, Pallas.
+
+Each factory bundles batched stage implementations (see ``registry``):
+
+    reference   straightforward jnp — unfused logspace sums, pure-JAX Sturm
+                bisection.  The numerical oracle the faster backends are
+                tested against, and the fallback when nothing else applies.
+    jnp         the optimized portable path — the numerator/denominator
+                reductions expressed as fused ones-contractions
+                (``identity.*_dot``: producer fuses into the MXU dot, no
+                (b, n, n, n) temps).
+    pallas      the kernelized path — Sturm bisection and the prod-diff
+                log-sum run as Pallas TPU kernels (interpret mode off-TPU),
+                VMEM-tiled.
+
+The ``sharded`` backend lives in ``repro.core.distributed`` (it owns the
+mesh/axis logic) and is registered here lazily to avoid an import cycle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import identity, minors
+from repro.core.directions import inverse_iteration_signs, tridiagonal_signs
+from repro.engine.plan import SolverPlan
+from repro.engine.registry import BackendStages, register_backend
+from repro.linalg import householder, sturm
+
+# ---------------------------------------------------------------------------
+# Stage implementations shared across backends
+# ---------------------------------------------------------------------------
+
+
+def _tridiagonalize(a: jax.Array, with_q: bool = True):
+    return householder.tridiagonalize_batched(a, with_q=with_q)
+
+
+def _dense_eigenvalues(a: jax.Array):
+    return jax.vmap(jnp.linalg.eigvalsh)(a)
+
+
+def _dense_spectra(a: jax.Array):
+    lam = _dense_eigenvalues(a)
+    mu = jax.vmap(identity.minor_spectra)(a)
+    return lam, mu
+
+
+def _tridiag_signs(d, e, lam_sel, mag_sel):
+    """Selected signed tridiagonal eigenvectors, ``(b, k, n)``."""
+    inner = jax.vmap(tridiagonal_signs, in_axes=(None, None, 0, 0))
+    return jax.vmap(inner)(d, e, lam_sel, mag_sel)
+
+
+def _dense_signs(a, lam_sel, mag_sel):
+    """Selected signed dense eigenvectors via inverse iteration, ``(b, k, n)``."""
+    inner = jax.vmap(inverse_iteration_signs, in_axes=(None, 0, 0))
+    return jax.vmap(inner)(a, lam_sel, mag_sel)
+
+
+# ---------------------------------------------------------------------------
+# reference / jnp
+# ---------------------------------------------------------------------------
+
+
+def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> BackendStages:
+    iters = plan.bisect_iters
+
+    def tridiag_eigenvalues(d, e):
+        return sturm.bisect_eigenvalues_batched(d, e, n_iter=iters)
+
+    def tridiag_minor_spectra(d, e):
+        dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
+        return sturm.bisect_eigenvalues_batched(dm, em, n_iter=iters)
+
+    def magnitudes(lam, mu):
+        return identity.magnitudes_from_spectra(
+            lam, mu, logspace=True, reduce=reduce)
+
+    return BackendStages(
+        name=name,
+        tridiagonalize=_tridiagonalize,
+        tridiag_eigenvalues=tridiag_eigenvalues,
+        tridiag_minor_spectra=tridiag_minor_spectra,
+        dense_eigenvalues=_dense_eigenvalues,
+        dense_spectra=_dense_spectra,
+        magnitudes=magnitudes,
+        tridiag_signs=_tridiag_signs,
+        dense_signs=_dense_signs,
+    )
+
+
+def make_reference_backend(plan: SolverPlan) -> BackendStages:
+    return _make_jnp_like("reference", "sum", plan)
+
+
+def make_jnp_backend(plan: SolverPlan) -> BackendStages:
+    return _make_jnp_like("jnp", "dot", plan)
+
+
+# ---------------------------------------------------------------------------
+# pallas
+# ---------------------------------------------------------------------------
+
+
+def make_pallas_backend(plan: SolverPlan) -> BackendStages:
+    # Kernel modules are imported lazily (mirrors the seed's lazy-kernel
+    # convention: importing the engine must not require a Pallas-capable
+    # install until a pallas plan actually runs).
+    from repro.kernels.prod_diff import ops as pd_ops
+    from repro.kernels.sturm import ops as sturm_ops
+
+    iters = plan.bisect_iters
+
+    def tridiag_eigenvalues(d, e):
+        return sturm_ops.sturm_eigenvalues(d, e, n_iter=iters)
+
+    def tridiag_minor_spectra(d, e):
+        b, n = d.shape
+        dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
+        mu = sturm_ops.sturm_eigenvalues(
+            dm.reshape(b * n, n - 1), em.reshape(b * n, n - 2), n_iter=iters)
+        return mu.reshape(b, n, n - 1)
+
+    def magnitudes(lam, mu):
+        return jax.vmap(pd_ops.eei_magnitudes)(lam, mu)
+
+    return BackendStages(
+        name="pallas",
+        tridiagonalize=_tridiagonalize,
+        tridiag_eigenvalues=tridiag_eigenvalues,
+        tridiag_minor_spectra=tridiag_minor_spectra,
+        dense_eigenvalues=_dense_eigenvalues,
+        dense_spectra=_dense_spectra,
+        magnitudes=magnitudes,
+        tridiag_signs=_tridiag_signs,
+        dense_signs=_dense_signs,
+    )
+
+
+def _sharded_factory(plan: SolverPlan) -> BackendStages:
+    from repro.core.distributed import make_sharded_backend
+
+    return make_sharded_backend(plan)
+
+
+def register_default_backends() -> None:
+    register_backend("reference", make_reference_backend)
+    register_backend("jnp", make_jnp_backend)
+    register_backend("pallas", make_pallas_backend)
+    register_backend("sharded", _sharded_factory)
+
+
+register_default_backends()

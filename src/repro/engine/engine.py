@@ -1,0 +1,196 @@
+"""SolverEngine — plan-driven, batched execution of the EEI pipeline.
+
+``SolverEngine.solve(a)`` / ``.topk(a, k)`` accept a single symmetric matrix
+``(n, n)`` or a stack ``(b, n, n)`` and run the plan's method on the plan's
+backend end-to-end batched — this is the serving path for streams of top-k
+queries over stacks of matrices (the regime the paper's use cases issue).
+
+Pipelines (all arrays carry the leading stack axis):
+
+    eigh         vmapped LAPACK — the oracle / small-n fallback.
+    eei_dense    dense minor spectra -> EEI products.
+    eei_tridiag  Householder tridiagonalize -> Sturm bisection for λ(A) and
+                 all decoupled tridiagonal minors -> EEI on the tridiagonal
+                 form -> recurrence signs -> back-transform with Q, so the
+                 returned tables live in the *dense* basis like the others.
+
+Jitted programs are cached per ``(plan, n, k)``; the sharded backend's stack
+is padded up to a multiple of the mesh batch axis and sliced back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import registry
+from repro.engine.plan import SolverPlan, plan_for
+
+
+class SolveResult(NamedTuple):
+    """Full-table result: ``eigenvalues (..., n)`` ascending and the
+    component-magnitude table ``magnitudes (..., n, n)`` (rows are
+    eigenvectors, dense basis)."""
+
+    eigenvalues: jax.Array
+    magnitudes: jax.Array
+
+
+class TopkResult(NamedTuple):
+    """``eigenvalues (..., k)`` ascending and signed, unit-norm eigenvectors
+    ``vectors (..., k, n)`` (rows are eigenvectors, dense basis)."""
+
+    eigenvalues: jax.Array
+    vectors: jax.Array
+
+
+def _renormalize(vecs: jax.Array) -> jax.Array:
+    nrm = jnp.linalg.norm(vecs, axis=-1, keepdims=True)
+    return vecs / jnp.maximum(nrm, 1e-30)
+
+
+def _batched_eigh(a: jax.Array):
+    return jax.vmap(jnp.linalg.eigh)(a)
+
+
+def _back_transform(w: jax.Array, q: jax.Array) -> jax.Array:
+    """Rows ``w[.., i, :]`` of tridiagonal eigenvectors -> dense ``v = Q w``."""
+    return jnp.einsum("...in,...jn->...ij", w, q)
+
+
+@functools.lru_cache(maxsize=None)
+def _solve_program(plan: SolverPlan):
+    stages = registry.get_backend(plan)
+
+    def fn(a):
+        if plan.method == "eigh":
+            lam, v = _batched_eigh(a)
+            return SolveResult(lam, jnp.swapaxes(v * v, -1, -2))
+        if plan.method == "eei_dense":
+            lam, mu = stages.dense_spectra(a)
+            return SolveResult(lam, stages.magnitudes(lam, mu))
+        d, e, q = stages.tridiagonalize(a, True)
+        lam = stages.tridiag_eigenvalues(d, e)
+        mu = stages.tridiag_minor_spectra(d, e)
+        w_mags = stages.magnitudes(lam, mu)  # tridiagonal basis
+        w = stages.tridiag_signs(d, e, lam, w_mags)  # all n rows
+        v = _back_transform(_renormalize(w), q)
+        mags = v * v
+        return SolveResult(lam, mags / jnp.sum(mags, axis=-1, keepdims=True))
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _topk_program(plan: SolverPlan, k: int, largest: bool):
+    stages = registry.get_backend(plan)
+
+    def fn(a):
+        n = a.shape[-1]
+        idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
+        if plan.method == "eigh":
+            lam, v = _batched_eigh(a)
+            return TopkResult(
+                lam[..., idx], jnp.swapaxes(v[..., :, idx], -1, -2))
+        if plan.method == "eei_dense":
+            lam, mu = stages.dense_spectra(a)
+            mags = stages.magnitudes(lam, mu)
+            lam_s, mag_s = lam[..., idx], mags[..., idx, :]
+            return TopkResult(lam_s, _renormalize(
+                stages.dense_signs(a, lam_s, mag_s)))
+        d, e, q = stages.tridiagonalize(a, True)
+        lam = stages.tridiag_eigenvalues(d, e)
+        mu = stages.tridiag_minor_spectra(d, e)
+        mags = stages.magnitudes(lam, mu)
+        lam_s, mag_s = lam[..., idx], mags[..., idx, :]
+        w = stages.tridiag_signs(d, e, lam_s, mag_s)
+        return TopkResult(lam_s, _renormalize(_back_transform(w, q)))
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _eigenvalues_program(plan: SolverPlan):
+    stages = registry.get_backend(plan)
+
+    def fn(a):
+        if plan.method in ("eigh", "eei_dense"):
+            return stages.dense_eigenvalues(a)
+        d, e, _ = stages.tridiagonalize(a, False)
+        return stages.tridiag_eigenvalues(d, e)
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEngine:
+    """Batched EEI solver executing one :class:`SolverPlan`."""
+
+    plan: SolverPlan = SolverPlan()
+
+    @classmethod
+    def for_problem(cls, shape: tuple, **kwargs) -> "SolverEngine":
+        """Engine with a plan inferred from problem shape (see ``plan_for``)."""
+        return cls(plan_for(shape, **kwargs))
+
+    # -- public batched API ---------------------------------------------------
+
+    def solve(self, a: jax.Array) -> SolveResult:
+        """Eigenvalues + the full ``|v[i, j]|^2`` table for ``a``.
+
+        ``a`` is ``(n, n)`` or a stack ``(b, n, n)``; results carry the same
+        leading axis.  On every backend the magnitudes live in the dense
+        basis (the tridiagonal path back-transforms with ``Q``).
+        """
+        return self._run(_solve_program(self.plan), a)
+
+    def topk(self, a: jax.Array, k: int, largest: bool = True) -> TopkResult:
+        """Top-k (eigenvalue, signed unit eigenvector) pairs per matrix."""
+        if k < 1 or k > a.shape[-1]:
+            raise ValueError(f"k={k} out of range for n={a.shape[-1]}")
+        return self._run(_topk_program(self.plan, int(k), bool(largest)), a)
+
+    def eigenvalues(self, a: jax.Array) -> jax.Array:
+        """Eigenvalues only, ``(..., n)`` ascending."""
+        return self._run(_eigenvalues_program(self.plan), a)
+
+    # -- execution helpers ----------------------------------------------------
+
+    def _run(self, program, a: jax.Array):
+        a = jnp.asarray(a)
+        if a.ndim not in (2, 3):
+            raise ValueError(f"expected (n, n) or (b, n, n), got {a.shape}")
+        squeeze = a.ndim == 2
+        if squeeze:
+            a = a[None]
+        if self.plan.precision is not None:
+            a = a.astype(jnp.dtype(
+                {"float32": jnp.float32, "float64": jnp.float64}
+                [self.plan.precision]))
+        b = a.shape[0]
+        if b == 0:
+            raise ValueError("cannot solve an empty matrix stack")
+        step = self.plan.max_batch if self.plan.max_batch > 0 else b
+        outs = [self._run_chunk(program, a[i0:i0 + step])
+                for i0 in range(0, b, step)]
+        out = outs[0] if len(outs) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+        return jax.tree.map(lambda x: x[0], out) if squeeze else out
+
+    def _run_chunk(self, program, a: jax.Array):
+        # The sharded backend needs the stack divisible by the mesh batch
+        # axis; pad by repeating the first matrix and slice the result back.
+        b = a.shape[0]
+        mult = self.plan.batch_axis_size
+        pad = (-b) % mult
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+        out = program(a)
+        if pad:
+            out = jax.tree.map(lambda x: x[:b], out)
+        return out

@@ -1,0 +1,138 @@
+"""SolverPlan — one immutable record of every EEI pipeline choice.
+
+Before this subsystem the choice of implementation was scattered across four
+dispatch sites (the ``identity.VARIANTS`` string ladder, the
+``method``/``use_kernels`` flags of ``SpectralEngine``, the free ``shard_map``
+functions in ``core.distributed`` and per-kernel ``interpret`` plumbing).  A
+``SolverPlan`` captures all of it in one hashable value:
+
+    method        eigh | eei_dense | eei_tridiag   (what maths runs)
+    backend       reference | jnp | pallas | sharded   (who runs each stage)
+    mesh / axes   device topology for the sharded backend
+    precision     None (keep input dtype) | "float32" | "float64"
+    bisect_iters  Sturm bisection iterations (0 -> dtype default)
+    max_batch     microbatch bound for very long query stacks (0 -> no bound)
+
+Plans are produced by :func:`plan_for` from problem shape + device topology,
+or constructed explicitly.  The registry maps ``plan.backend`` to stage
+implementations; ``SolverEngine`` executes the plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+
+Method = Literal["eigh", "eei_dense", "eei_tridiag"]
+BackendName = Literal["reference", "jnp", "pallas", "sharded"]
+
+#: ``n`` below which a full LAPACK ``eigh`` beats any EEI pipeline (the
+#: paper's crossover regime; Table 1 shows speedup < 1 for small n).
+EIGH_CROSSOVER_N = 24
+
+#: ``n`` up to which dense minor spectra (n LAPACK calls of size n-1) are
+#: cheaper than tridiagonalize + Sturm on this class of hardware.
+DENSE_CROSSOVER_N = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverPlan:
+    """Immutable, hashable description of one way to run the EEI pipeline."""
+
+    method: Method = "eei_tridiag"
+    backend: BackendName = "jnp"
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axis: str = "data"
+    minor_axis: Optional[str] = "model"
+    precision: Optional[str] = None  # None -> keep input dtype
+    bisect_iters: int = 0  # 0 -> dtype default
+    max_batch: int = 0  # 0 -> solve the whole stack in one program
+
+    def __post_init__(self):
+        if self.method not in ("eigh", "eei_dense", "eei_tridiag"):
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.backend not in ("reference", "jnp", "pallas", "sharded"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.precision not in (None, "float32", "float64"):
+            raise ValueError(f"unknown precision {self.precision!r}")
+        if self.backend == "sharded":
+            if self.mesh is None:
+                raise ValueError("backend='sharded' requires a mesh")
+            if self.batch_axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"batch_axis {self.batch_axis!r} not in mesh axes "
+                    f"{self.mesh.axis_names}")
+
+    @property
+    def batch_axis_size(self) -> int:
+        """Devices along the batch (data) axis; 1 for unsharded backends."""
+        if self.backend != "sharded" or self.mesh is None:
+            return 1
+        return self.mesh.shape[self.batch_axis]
+
+
+def plan_for(
+    shape: tuple,
+    *,
+    k: Optional[int] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    method: Optional[Method] = None,
+    backend: Optional[BackendName] = None,
+    precision: Optional[str] = None,
+    bisect_iters: int = 0,
+) -> SolverPlan:
+    """Pick a plan from problem shape + device topology.
+
+    ``shape`` is ``(n, n)`` or ``(b, n, n)``; ``k`` is the number of
+    eigenpairs the caller will ask for (``None`` = the full table).  Explicit
+    ``method``/``backend`` keywords override the heuristics; everything else
+    is derived:
+
+    * tiny matrices (or full-spectrum queries on small ones) route to the
+      LAPACK oracle — the paper's own conclusion is that EEI wins only for
+      *partial* outputs past a crossover size;
+    * small matrices keep dense minors (n eigvalsh calls beat the
+      tridiagonalization constant); larger ones take the tridiagonal path;
+    * a mesh with >1 device along its batch axis and a divisible stack picks
+      the sharded backend; a real TPU picks Pallas kernels; the fused-jnp
+      backend is the portable default.
+    """
+    if len(shape) not in (2, 3):
+        raise ValueError(f"expected (n, n) or (b, n, n), got {shape}")
+    n = shape[-1]
+    b = shape[0] if len(shape) == 3 else 1
+
+    if method is None:
+        if n <= EIGH_CROSSOVER_N or (k is not None and k >= n):
+            method = "eigh"
+        elif n <= DENSE_CROSSOVER_N:
+            method = "eei_dense"
+        else:
+            method = "eei_tridiag"
+
+    if backend is None:
+        if (mesh is not None and "data" in mesh.axis_names
+                and mesh.shape["data"] > 1 and b % mesh.shape["data"] == 0):
+            backend = "sharded"
+        elif jax.default_backend() == "tpu":
+            backend = "pallas"
+        else:
+            backend = "jnp"
+    if backend != "sharded":
+        mesh = None
+
+    minor_axis = None
+    if mesh is not None and "model" in mesh.axis_names:
+        minor_axis = "model"
+
+    return SolverPlan(
+        method=method,
+        backend=backend,
+        mesh=mesh,
+        batch_axis="data",
+        minor_axis=minor_axis,
+        precision=precision,
+        bisect_iters=bisect_iters,
+    )

@@ -1,0 +1,67 @@
+"""Backend registry — the single dispatch point of the EEI pipeline.
+
+A *backend* is a named bundle of stage implementations.  Every stage is
+batched: arrays carry a leading stack axis ``b`` end-to-end.
+
+    tridiagonalize(a, with_q)        (b, n, n) -> d (b, n), e (b, n-1), q|None
+    tridiag_eigenvalues(d, e)        (b, n), (b, n-1) -> lam (b, n)
+    tridiag_minor_spectra(d, e)      (b, n), (b, n-1) -> mu (b, n, n-1)
+    dense_eigenvalues(a)             (b, n, n) -> lam (b, n)
+    dense_spectra(a)                 (b, n, n) -> lam (b, n), mu (b, n, n-1)
+    magnitudes(lam, mu)              -> |v[i, j]|^2 table (b, n, n)
+    tridiag_signs(d, e, lam_s, mag_s)  selected rows -> signed w (b, k, n)
+    dense_signs(a, lam_s, mag_s)       selected rows -> signed v (b, k, n)
+
+Backends register a *factory* taking the ``SolverPlan`` (the sharded backend
+needs the mesh; stateless backends ignore it).  This replaces the former
+string/flag dispatch scattered over ``identity.VARIANTS``,
+``SpectralEngine(method=..., use_kernels=...)`` and the free functions of
+``core.distributed``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.engine.plan import SolverPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendStages:
+    """Stage implementations one backend provides (all batched)."""
+
+    name: str
+    tridiagonalize: Callable
+    tridiag_eigenvalues: Callable
+    tridiag_minor_spectra: Callable
+    dense_eigenvalues: Callable
+    dense_spectra: Callable
+    magnitudes: Callable
+    tridiag_signs: Callable
+    dense_signs: Callable
+
+
+BackendFactory = Callable[[SolverPlan], BackendStages]
+
+_REGISTRY: Dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str, factory: BackendFactory) -> None:
+    """Register (or replace) the factory for backend ``name``."""
+    _REGISTRY[name] = factory
+
+
+def get_backend(plan: SolverPlan) -> BackendStages:
+    """Resolve ``plan.backend`` to its stage bundle."""
+    try:
+        factory = _REGISTRY[plan.backend]
+    except KeyError:
+        raise KeyError(
+            f"no backend {plan.backend!r} registered; "
+            f"available: {sorted(_REGISTRY)}") from None
+    return factory(plan)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)

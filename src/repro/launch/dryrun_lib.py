@@ -105,6 +105,8 @@ def compile_and_extract(lowered) -> dict:
     compiled = lowered.compile()
     compile_s = time.monotonic() - t0
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     coll = collective_bytes(text)
     mem: dict[str, Any] = {}

@@ -1,0 +1,14 @@
+"""Leading-axis vmap lifting shared by the batched linalg entry points."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+def vmap_leading(fn: Callable, extra_ndim: int) -> Callable:
+    """Lift ``fn`` over ``extra_ndim`` leading batch axes of its arguments."""
+    for _ in range(extra_ndim):
+        fn = jax.vmap(fn)
+    return fn

@@ -75,6 +75,20 @@ def tridiagonalize(a: jax.Array, with_q: bool = True):
     return d, e, (q_fin if with_q else None)
 
 
+def tridiagonalize_batched(a: jax.Array, with_q: bool = True):
+    """``tridiagonalize`` mapped over leading batch axes of ``a (..., n, n)``.
+
+    Returns ``(d, e, q)`` with shapes ``(..., n)``, ``(..., n-1)`` and
+    ``(..., n, n)`` (``q`` is ``None`` when ``with_q=False``).  Each matrix in
+    the stack jits as one fused program — this is the batched entry point the
+    SolverEngine's tridiagonal stage uses.
+    """
+    from repro.linalg.batching import vmap_leading
+
+    return vmap_leading(lambda m: tridiagonalize(m, with_q=with_q),
+                        a.ndim - 2)(a)
+
+
 def tridiagonal_matrix(d: jax.Array, e: jax.Array) -> jax.Array:
     """Dense ``tridiag(e, d, e)`` for testing."""
     n = d.shape[0]

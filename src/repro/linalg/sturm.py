@@ -101,7 +101,7 @@ def bisect_eigenvalues(d: jax.Array, e: jax.Array, n_iter: int = 0) -> jax.Array
 @functools.partial(jax.jit, static_argnames=("n_iter",))
 def bisect_eigenvalues_batched(d: jax.Array, e: jax.Array, n_iter: int = 0):
     """Batched over leading axes: ``d (..., n)``, ``e (..., n-1)``."""
+    from repro.linalg.batching import vmap_leading
+
     fn = lambda dd, ee: bisect_eigenvalues(dd, ee, n_iter=n_iter)
-    for _ in range(d.ndim - 1):
-        fn = jax.vmap(fn)
-    return fn(d, e)
+    return vmap_leading(fn, d.ndim - 1)(d, e)

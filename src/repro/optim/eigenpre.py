@@ -8,7 +8,7 @@ applies a low-rank spectral transform
 
     P(g) = g + sum_i (f(lam_i) - 1) u_i (u_i^T g)      f(lam) = rsqrt(lam+eps)
 
-using only the top-k eigenpairs from ``repro.core.SpectralEngine`` — i.e. the
+using only the top-k eigenpairs from ``repro.engine.SolverEngine`` — i.e. the
 EEI pipeline (tridiagonalize -> Sturm -> EEI -> signed back-transform), and
 falls back to identity for non-matrix params.
 
@@ -25,7 +25,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.spectral import SpectralEngine
+from repro.engine import SolverEngine, SolverPlan
 from repro.optim.adamw import AdamW, AdamWState
 
 
@@ -46,7 +46,7 @@ class EigenPre:
     beta_gram: float = 0.95
     eps: float = 1e-6
     max_dim: int = 1024  # precondition only dims <= this (monitoring regime)
-    engine: SpectralEngine = SpectralEngine(method="eei_tridiag")
+    engine: SolverEngine = SolverEngine(SolverPlan(method="eei_tridiag"))
 
     def _eligible(self, p) -> bool:
         return p.ndim == 2 and p.shape[0] <= self.max_dim
@@ -93,7 +93,7 @@ class EigenPre:
                 return val, vec
 
             def compute(_):
-                lam, v = self.engine.topk_eigenpairs(
+                lam, v = self.engine.topk(
                     gr + self.eps * jnp.eye(gr.shape[0], dtype=gr.dtype),
                     min(self.rank, gr.shape[0]),
                 )

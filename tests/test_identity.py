@@ -8,7 +8,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import identity, minors, numpy_ref
 from repro.core.spectral import SpectralEngine
@@ -133,6 +133,25 @@ def test_property_degenerate_spectrum_is_finite(seed):
     a = jnp.asarray(q @ np.diag(lam) @ q.T)
     mags = identity.eigenmatrix_magnitudes(a)
     assert bool(jnp.all(jnp.isfinite(mags)))
+
+
+def test_dot_reductions_preserve_x64_dtype():
+    """Regression: the ones-contraction forms used to hardcode float32 ones,
+    silently downcasting the fused reduction under x64."""
+    a = _sym(2, 12)
+    lam = jnp.linalg.eigvalsh(a).astype(jnp.float64)
+    mu = identity.minor_spectra(a).astype(jnp.float64)
+    log_den = identity.logabs_denominator_dot(lam)
+    log_num = identity.logabs_numerator_dot(lam, mu)
+    assert log_den.dtype == jnp.float64
+    assert log_num.dtype == jnp.float64
+    # and the values agree with the unfused f64 reductions at f64 precision
+    np.testing.assert_allclose(np.asarray(log_den),
+                               np.asarray(identity.logabs_denominator(lam)),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(log_num),
+                               np.asarray(identity.logabs_numerator(lam, mu)),
+                               rtol=1e-12, atol=1e-12)
 
 
 def test_minor_construction_traced_index():

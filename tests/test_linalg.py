@@ -7,7 +7,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import minors
 from repro.linalg import householder, sturm

@@ -103,7 +103,7 @@ def test_distributed_eei_single_device_mesh():
     a = rng.standard_normal((8, 8))
     a = jnp.asarray((a + a.T) / 2, jnp.float32)
     with mesh:
-        mags = distributed.sharded_magnitudes(a, mesh, axis="model")
+        mags = distributed.minor_sharded_magnitudes(a, mesh, axis="model")
     ref = identity.eigenmatrix_magnitudes(a)
     np.testing.assert_allclose(np.asarray(mags), np.asarray(ref), rtol=1e-4,
                                atol=1e-5)
@@ -113,6 +113,25 @@ def test_distributed_eei_single_device_mesh():
         comp = distributed.term_sharded_component(lam, mu[3], 2, mesh,
                                                   axis="model")
     np.testing.assert_allclose(float(comp), float(ref[2, 3]), rtol=1e-4)
+
+
+def test_engine_sharded_backend_single_device_mesh():
+    """The SolverEngine sharded backend (batch axis = data) on a host mesh —
+    the same code path the production meshes run."""
+    from repro.engine import SolverEngine, SolverPlan
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((3, 12, 12))
+    a = jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2, jnp.float32)
+    plan = SolverPlan(method="eei_tridiag", backend="sharded", mesh=mesh)
+    lam, mags = SolverEngine(plan).solve(a)
+    lam_ref, v_ref = jax.vmap(jnp.linalg.eigh)(a)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(lam_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(mags), np.asarray(jnp.swapaxes(v_ref * v_ref, -1, -2)),
+        rtol=1e-3, atol=1e-4)
 
 
 def test_input_specs_cover_all_cells():
