@@ -1,6 +1,6 @@
 """Serving throughput: batched solves/sec across SolverPlan choices.
 
-    PYTHONPATH=src python -m benchmarks.throughput [--smoke]
+    PYTHONPATH=src python -m benchmarks.throughput [--smoke] [--out PATH]
 
 The paper's production regime is a *stream* of top-k queries over *stacks*
 of matrices.  Pre-engine, serving b queries meant a Python loop over b
@@ -9,15 +9,31 @@ suite measures both (the loop is the baseline) for each plan the planner can
 emit on this host: reference / fused-jnp / pallas-interpret backends, and
 the sharded backend when >1 host device is available.
 
-``--smoke`` runs one tiny config per backend — the CI sanity gate.
+It also measures the kernel-grid change this repo's PR 2 made: the pallas
+magnitudes stage as one natively batched 4-D ``(b, i, j, k)`` grid
+(``eei_magnitudes_batched``) against the PR-1 baseline of ``jax.vmap`` over
+the per-matrix 3-D kernel, on a ``(64, 64, 64)`` stack.
+
+``--smoke`` runs one tiny config per backend plus the kernel-grid
+comparison, writes the ``BENCH_throughput.json`` artifact, and exits
+non-zero if a gated metric regresses more than 20% against the committed
+numbers in ``benchmarks/baselines/``.  The gated metric is the
+batched-vs-vmapped kernel speedup (a within-run ratio of two same-shaped
+programs, so it transfers across CI hardware); the loop-normalized engine
+throughput is recorded in the artifact but not gated — the Python-loop
+baseline is dispatch-bound and too load-sensitive to gate on.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import Row, sym_stack, time_fn
 from repro.engine import SolverEngine, SolverPlan
@@ -29,6 +45,14 @@ FULL_CONFIGS = [  # (batch, n, k)
     (8, 128, 4),
 ]
 SMOKE_CONFIGS = [(4, 16, 2)]
+
+#: The kernel-grid comparison stack (acceptance config for the batched grid).
+KERNEL_GRID_B, KERNEL_GRID_N = 64, 64
+
+BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
+
+#: Allowed relative regression against the committed baseline metrics.
+REGRESSION_TOLERANCE = 0.20
 
 
 def _stack(b: int, n: int) -> jax.Array:
@@ -52,8 +76,51 @@ def _plans(smoke: bool):
     return plans
 
 
-def run(smoke: bool = False) -> list[Row]:
+def kernel_grid_comparison(metrics: dict) -> list[Row]:
+    """Natively batched 4-D grid vs vmapped legacy 3-D grid (PR-1 baseline).
+
+    Times only the magnitudes stage (where the grids differ) on a
+    ``(KERNEL_GRID_B, n, n)`` stack's spectra.  Samples are interleaved and
+    best-of-N so external machine load (the usual CI hazard) degrades both
+    grids' windows alike instead of skewing the gated ratio.
+    """
+    import time as _time
+
+    from repro.kernels.prod_diff import ops as pd_ops
+
+    b, n = KERNEL_GRID_B, KERNEL_GRID_N
+    rng = np.random.default_rng(0)
+    lam = jnp.asarray(np.sort(
+        rng.standard_normal((b, n)).astype(np.float32), axis=-1))
+    mu = jnp.asarray(np.sort(
+        rng.standard_normal((b, n, n - 1)).astype(np.float32), axis=-1))
+
+    vmapped = jax.jit(jax.vmap(pd_ops.eei_magnitudes))
+
+    def _once(fn):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(lam, mu))
+        return (_time.perf_counter() - t0) * 1e6
+
+    _once(vmapped), _once(pd_ops.eei_magnitudes_batched)  # compile
+    samples = [(_once(vmapped), _once(pd_ops.eei_magnitudes_batched))
+               for _ in range(5)]
+    us_vmapped = min(s[0] for s in samples)
+    us_batched = min(s[1] for s in samples)
+    ratio = us_vmapped / us_batched
+    metrics["batched_vs_vmapped_kernel_ratio"] = ratio
+    return [
+        Row(f"kernel_grid/vmapped_3d/b={b},n={n}", us_vmapped,
+            "PR-1 baseline: vmap over per-matrix pallas_call"),
+        Row(f"kernel_grid/batched_4d/b={b},n={n}", us_batched,
+            f"one pallas_call, batch grid axis; speedup_vs_vmapped="
+            f"{ratio:.2f}x"),
+    ]
+
+
+def run(smoke: bool = False) -> tuple[list[Row], dict]:
     rows = []
+    metrics: dict = {}
     configs = SMOKE_CONFIGS if smoke else FULL_CONFIGS
     for b, n, k in configs:
         a = _stack(b, n)
@@ -65,6 +132,10 @@ def run(smoke: bool = False) -> list[Row]:
             rows.append(Row(
                 f"throughput/{name}/b={b},n={n},k={k}", us,
                 f"solves_per_s={b / (us * 1e-6):.1f}"))
+            # Gate metrics are well-defined only for the single smoke config
+            # (a full run would mix throughputs across configs).
+            if smoke and name == "pallas":
+                metrics["pallas_solves_per_s"] = b / (us * 1e-6)
         # Baseline: the pre-engine Python loop over single-matrix solves.
         loop_engine = SolverEngine(SolverPlan(method="eei_tridiag",
                                               backend="jnp"))
@@ -76,17 +147,63 @@ def run(smoke: bool = False) -> list[Row]:
         rows.append(Row(
             f"throughput/python_loop/b={b},n={n},k={k}", us,
             f"solves_per_s={b / (us * 1e-6):.1f} (pre-engine baseline)"))
-    return rows
+        if smoke:
+            metrics["loop_solves_per_s"] = b / (us * 1e-6)
+    rows.extend(kernel_grid_comparison(metrics))
+    if "pallas_solves_per_s" in metrics and "loop_solves_per_s" in metrics:
+        # Hardware-independent gate metric: batched pallas throughput in
+        # units of the in-process Python-loop baseline.
+        metrics["pallas_vs_loop_ratio"] = (
+            metrics["pallas_solves_per_s"] / metrics["loop_solves_per_s"])
+    return rows, metrics
+
+
+def check_regression(metrics: dict, baseline_path: Path) -> list[str]:
+    """Compare gate metrics against the committed baseline (>20% fails)."""
+    if not baseline_path.is_file():
+        print(f"# no baseline at {baseline_path}; skipping regression gate")
+        return []
+    base = json.loads(baseline_path.read_text())["metrics"]
+    failures = []
+    for key in ("pallas_vs_loop_ratio", "batched_vs_vmapped_kernel_ratio"):
+        if key not in base or key not in metrics:
+            continue
+        floor = (1.0 - REGRESSION_TOLERANCE) * base[key]
+        if metrics[key] < floor:
+            failures.append(
+                f"{key}: {metrics[key]:.3f} < {floor:.3f} "
+                f"(baseline {base[key]:.3f} - {REGRESSION_TOLERANCE:.0%})")
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="one tiny config per backend (CI sanity run)")
+                    help="one tiny config per backend + the kernel-grid "
+                    "comparison; writes the CI artifact and enforces the "
+                    "regression gate")
+    ap.add_argument("--out", default="BENCH_throughput.json",
+                    help="artifact path for --smoke (default: ./%(default)s)")
     args = ap.parse_args()
+    rows, metrics = run(smoke=args.smoke)
     print("name,us_per_call,derived")
-    for row in run(smoke=args.smoke):
+    for row in rows:
         print(row.csv())
+    if not args.smoke:
+        return
+    artifact = {
+        "host": jax.default_backend(),
+        "rows": [{"name": r.name, "us": r.us, "derived": r.derived}
+                 for r in rows],
+        "metrics": metrics,
+    }
+    Path(args.out).write_text(json.dumps(artifact, indent=2) + "\n")
+    print(f"# wrote {args.out}")
+    failures = check_regression(metrics, BASELINE_PATH)
+    for f in failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -2,8 +2,8 @@
 implemented as a production substrate — variant ladder (faithful), TPU-native
 tridiagonal pipeline, and the sharded backend (``distributed``).  The
 framework-facing entry point is ``repro.engine.SolverEngine``; the old
-``SpectralEngine`` façade remains as a deprecation shim over it.
+``SpectralEngine`` façade has been removed (see docs/ARCHITECTURE.md for the
+migration table).
 """
 
 from repro.core import identity, minors, directions, distributed  # noqa: F401
-from repro.core.spectral import SpectralEngine  # noqa: F401

@@ -52,6 +52,46 @@ def tridiagonal_signs(d: jax.Array, e: jax.Array, lam, mags: jax.Array):
     return jnp.concatenate([w0[None], rest])
 
 
+def inverse_iteration_signs_batched(
+    a: jax.Array,  # (b, n, n)
+    lam_sel: jax.Array,  # (b, k) selected eigenvalues
+    mags_sel: jax.Array,  # (b, k, n) selected |v|^2 rows
+    shift_eps: float = 1e-6,
+) -> jax.Array:
+    """Signed eigenvectors for all selected pairs via one batched LU program.
+
+    Same math as :func:`inverse_iteration_signs`, restructured for the
+    serving path: instead of a per-(matrix, pair) ``solve`` dispatch
+    (``vmap(vmap(...))`` of factor+solve), the ``b * k`` shifted systems
+    ``A_b - (lam_bk + delta_b) I`` are stacked and factored by a *single*
+    batched ``lu_factor`` call, followed by one batched ``lu_solve`` — per
+    matrix, all ``k`` selected pairs ride the same factorization program.
+    Returns signed eigenvectors ``(b, k, n)``; bitwise-identical systems to
+    the per-pair path, so results agree to solver tolerance (regression test
+    in ``tests/test_engine.py``).
+    """
+    b_n, k = lam_sel.shape
+    n = a.shape[-1]
+    diag = jnp.diagonal(a, axis1=-2, axis2=-1)  # (b, n)
+    scale = jnp.max(jnp.abs(diag), axis=-1) + 1.0  # (b,)
+    delta = shift_eps * scale
+    shifts = lam_sel + delta[:, None]  # (b, k)
+    eye = jnp.eye(n, dtype=a.dtype)
+    shifted = a[:, None, :, :] - shifts[:, :, None, None] * eye  # (b, k, n, n)
+    rhs = jnp.ones((n,), a.dtype) / jnp.sqrt(n)
+    lu, piv = jax.scipy.linalg.lu_factor(shifted.reshape(b_n * k, n, n))
+    x = jax.scipy.linalg.lu_solve(
+        (lu, piv), jnp.broadcast_to(rhs, (b_n * k, n))
+    ).reshape(b_n, k, n)
+    signs = jnp.where(jnp.sign(x) == 0, 1.0, jnp.sign(x))
+    v = signs * jnp.sqrt(jnp.maximum(mags_sel, 0.0))
+    # Canonical orientation: largest-|component| positive, per pair.
+    vmax = jnp.take_along_axis(
+        v, jnp.argmax(jnp.abs(v), axis=-1, keepdims=True), axis=-1
+    )
+    return v * jnp.where(vmax < 0, -1.0, 1.0)
+
+
 def inverse_iteration_signs(a: jax.Array, lam, mags: jax.Array, shift_eps: float = 1e-6):
     """Signed eigenvector from magnitudes via one inverse-iteration solve.
 

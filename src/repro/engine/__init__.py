@@ -7,15 +7,23 @@
     lam, mags = engine.solve(stack)                  # (b, n), (b, n, n)
     top = engine.topk(stack, k=4)                    # (b, k), (b, k, n)
 
-See ``docs/ARCHITECTURE.md`` for the layering and the deprecation path of
-the old ``repro.core.spectral.SpectralEngine`` façade.
+See ``docs/ARCHITECTURE.md`` for the layering, the batched kernel grid, and
+the autotune -> plan calibration flow (``repro.engine.autotune``).
 """
 
+from repro.engine.autotune import (  # noqa: F401
+    CalibrationTable,
+    calibrate,
+    get_table,
+    load_table,
+    set_table,
+)
 from repro.engine.plan import (  # noqa: F401
     BackendName,
     Method,
     SolverPlan,
     plan_for,
+    resolved_crossovers,
 )
 from repro.engine.registry import (  # noqa: F401
     BackendStages,

@@ -1,0 +1,312 @@
+"""Measured planner calibration: block shapes + method crossovers per host.
+
+The planner's method heuristics (``plan.EIGH_CROSSOVER_N`` /
+``DENSE_CROSSOVER_N``) and the Pallas kernels' tile shapes are
+hardware-dependent — the paper's own Table 1 shows the eigh/EEI crossover
+moving with the BLAS backing.  This module closes the loop from measurement
+to dispatch:
+
+* :func:`calibrate` sweeps kernel block shapes and method crossovers with
+  the same timing harness as ``benchmarks/throughput.py`` and returns a
+  :class:`CalibrationTable`;
+* tables persist as JSON — per-host under ``~/.cache/repro/`` (or
+  ``$REPRO_CALIBRATION``), with a repo-checked default
+  (``calibration_default.json``) so fresh checkouts plan from measured
+  numbers, not guesses;
+* :func:`get_table` is the process-global resolution the planner
+  (``plan.resolved_crossovers``) and the pallas backend (kernel blocks)
+  consult; the static constants in ``plan.py`` remain only as the
+  uncalibrated fallback when no table can be found.
+
+Resolution order: :func:`set_table` override > ``$REPRO_CALIBRATION`` path >
+``~/.cache/repro/calibration.json`` > the repo default.  Regenerate with::
+
+    PYTHONPATH=src python -m repro.engine.autotune [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax
+
+CALIBRATION_ENV = "REPRO_CALIBRATION"
+CACHE_PATH = Path.home() / ".cache" / "repro" / "calibration.json"
+REPO_DEFAULT_PATH = Path(__file__).with_name("calibration_default.json")
+
+_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationTable:
+    """One host class's measured pipeline constants (see module docstring)."""
+
+    eigh_crossover_n: int  # n below which LAPACK eigh wins outright
+    dense_crossover_n: int  # n up to which dense minors beat tridiag+Sturm
+    prod_diff_blocks: tuple  # (block_i, block_j, block_k)
+    sturm_blocks: tuple  # (block_b, block_m)
+    host: str = ""  # host class the numbers were measured on
+    backend: str = ""  # jax backend (cpu | tpu | gpu) at measurement
+    measured_at: str = ""  # ISO timestamp, empty for hand-written tables
+    source: str = "memory"  # where the table was loaded from
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("source")
+        d["schema_version"] = _SCHEMA_VERSION
+        d["prod_diff_blocks"] = list(self.prod_diff_blocks)
+        d["sturm_blocks"] = list(self.sturm_blocks)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict, source: str = "memory") -> "CalibrationTable":
+        version = int(d.get("schema_version", _SCHEMA_VERSION))
+        if version > _SCHEMA_VERSION:
+            raise ValueError(
+                f"calibration table schema_version {version} is newer than "
+                f"this code understands ({_SCHEMA_VERSION})")
+        return cls(
+            eigh_crossover_n=int(d["eigh_crossover_n"]),
+            dense_crossover_n=int(d["dense_crossover_n"]),
+            prod_diff_blocks=tuple(int(x) for x in d["prod_diff_blocks"]),
+            sturm_blocks=tuple(int(x) for x in d["sturm_blocks"]),
+            host=str(d.get("host", "")),
+            backend=str(d.get("backend", "")),
+            measured_at=str(d.get("measured_at", "")),
+            source=source,
+        )
+
+    def save(self, path: Path) -> Path:
+        path = Path(path).expanduser()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=2) + "\n")
+        return path
+
+
+def host_key() -> str:
+    """Host class the calibration is keyed on (platform + device kind)."""
+    dev = jax.devices()[0]
+    return f"{platform.machine()}-{jax.default_backend()}-{dev.device_kind}"
+
+
+def load_table(path: Optional[os.PathLike] = None) -> Optional[CalibrationTable]:
+    """Load a table from ``path`` or the resolution chain (None if absent).
+
+    An explicit ``path`` (or ``$REPRO_CALIBRATION``) is trusted verbatim and
+    must exist.  Chain candidates (user cache, repo default) are measured
+    artifacts that may have been produced on a different host class — they
+    are skipped unless their recorded ``backend`` matches this process's jax
+    backend, so a CPU-measured repo default never governs planning on TPU.
+    """
+    candidates = []  # (path, source, explicit)
+    if path is not None:
+        candidates.append((Path(path), f"file:{path}", True))
+    else:
+        env = os.environ.get(CALIBRATION_ENV)
+        if env:
+            candidates.append((Path(env), f"env:{env}", True))
+        candidates.append((CACHE_PATH, f"cache:{CACHE_PATH}", False))
+        candidates.append((REPO_DEFAULT_PATH, "repo-default", False))
+    for cand, source, explicit in candidates:
+        cand = cand.expanduser()
+        if not cand.is_file():
+            if explicit:
+                raise FileNotFoundError(
+                    f"calibration table not found: {cand}")
+            continue
+        try:
+            table = CalibrationTable.from_dict(
+                json.loads(cand.read_text()), source=source)
+        except (json.JSONDecodeError, KeyError, ValueError) as exc:
+            raise ValueError(f"malformed calibration table {cand}: {exc}")
+        if (not explicit and table.backend
+                and table.backend != jax.default_backend()):
+            continue  # measured on a different host class
+        return table
+    return None
+
+
+# Process-global resolution, cached after the first lookup.  ``set_table``
+# overrides (tests, serve --calibration); ``set_table(None)`` re-resolves.
+# Note: the engine caches jitted programs per plan, and the pallas backend
+# bakes tile shapes in at program-build time — a table change affects plans
+# compiled *afterwards*, not programs already jitted in this process.
+_ACTIVE: Optional[CalibrationTable] = None
+_RESOLVED = False
+
+
+def set_table(table: Optional[CalibrationTable]) -> None:
+    global _ACTIVE, _RESOLVED
+    _ACTIVE = table
+    _RESOLVED = table is not None
+
+
+def get_table() -> Optional[CalibrationTable]:
+    """The active calibration table, or None (static-constant fallback)."""
+    global _ACTIVE, _RESOLVED
+    if not _RESOLVED:
+        _ACTIVE = load_table()
+        _RESOLVED = True
+    return _ACTIVE
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+
+def _time(fn, *args, repeat: int = 3, warmup: int = 1) -> float:
+    """Mean wall seconds per call (post-warmup, blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeat
+
+
+def _sym_stack(b: int, n: int, seed: int = 0) -> jax.Array:
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((b, n, n)).astype(np.float32)
+    return jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+
+
+def _sweep_prod_diff_blocks(
+    b: int, n: int, candidates: Sequence[tuple]
+) -> tuple:
+    from repro.kernels.prod_diff import ops as pd_ops
+
+    a = _sym_stack(b, n)
+    import jax.numpy as jnp
+
+    lam = jax.vmap(jnp.linalg.eigvalsh)(a)
+    mu = jnp.sort(_sym_stack(b, n, seed=1)[:, :, : n - 1], axis=-1)
+    best, best_t = None, float("inf")
+    for blk in candidates:
+        bi, bj, bk = blk
+
+        def run(lam=lam, mu=mu, bi=bi, bj=bj, bk=bk):
+            return pd_ops.eei_magnitudes_batched(
+                lam, mu, block_i=bi, block_j=bj, block_k=bk)
+
+        t = _time(run)
+        if t < best_t:
+            best, best_t = blk, t
+    return best
+
+
+def _sweep_sturm_blocks(b: int, n: int, candidates: Sequence[tuple]) -> tuple:
+    from repro.kernels.sturm import ops as sturm_ops
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+    e = jnp.asarray(rng.standard_normal((b, n - 1)).astype(np.float32))
+    best, best_t = None, float("inf")
+    for blk in candidates:
+        bb, bm = blk
+
+        def run(d=d, e=e, bb=bb, bm=bm):
+            return sturm_ops.sturm_eigenvalues(d, e, block_b=bb, block_m=bm)
+
+        t = _time(run)
+        if t < best_t:
+            best, best_t = blk, t
+    return best
+
+
+def _measure_crossovers(sizes: Sequence[int], k: int, batch: int):
+    """Smallest n where each EEI method beats its cheaper alternative."""
+    from repro.engine.engine import SolverEngine
+    from repro.engine.plan import SolverPlan
+
+    eigh_x = None
+    dense_x = None
+    # A win at the very first swept size must record a crossover *below* it
+    # (plan_for routes n <= crossover to the cheaper method).
+    prev_n = max(sizes[0] - 1, 0)
+    for n in sizes:
+        a = _sym_stack(batch, n)
+        times = {}
+        for method in ("eigh", "eei_dense", "eei_tridiag"):
+            eng = SolverEngine(SolverPlan(method=method, backend="jnp"))
+            times[method] = _time(lambda eng=eng, a=a: eng.topk(a, k))
+        best_eei = min(times["eei_dense"], times["eei_tridiag"])
+        if eigh_x is None and best_eei < times["eigh"]:
+            eigh_x = prev_n  # last size where eigh still won
+        if dense_x is None and times["eei_tridiag"] < times["eei_dense"]:
+            dense_x = prev_n
+        prev_n = n
+    # Never observed a win inside the sweep -> the crossover sits above it.
+    return eigh_x if eigh_x is not None else sizes[-1], (
+        dense_x if dense_x is not None else sizes[-1])
+
+
+def calibrate(
+    *,
+    smoke: bool = False,
+    batch: int = 16,
+    k: int = 4,
+) -> CalibrationTable:
+    """Measure crossovers + kernel blocks on this host; return the table.
+
+    ``smoke`` shrinks the sweep to a CI-sized sanity pass (seconds, not
+    minutes); full runs sweep enough sizes to bracket both crossovers.
+    """
+    if smoke:
+        sizes = [8, 16, 32]
+        pd_candidates = [(32, 32, 32), (64, 64, 64)]
+        st_candidates = [(8, 64), (8, 128)]
+        bench_b, bench_n = 8, 32
+    else:
+        sizes = [8, 16, 24, 32, 48, 64, 96, 128]
+        pd_candidates = [
+            (32, 32, 32), (64, 64, 64), (128, 128, 128),
+            (128, 128, 64), (64, 128, 128),
+        ]
+        st_candidates = [(4, 128), (8, 64), (8, 128), (16, 128), (8, 256)]
+        bench_b, bench_n = 64, 64
+    eigh_x, dense_x = _measure_crossovers(sizes, k=k, batch=batch)
+    pd_blocks = _sweep_prod_diff_blocks(bench_b, bench_n, pd_candidates)
+    st_blocks = _sweep_sturm_blocks(bench_b * bench_n, bench_n, st_candidates)
+    return CalibrationTable(
+        eigh_crossover_n=int(eigh_x),
+        dense_crossover_n=int(dense_x),
+        prod_diff_blocks=tuple(pd_blocks),
+        sturm_blocks=tuple(st_blocks),
+        host=host_key(),
+        backend=jax.default_backend(),
+        measured_at=time.strftime("%Y-%m-%dT%H:%M:%S"),
+        source="measured",
+    )
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (seconds, coarse)")
+    ap.add_argument("--out", default=str(CACHE_PATH),
+                    help="where to write the table (default: user cache)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=4)
+    args = ap.parse_args(argv)
+    table = calibrate(smoke=args.smoke, batch=args.batch, k=args.k)
+    path = table.save(Path(args.out))
+    print(json.dumps(table.to_dict(), indent=2))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

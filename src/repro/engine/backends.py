@@ -10,8 +10,11 @@ Each factory bundles batched stage implementations (see ``registry``):
                 (``identity.*_dot``: producer fuses into the MXU dot, no
                 (b, n, n, n) temps).
     pallas      the kernelized path — Sturm bisection and the prod-diff
-                log-sum run as Pallas TPU kernels (interpret mode off-TPU),
-                VMEM-tiled.
+                log-sum run as natively batched Pallas TPU kernels
+                (interpret mode off-TPU): one pallas_call per stack with
+                batch on the leading grid axis, stacked minor bands flattened
+                onto the Sturm row axis, and tile shapes taken from the
+                autotune calibration table when present.
 
 The ``sharded`` backend lives in ``repro.core.distributed`` (it owns the
 mesh/axis logic) and is registered here lazily to avoid an import cycle.
@@ -23,7 +26,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import identity, minors
-from repro.core.directions import inverse_iteration_signs, tridiagonal_signs
+from repro.core.directions import (
+    inverse_iteration_signs,
+    inverse_iteration_signs_batched,
+    tridiagonal_signs,
+)
 from repro.engine.plan import SolverPlan
 from repro.engine.registry import BackendStages, register_backend
 from repro.linalg import householder, sturm
@@ -53,10 +60,15 @@ def _tridiag_signs(d, e, lam_sel, mag_sel):
     return jax.vmap(inner)(d, e, lam_sel, mag_sel)
 
 
-def _dense_signs(a, lam_sel, mag_sel):
-    """Selected signed dense eigenvectors via inverse iteration, ``(b, k, n)``."""
+def _dense_signs_reference(a, lam_sel, mag_sel):
+    """Per-(matrix, pair) inverse-iteration solves — the sign oracle."""
     inner = jax.vmap(inverse_iteration_signs, in_axes=(None, 0, 0))
     return jax.vmap(inner)(a, lam_sel, mag_sel)
+
+
+def _dense_signs(a, lam_sel, mag_sel):
+    """Selected signed dense eigenvectors, one batched LU program."""
+    return inverse_iteration_signs_batched(a, lam_sel, mag_sel)
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +99,8 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> BackendStages:
         dense_spectra=_dense_spectra,
         magnitudes=magnitudes,
         tridiag_signs=_tridiag_signs,
-        dense_signs=_dense_signs,
+        dense_signs=(
+            _dense_signs_reference if name == "reference" else _dense_signs),
     )
 
 
@@ -108,23 +121,30 @@ def make_pallas_backend(plan: SolverPlan) -> BackendStages:
     # Kernel modules are imported lazily (mirrors the seed's lazy-kernel
     # convention: importing the engine must not require a Pallas-capable
     # install until a pallas plan actually runs).
+    from repro.engine import autotune
     from repro.kernels.prod_diff import ops as pd_ops
     from repro.kernels.sturm import ops as sturm_ops
 
     iters = plan.bisect_iters
+    # Tile shapes come from the host calibration table when one exists
+    # (autotune sweeps them with benchmarks/throughput.py's harness); the
+    # kernel-side defaults are the uncalibrated fallback.
+    table = autotune.get_table()
+    pd_bi, pd_bj, pd_bk = table.prod_diff_blocks if table else (128, 128, 128)
+    st_bb, st_bm = table.sturm_blocks if table else (8, 128)
 
     def tridiag_eigenvalues(d, e):
-        return sturm_ops.sturm_eigenvalues(d, e, n_iter=iters)
+        return sturm_ops.sturm_eigenvalues(
+            d, e, n_iter=iters, block_b=st_bb, block_m=st_bm)
 
     def tridiag_minor_spectra(d, e):
-        b, n = d.shape
         dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
-        mu = sturm_ops.sturm_eigenvalues(
-            dm.reshape(b * n, n - 1), em.reshape(b * n, n - 2), n_iter=iters)
-        return mu.reshape(b, n, n - 1)
+        return sturm_ops.sturm_minor_spectra(
+            dm, em, n_iter=iters, block_b=st_bb, block_m=st_bm)
 
     def magnitudes(lam, mu):
-        return jax.vmap(pd_ops.eei_magnitudes)(lam, mu)
+        return pd_ops.eei_magnitudes_batched(
+            lam, mu, block_i=pd_bi, block_j=pd_bj, block_k=pd_bk)
 
     return BackendStages(
         name="pallas",

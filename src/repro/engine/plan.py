@@ -30,11 +30,29 @@ BackendName = Literal["reference", "jnp", "pallas", "sharded"]
 
 #: ``n`` below which a full LAPACK ``eigh`` beats any EEI pipeline (the
 #: paper's crossover regime; Table 1 shows speedup < 1 for small n).
+#: Uncalibrated fallback — :func:`resolved_crossovers` prefers the measured
+#: calibration table (``repro.engine.autotune``) when one is available.
 EIGH_CROSSOVER_N = 24
 
 #: ``n`` up to which dense minor spectra (n LAPACK calls of size n-1) are
 #: cheaper than tridiagonalize + Sturm on this class of hardware.
+#: Uncalibrated fallback — see :func:`resolved_crossovers`.
 DENSE_CROSSOVER_N = 64
+
+
+def resolved_crossovers() -> tuple:
+    """``(eigh_crossover_n, dense_crossover_n)`` the planner dispatches on.
+
+    Reads the measured calibration table (env > user cache > repo default;
+    see ``repro.engine.autotune``); the static module constants above are
+    used only when no table can be found.
+    """
+    from repro.engine import autotune
+
+    table = autotune.get_table()
+    if table is None:
+        return EIGH_CROSSOVER_N, DENSE_CROSSOVER_N
+    return table.eigh_crossover_n, table.dense_crossover_n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +110,9 @@ def plan_for(
 
     * tiny matrices (or full-spectrum queries on small ones) route to the
       LAPACK oracle — the paper's own conclusion is that EEI wins only for
-      *partial* outputs past a crossover size;
+      *partial* outputs past a crossover size; the crossover sizes come from
+      the per-host measured calibration table when one exists
+      (:func:`resolved_crossovers`), else the static fallback constants;
     * small matrices keep dense minors (n eigvalsh calls beat the
       tridiagonalization constant); larger ones take the tridiagonal path;
     * a mesh with >1 device along its batch axis and a divisible stack picks
@@ -105,9 +125,10 @@ def plan_for(
     b = shape[0] if len(shape) == 3 else 1
 
     if method is None:
-        if n <= EIGH_CROSSOVER_N or (k is not None and k >= n):
+        eigh_x, dense_x = resolved_crossovers()
+        if n <= eigh_x or (k is not None and k >= n):
             method = "eigh"
-        elif n <= DENSE_CROSSOVER_N:
+        elif n <= dense_x:
             method = "eei_dense"
         else:
             method = "eei_tridiag"

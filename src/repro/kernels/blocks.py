@@ -1,0 +1,29 @@
+"""Shared block-size clamping for the Pallas kernel wrappers.
+
+Both kernel families take requested block shapes (defaults tuned for real
+TPU tiles, possibly overridden by the autotune calibration table) and clamp
+them to the *padded problem shape* before padding: a requested 128 tile on an
+``n = 8`` problem must shrink to 8, not pad the operand 16x.  Clamping rounds
+up to the hardware sublane/lane granule (8 for f32) so blocks stay aligned,
+which bounds padding overhead at ``align - 1`` elements per axis instead of
+``block - 1``.
+"""
+
+from __future__ import annotations
+
+
+def clamp_block(requested: int, dim: int, align: int = 8) -> int:
+    """Aligned block near ``requested`` that does not overshoot ``dim``.
+
+    Returns ``min(requested, round_up(dim, align))`` rounded up to a multiple
+    of ``align`` — the padded axis length is then ``round_up(dim, block)``,
+    so a small problem pads by at most ``align - 1`` entries, never to a full
+    default tile.  ``align=1`` disables alignment (batch-style axes where
+    padded rows are pure waste).
+    """
+    if requested < 1:
+        raise ValueError(f"block size must be >= 1, got {requested}")
+    dim = max(dim, 1)
+    rounded = -(-dim // align) * align
+    clamped = min(requested, rounded)
+    return max(align, -(-clamped // align) * align)

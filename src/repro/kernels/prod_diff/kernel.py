@@ -1,23 +1,34 @@
 """Pallas TPU kernel: tiled log-space eigenvalue-difference products.
 
-Computes ``out[i, j] = sum_k mask[k, j] * log|lam[i] - mu_t[k, j]|`` — the
-EEI numerator hot loop (O(n^3) log-diff terms for a full component table).
+Computes ``out[b, i, j] = sum_k mask[k, j] * log|lam[b, i] - mu_t[b, k, j]|``
+— the EEI numerator hot loop (O(b n^3) log-diff terms for full component
+tables over a stack of ``b`` matrices).
 
 Design (TPU-native re-think of the paper's "batched products"):
 
+* **batch is a first-class grid axis**: one ``pallas_call`` covers the whole
+  ``(b, n, n)`` stack with a 4-D ``(b, I/bi, J/bj, K/bk)`` grid — no
+  ``jax.vmap`` lifting, no per-matrix program launches, and the validity
+  mask is *shared* across the batch (every matrix in a stack has the same
+  shape) so it is fetched once per tile instead of once per matrix;
 * the paper's batch = our VMEM tile; per-batch partial ratios = per-tile
   partial log-sums accumulated across the ``k`` grid axis;
 * log-space replaces the paper's ratio-pairing as the overflow fix, so tile
   shape is chosen purely for VMEM/VPU efficiency, not numerics;
-* layout: ``i`` on sublanes, ``j`` on lanes, ``k`` sequential inside the tile
-  (a ``fori_loop`` of rank-2 VPU ops — no rank-3 intermediate, working set =
-  one ``(bk, bj)`` mu tile + one ``(bi, bj)`` accumulator);
+* layout: ``i`` on sublanes, ``j`` on lanes, ``k`` swept inside the tile in
+  sublane-sized chunks (a ``fori_loop`` of rank-3 ``(bi, 8, bj)`` VPU ops —
+  8 mu rows per step instead of one, working set = one ``(bk, bj)`` mu tile
+  + one chunk + one ``(bi, bj)`` accumulator);
 * ``mu`` is passed transposed ``(K, J)`` so the lane dimension of every load
   matches the lane dimension of the output tile (no in-kernel transposes).
 
-Grid: ``(I/bi, J/bj, K/bk)`` with ``k`` innermost; the output block is
+Grid: ``(b, I/bi, J/bj, K/bk)`` with ``k`` innermost; the output block is
 revisited across ``k`` steps and accumulated in place (initialized at
-``k == 0``).
+``k == 0``).  The legacy single-matrix 3-D grid (the PR-1 kernel this
+replaces on the engine path) is kept as ``logabs_sum_padded`` — it is the
+vmapped baseline the batched grid is benchmarked against
+(``benchmarks/throughput.py``) and parity-tested against
+(``tests/test_kernels.py``).
 """
 
 from __future__ import annotations
@@ -27,6 +38,76 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+#: ``k`` rows consumed per inner-loop step (one f32 sublane granule).
+K_CHUNK = 8
+
+
+def _logabs_sum_batched_kernel(
+    lam_ref, mut_ref, mask_ref, floor_ref, out_ref, *, block_k
+):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lam = lam_ref[0]  # (bi, 1) sublane vector
+    mut = mut_ref[0]  # (bk, bj)
+    mask = mask_ref[...]  # (bk, bj), shared across the batch axis
+    floor = floor_ref[0, 0, 0]
+
+    def body(c, acc):
+        mu_c = jax.lax.dynamic_slice_in_dim(mut, c * K_CHUNK, K_CHUNK, axis=0)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, c * K_CHUNK, K_CHUNK, axis=0)
+        ad = jnp.abs(lam[:, :, None] - mu_c[None, :, :])  # (bi, K_CHUNK, bj)
+        ad = jnp.where(m_c[None, :, :] > 0, jnp.maximum(ad, floor), 1.0)
+        return acc + jnp.sum(jnp.log(ad), axis=1)
+
+    acc = jax.lax.fori_loop(
+        0, block_k // K_CHUNK, body, jnp.zeros(out_ref.shape[1:], out_ref.dtype)
+    )
+    out_ref[...] += acc[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+)
+def logabs_sum_batched_padded(
+    lam_col: jax.Array,  # (B, I, 1), I % block_i == 0
+    mu_t: jax.Array,  # (B, K, J), K % block_k == 0, J % block_j == 0
+    mask_t: jax.Array,  # (K, J) 1.0 valid / 0.0 padded — shared across B
+    floor: jax.Array,  # (B, 1, 1) per-matrix gap clamp
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Natively batched pallas_call on pre-padded operands (see ops)."""
+    if block_k % K_CHUNK:
+        raise ValueError(f"block_k must be a multiple of {K_CHUNK}, got {block_k}")
+    b_total, i_total, _ = lam_col.shape
+    k_total, j_total = mask_t.shape
+    grid = (b_total, i_total // block_i, j_total // block_j, k_total // block_k)
+    return pl.pallas_call(
+        functools.partial(_logabs_sum_batched_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_i, 1), lambda b, i, j, k: (b, i, 0)),
+            pl.BlockSpec((1, block_k, block_j), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec((block_k, block_j), lambda b, i, j, k: (k, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j, k: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_i, block_j), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_total, i_total, j_total), lam_col.dtype),
+        interpret=interpret,
+    )(lam_col, mu_t, mask_t, floor)
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-matrix 3-D grid (PR-1) — kept as the vmapped baseline.
+# ---------------------------------------------------------------------------
 
 
 def _logabs_sum_kernel(lam_ref, mut_ref, mask_ref, floor_ref, out_ref, *, block_k):
@@ -66,7 +147,7 @@ def logabs_sum_padded(
     block_k: int = 128,
     interpret: bool = False,
 ):
-    """Core pallas_call on pre-padded operands (see ops.logabs_sum)."""
+    """Legacy per-matrix pallas_call on pre-padded operands (see ops)."""
     i_total, _ = lam_col.shape
     k_total, j_total = mu_t.shape
     grid = (i_total // block_i, j_total // block_j, k_total // block_k)

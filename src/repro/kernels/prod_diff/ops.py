@@ -1,4 +1,14 @@
-"""Jit'd public wrappers for the prod_diff kernel (padding, masking, EEI)."""
+"""Jit'd public wrappers for the prod_diff kernel (padding, masking, EEI).
+
+Two entry tiers:
+
+* ``logabs_sum_batched`` / ``eei_magnitudes_batched`` — the engine path: one
+  natively batched pallas_call over a ``(b, ...)`` stack (4-D kernel grid,
+  batch leading).
+* ``logabs_sum`` / ``eei_magnitudes`` — single-matrix convenience wrappers
+  over the legacy 3-D grid, kept as the vmapped PR-1 baseline that the
+  batched grid is benchmarked and parity-tested against.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import blocks
 from repro.kernels.prod_diff import kernel as _kernel
 
 
@@ -28,6 +39,94 @@ def default_interpret() -> bool:
 @functools.partial(
     jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
 )
+def logabs_sum_batched(
+    lam: jax.Array,  # (B, I)
+    mu: jax.Array,  # (B, J, K)
+    floor: jax.Array | float,  # scalar or (B,)
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """``out[b, i, j] = sum_k log(max(|lam[b, i] - mu[b, j, k]|, floor[b]))``.
+
+    One pallas_call for the whole stack: batch rides the leading grid axis,
+    the padding mask is shared across matrices, and blocks are clamped to the
+    padded problem shape (no 128x padding for small ``n``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b_n, i_n = lam.shape
+    _, j_n, k_n = mu.shape
+    block_i = blocks.clamp_block(block_i, i_n)
+    block_j = blocks.clamp_block(block_j, j_n)
+    block_k = blocks.clamp_block(block_k, k_n, align=_kernel.K_CHUNK)
+    lam_col = _pad_to(lam[:, :, None], 1, block_i)
+    mu_p = _pad_to(_pad_to(mu, 1, block_j), 2, block_k)
+    mask_p = _pad_to(
+        _pad_to(jnp.ones((j_n, k_n), lam.dtype), 0, block_j), 1, block_k
+    )
+    floor_arr = (jnp.zeros((b_n,), lam.dtype) + jnp.asarray(floor, lam.dtype))
+    out = _kernel.logabs_sum_batched_padded(
+        lam_col,
+        jnp.swapaxes(mu_p, 1, 2),
+        jnp.swapaxes(mask_p, 0, 1),
+        floor_arr.reshape(b_n, 1, 1),
+        block_i=block_i,
+        block_j=block_j,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, :i_n, :j_n]
+
+
+def _floor_from_spectra(lam: jax.Array) -> jax.Array:
+    """Per-matrix gap clamp: ``eps * spectral scale`` (lam ascending)."""
+    eps = jnp.finfo(lam.dtype).eps
+    scale = jnp.maximum(jnp.abs(lam[..., -1]), jnp.abs(lam[..., 0])) + 1e-30
+    return eps * scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+)
+def eei_magnitudes_batched(
+    lam: jax.Array,  # (B, n) matrix spectra (ascending)
+    mu: jax.Array,  # (B, n, n-1) minor spectra
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """All ``|v[b, i, j]|^2`` for a stack, numerator table via one kernel.
+
+    The O(b n^2) denominator stays in jnp — it is not a hot spot.
+    """
+    n = lam.shape[-1]
+    floor = _floor_from_spectra(lam)  # (B,)
+    log_num = logabs_sum_batched(
+        lam, mu, floor,
+        block_i=block_i, block_j=block_j, block_k=block_k,
+        interpret=interpret,
+    )
+    diff = jnp.abs(lam[:, :, None] - lam[:, None, :])
+    diff = jnp.where(
+        jnp.eye(n, dtype=bool), 1.0, jnp.maximum(diff, floor[:, None, None])
+    )
+    log_den = jnp.sum(jnp.log(diff), axis=-1)
+    return jnp.exp(log_num - log_den[:, :, None])
+
+
+# ---------------------------------------------------------------------------
+# Single-matrix wrappers over the legacy 3-D grid (vmapped PR-1 baseline).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+)
 def logabs_sum(
     lam: jax.Array,  # (I,)
     mu: jax.Array,  # (J, K)
@@ -43,9 +142,9 @@ def logabs_sum(
         interpret = default_interpret()
     i_n = lam.shape[0]
     j_n, k_n = mu.shape
-    block_i = min(block_i, max(8, i_n))
-    block_j = min(block_j, max(8, j_n))
-    block_k = min(block_k, max(8, k_n))
+    block_i = blocks.clamp_block(block_i, i_n)
+    block_j = blocks.clamp_block(block_j, j_n)
+    block_k = blocks.clamp_block(block_k, k_n)
     lam_col = _pad_to(lam[:, None], 0, block_i)
     mask = jnp.ones((j_n, k_n), lam.dtype)
     mu_p = _pad_to(_pad_to(mu, 0, block_j), 1, block_k)
@@ -68,15 +167,14 @@ def logabs_sum(
 def eei_magnitudes(
     lam: jax.Array, mu: jax.Array, *, interpret: bool | None = None
 ) -> jax.Array:
-    """All ``|v[i, j]|^2`` from spectra; numerator table via the kernel.
+    """All ``|v[i, j]|^2`` from one matrix's spectra (legacy 3-D grid).
 
     lam: (n,) matrix spectrum (ascending); mu: (n, n-1) minor spectra.
-    The O(n^2) denominator stays in jnp — it is not a hot spot.
+    ``jax.vmap`` of this function is the PR-1 baseline the natively batched
+    ``eei_magnitudes_batched`` replaces on the engine path.
     """
     n = lam.shape[0]
-    eps = jnp.finfo(lam.dtype).eps
-    scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
-    floor = eps * scale
+    floor = _floor_from_spectra(lam)
     log_num = logabs_sum(lam, mu, floor, interpret=interpret)
     diff = jnp.abs(lam[:, None] - lam[None, :])
     diff = jnp.where(jnp.eye(n, dtype=bool), 1.0, jnp.maximum(diff, floor))

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the sturm kernel (bounds, padding, slicing)."""
+"""Jit'd public wrappers for the sturm kernel (bounds, padding, slicing).
+
+``sturm_eigenvalues`` runs one tiled program over a ``(B, n)`` stack of
+tridiagonal bands; ``sturm_minor_spectra`` is the stacked-minor-band layout —
+all ``b * n`` minor bisection problems of a ``(b, n)`` batch flattened onto
+the kernel's row axis so the whole stack is one pallas_call, not ``b``.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import blocks
 from repro.kernels.sturm import kernel as _kernel
 
 
@@ -59,8 +66,11 @@ def sturm_eigenvalues(
     pivmin = jnp.maximum(eps * eps * scale * scale, tiny)
     bounds = jnp.stack([lo, hi, pivmin, jnp.full((b_n,), n, dtype)], axis=1)
 
-    block_m = min(block_m, max(8, n))
-    block_b = min(block_b, max(1, b_n))
+    # Clamp blocks to the padded problem shape: a 128-lane tile on an n=8
+    # problem must shrink to 8, not pad the band 16x (align 8 keeps lanes
+    # aligned; the batch axis clamps unaligned — padded rows are pure waste).
+    block_m = blocks.clamp_block(block_m, n)
+    block_b = blocks.clamp_block(block_b, b_n, align=1)
     pad_n = (-n) % block_m
     pad_b = (-b_n) % block_b
     # Padded diagonal entries sit above hi (decoupled via zero e), so padded
@@ -87,3 +97,35 @@ def sturm_eigenvalues(
         interpret=interpret,
     )
     return out[:b_n, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
+)
+def sturm_minor_spectra(
+    dm: jax.Array,  # (b, n, m) stacked minor diagonals
+    em: jax.Array,  # (b, n, m-1) stacked minor off-diagonals
+    *,
+    n_iter: int = 0,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Spectra of all ``b * n`` stacked minor bands as one tiled program.
+
+    The stacked-minor-band layout: the ``(b, n)`` leading axes flatten onto
+    the kernel's row (sublane) axis, so every bisection problem in the whole
+    batch advances in lockstep inside a single pallas_call — per-program
+    launch overhead is amortized across the stack instead of paid ``b``
+    times.  Returns ``(b, n, m)``.
+    """
+    b_n, n, m = dm.shape
+    mu = sturm_eigenvalues(
+        dm.reshape(b_n * n, m),
+        em.reshape(b_n * n, m - 1),
+        n_iter=n_iter,
+        block_b=block_b,
+        block_m=block_m,
+        interpret=interpret,
+    )
+    return mu.reshape(b_n, n, m)

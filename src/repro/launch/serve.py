@@ -39,7 +39,16 @@ log = logging.getLogger("repro.serve")
 
 def serve_eei(args):
     """Serve a stream of batched top-k spectral queries via the engine."""
-    from repro.engine import SolverEngine, plan_for
+    from repro.engine import SolverEngine, autotune, plan_for, \
+        resolved_crossovers
+
+    if args.calibration:
+        autotune.set_table(autotune.load_table(args.calibration))
+    table = autotune.get_table()
+    eigh_x, dense_x = resolved_crossovers()
+    log.info("plan calibration: %s (eigh_crossover_n=%d dense_crossover_n=%d)",
+             table.source if table else "static fallback constants",
+             eigh_x, dense_x)
 
     mesh = parse_mesh(args.mesh)
     rng = np.random.default_rng(args.seed)
@@ -80,6 +89,9 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=4, help="EEI top-k per query")
     ap.add_argument("--requests", type=int, default=8,
                     help="EEI request batches to serve")
+    ap.add_argument("--calibration", default=None,
+                    help="path to an autotune calibration table (JSON); "
+                    "default: env/cache/repo-default resolution chain")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--batch", type=int, default=4)

@@ -134,15 +134,42 @@ def test_batched_minor_spectra_interlace():
 
 
 def test_planner_heuristics():
-    assert plan_for((8, 8)).method == "eigh"
-    assert plan_for((40, 40)).method == "eei_dense"
-    assert plan_for((4, 100, 100)).method == "eei_tridiag"
-    assert plan_for((100, 100), k=100).method == "eigh"
+    # Whatever the crossovers resolve to (calibrated or fallback), the
+    # method choice must respect them.
+    from repro.engine import resolved_crossovers
+
+    eigh_x, dense_x = resolved_crossovers()
+    assert plan_for((eigh_x, eigh_x)).method == "eigh"
+    if dense_x > eigh_x:
+        assert plan_for((dense_x, dense_x)).method == "eei_dense"
+    big = max(eigh_x, dense_x) + 1
+    assert plan_for((4, big, big)).method == "eei_tridiag"
+    assert plan_for((big, big), k=big).method == "eigh"
     # off-TPU hosts get the portable fused-jnp backend
-    assert plan_for((100, 100)).backend in ("jnp", "pallas")
+    assert plan_for((big, big)).backend in ("jnp", "pallas")
     mesh = _host_mesh()
     # 1-device data axis -> not worth sharding
-    assert plan_for((4, 100, 100), mesh=mesh).backend != "sharded"
+    assert plan_for((4, big, big), mesh=mesh).backend != "sharded"
+
+
+def test_planner_reads_calibration_table():
+    """SolverPlan resolution consults the calibration table when set, and
+    falls back to the static constants when none is available."""
+    from repro.engine import CalibrationTable, plan, set_table
+
+    try:
+        set_table(CalibrationTable(
+            eigh_crossover_n=4, dense_crossover_n=10,
+            prod_diff_blocks=(32, 32, 32), sturm_blocks=(8, 64)))
+        assert plan.resolved_crossovers() == (4, 10)
+        assert plan_for((8, 8)).method == "eei_dense"  # 4 < 8 <= 10
+        assert plan_for((12, 12)).method == "eei_tridiag"
+        # Pallas backend picks its tile shapes up from the same table.
+        stages = get_backend(SolverPlan(backend="pallas"))
+        assert stages.name == "pallas"
+    finally:
+        set_table(None)  # back to the resolution chain
+    assert plan.resolved_crossovers()[0] >= 1
 
 
 def test_plan_validation():
@@ -164,17 +191,31 @@ def test_registry_lists_all_backends():
         assert stages.name == name
 
 
-def test_spectral_engine_shim_delegates():
-    """The deprecated SpectralEngine façade routes through the engine."""
-    from repro.core.spectral import SpectralEngine
+def test_spectral_engine_shim_removed():
+    """The deprecated SpectralEngine façade is gone; the engine is the API."""
+    import repro.core as core
 
-    a = _stack(6, b=1)[0]
-    lam_ref, v_ref = jnp.linalg.eigh(a)
-    shim = SpectralEngine(method="eei_tridiag", use_kernels=True)
-    ev, vecs = shim.topk_eigenpairs(a, 3)
-    np.testing.assert_allclose(np.asarray(ev), np.asarray(lam_ref[-3:]),
-                               rtol=1e-8, atol=1e-8)
-    mags = shim.component_magnitudes(a)
-    np.testing.assert_allclose(np.asarray(mags),
-                               np.asarray((v_ref * v_ref).T),
-                               rtol=1e-4, atol=1e-7)
+    assert not hasattr(core, "SpectralEngine")
+    with pytest.raises(ImportError):
+        from repro.core import spectral  # noqa: F401
+
+
+def test_dense_signs_one_lu_matches_per_pair_solves():
+    """Batched one-LU sign recovery == the per-(matrix, pair) solve oracle."""
+    from repro.core.directions import (
+        inverse_iteration_signs,
+        inverse_iteration_signs_batched,
+    )
+
+    a = _stack(7, b=4, n=20)
+    lam, v = jax.vmap(jnp.linalg.eigh)(a)
+    k = 5
+    lam_sel = lam[:, -k:]
+    mags_sel = jnp.swapaxes(v * v, -1, -2)[:, -k:, :]
+    batched = inverse_iteration_signs_batched(a, lam_sel, mags_sel)
+    per_pair = jax.vmap(
+        jax.vmap(inverse_iteration_signs, in_axes=(None, 0, 0))
+    )(a, lam_sel, mags_sel)
+    assert batched.shape == (4, k, 20)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(per_pair),
+                               rtol=1e-10, atol=1e-12)

@@ -11,7 +11,7 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import identity, minors, numpy_ref
-from repro.core.spectral import SpectralEngine
+from repro.engine import SolverEngine, SolverPlan
 from repro.linalg import interlace
 
 
@@ -163,11 +163,11 @@ def test_minor_construction_traced_index():
 
 
 @pytest.mark.parametrize("method", ["eigh", "eei_dense", "eei_tridiag"])
-def test_spectral_engine_topk(method):
+def test_solver_engine_topk(method):
     a = _sym(7, 20)
     lam, v = jnp.linalg.eigh(a)
-    eng = SpectralEngine(method=method)
-    ev, vecs = eng.topk_eigenpairs(a, 4)
+    eng = SolverEngine(SolverPlan(method=method))
+    ev, vecs = eng.topk(a, 4)
     np.testing.assert_allclose(np.asarray(ev), np.asarray(lam[-4:]),
                                rtol=1e-8, atol=1e-8)
     vref = np.asarray(v[:, -4:].T)
@@ -176,12 +176,12 @@ def test_spectral_engine_topk(method):
     assert err < 1e-6, err
 
 
-def test_spectral_engine_kernelized():
+def test_solver_engine_kernelized():
     a = _sym(11, 24)
-    eng = SpectralEngine(method="eei_tridiag", use_kernels=True)
-    ref = SpectralEngine(method="eigh")
-    ev, vecs = eng.topk_eigenpairs(a, 3)
-    ev_r, vecs_r = ref.topk_eigenpairs(a, 3)
+    eng = SolverEngine(SolverPlan(method="eei_tridiag", backend="pallas"))
+    ref = SolverEngine(SolverPlan(method="eigh"))
+    ev, vecs = eng.topk(a, 3)
+    ev_r, vecs_r = ref.topk(a, 3)
     np.testing.assert_allclose(np.asarray(ev), np.asarray(ev_r), rtol=1e-8,
                                atol=1e-8)
     err = np.minimum(np.abs(np.asarray(vecs) - np.asarray(vecs_r)),

@@ -72,6 +72,61 @@ def test_property_prod_diff_any_shape(i_n, j_n, k_n, seed):
                                rtol=1e-9, atol=1e-9)
 
 
+# -- natively batched grid vs vmapped legacy vs reference --------------------
+
+
+@pytest.mark.parametrize("bn", [(1, 8), (3, 17), (16, 64)])
+def test_batched_grid_matches_vmapped_and_reference(bn):
+    """The 4-D (b, i, j, k) grid == vmap of the legacy 3-D grid == jnp ref."""
+    b, n = bn
+    rng = np.random.default_rng(b * 1000 + n)
+    lam = jnp.asarray(np.sort(rng.standard_normal((b, n)), axis=-1))
+    mu = jnp.asarray(rng.standard_normal((b, n, n - 1)))
+    floor = 1e-9
+    out_batched = pd_ops.logabs_sum_batched(lam, mu, floor)
+    out_vmapped = jax.vmap(
+        lambda l, m: pd_ops.logabs_sum(l, m, floor))(lam, mu)
+    out_ref = jnp.stack([pd_ref.logabs_sum(lam[q], mu[q], floor)
+                         for q in range(b)])
+    assert out_batched.shape == (b, n, n)
+    np.testing.assert_allclose(np.asarray(out_batched), np.asarray(out_ref),
+                               rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(out_batched),
+                               np.asarray(out_vmapped),
+                               rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("bn", [(1, 8), (3, 17), (16, 64)])
+def test_batched_eei_magnitudes_matches_vmapped(bn):
+    b, n = bn
+    rng = np.random.default_rng(b * 7 + n)
+    a = rng.standard_normal((b, n, n))
+    a = jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+    lam, v = jax.vmap(jnp.linalg.eigh)(a)
+    mu = jax.vmap(identity.minor_spectra)(a)
+    out_batched = pd_ops.eei_magnitudes_batched(lam, mu)
+    out_vmapped = jax.vmap(pd_ops.eei_magnitudes)(lam, mu)
+    np.testing.assert_allclose(np.asarray(out_batched),
+                               np.asarray(out_vmapped),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(out_batched),
+                               np.asarray(jnp.swapaxes(v * v, -1, -2)),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_block_clamping_small_problems():
+    """A default 128 tile on a tiny problem must clamp, not pad 128x."""
+    from repro.kernels.blocks import clamp_block
+
+    assert clamp_block(128, 3) == 8  # pad 3 -> 8, not 3 -> 128
+    assert clamp_block(128, 17) == 24  # aligned, single tile
+    assert clamp_block(128, 64) == 64
+    assert clamp_block(128, 130) == 128  # large dims keep the full tile
+    assert clamp_block(8, 130, align=1) == 8  # batch axis: no alignment
+    assert clamp_block(8, 3, align=1) == 3
+    assert clamp_block(12, 64) == 16  # unaligned requests round up
+
+
 # -- sturm --------------------------------------------------------------------
 
 
@@ -103,6 +158,26 @@ def test_sturm_decoupled_and_degenerate():
     ev = st_ops.sturm_eigenvalues(d, e)
     ref = jnp.linalg.eigvalsh(tridiagonal_matrix(d[0], e[0]))
     np.testing.assert_allclose(np.asarray(ev[0]), np.asarray(ref), atol=1e-10)
+
+
+def test_sturm_stacked_minor_spectra():
+    """sturm_minor_spectra flattens (b, n) minors into one tiled program."""
+    from repro.core import minors
+    from repro.linalg.householder import tridiagonalize_batched
+
+    rng = np.random.default_rng(5)
+    b, n = 3, 12
+    a = rng.standard_normal((b, n, n))
+    a = jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+    d, e, _ = tridiagonalize_batched(a, with_q=False)
+    dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
+    mu = st_ops.sturm_minor_spectra(dm, em)
+    assert mu.shape == (b, n, n - 1)
+    flat = st_ops.sturm_eigenvalues(
+        dm.reshape(b * n, n - 1), em.reshape(b * n, n - 2))
+    np.testing.assert_allclose(np.asarray(mu),
+                               np.asarray(flat.reshape(b, n, n - 1)),
+                               rtol=1e-12, atol=1e-12)
 
 
 @settings(max_examples=10, deadline=None)
