@@ -14,14 +14,21 @@ magnitudes stage as one natively batched 4-D ``(b, i, j, k)`` grid
 (``eei_magnitudes_batched``) against the PR-1 baseline of ``jax.vmap`` over
 the per-matrix 3-D kernel, on a ``(64, 64, 64)`` stack.
 
-``--smoke`` runs one tiny config per backend plus the kernel-grid
-comparison, writes the ``BENCH_throughput.json`` artifact, and exits
-non-zero if a gated metric regresses more than 20% against the committed
-numbers in ``benchmarks/baselines/``.  The gated metric is the
-batched-vs-vmapped kernel speedup (a within-run ratio of two same-shaped
-programs, so it transfers across CI hardware); the loop-normalized engine
-throughput is recorded in the artifact but not gated — the Python-loop
-baseline is dispatch-bound and too load-sensitive to gate on.
+It also measures the serving runtime this repo's PR 3 added: the
+continuous-batching ``EeiServer`` (shape buckets + program cache + async
+double-buffered dispatch) against the synchronous per-request loop on the
+same pre-generated mixed-shape stream.
+
+``--smoke`` runs one tiny config per backend plus the kernel-grid and
+serve-mode comparisons, writes the ``BENCH_throughput.json`` and
+``BENCH_serve.json`` artifacts, and exits non-zero if a gated metric
+regresses more than 20% against the committed numbers in
+``benchmarks/baselines/``.  The gated metrics are within-run ratios of
+identical work (batched-vs-vmapped kernel speedup; continuous-batching vs
+sync-loop requests/s), so they transfer across CI hardware, plus a hard
+zero on steady-state recompiles in the warm server; the loop-normalized
+engine throughput is recorded in the artifact but not gated — the
+Python-loop baseline is dispatch-bound and too load-sensitive to gate on.
 """
 
 from __future__ import annotations
@@ -49,7 +56,14 @@ SMOKE_CONFIGS = [(4, 16, 2)]
 #: The kernel-grid comparison stack (acceptance config for the batched grid).
 KERNEL_GRID_B, KERNEL_GRID_N = 64, 64
 
+#: Serve-mode comparison stream (requests, n, k, max_batch): the
+#: continuous-batching server vs the synchronous per-request loop on the
+#: same mixed-shape stream.
+SERVE_SMOKE = (96, 16, 4, 16)
+SERVE_FULL = (512, 32, 8, 32)
+
 BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
+SERVE_BASELINE_PATH = Path(__file__).parent / "baselines" / "serve_smoke.json"
 
 #: Allowed relative regression against the committed baseline metrics.
 REGRESSION_TOLERANCE = 0.20
@@ -118,6 +132,73 @@ def kernel_grid_comparison(metrics: dict) -> list[Row]:
     ]
 
 
+def serve_mode_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
+    """Continuous-batching EeiServer vs the synchronous per-request loop.
+
+    Both paths serve the *same* pre-generated mixed-shape request stream
+    with the *same* explicit plan.  Compiles happen in a warmup pass for
+    both (the sync loop warms one b=1 program per distinct ``(n, k)``, the
+    server warms one program per shape bucket); the timed pass measures
+    steady-state serving.  The gated metric is the requests/s ratio — a
+    within-run ratio on identical work, so it transfers across CI hardware.
+    """
+    import time as _time
+
+    from repro.engine import EeiServer, SolverEngine, SolverPlan
+    from repro.engine.server import make_eei_stream
+
+    requests, n, k, max_batch = SERVE_SMOKE if smoke else SERVE_FULL
+    plan = SolverPlan(method="eei_tridiag", backend="jnp")
+    stream = make_eei_stream(requests, n, k, seed=0, mixed=True)
+
+    # -- synchronous per-request loop (the PR-2 serving shape) -------------
+    engine = SolverEngine(plan)
+    shapes = sorted({(a.shape[0], k_i) for a, k_i in stream})
+    for n_i, k_i in shapes:  # warm one b=1 program per distinct (n, k)
+        jax.block_until_ready(
+            engine.topk(jnp.zeros((n_i, n_i), jnp.float32), k_i))
+    t0 = _time.perf_counter()
+    for a, k_i in stream:
+        jax.block_until_ready(engine.topk(jnp.asarray(a), k_i))
+    sync_s = _time.perf_counter() - t0
+
+    # -- continuous-batching server ----------------------------------------
+    server = EeiServer(plan, max_batch=max_batch)
+    for a, k_i in stream:  # warmup pass compiles one program per bucket
+        server.submit(a, k_i)
+    server.flush()
+    warm = server.stats()
+    server.reset_stats()
+    t0 = _time.perf_counter()
+    futs = [server.submit(a, k_i) for a, k_i in stream]
+    server.flush()
+    serve_s = _time.perf_counter() - t0
+    assert all(f.done() for f in futs)
+    stats = server.stats()
+
+    ratio = sync_s / serve_s
+    metrics["serve_requests_per_s"] = requests / serve_s
+    metrics["sync_requests_per_s"] = requests / sync_s
+    metrics["serve_vs_sync_ratio"] = ratio
+    metrics["serve_p50_ms"] = stats["p50_latency_ms"]
+    metrics["serve_p99_ms"] = stats["p99_latency_ms"]
+    metrics["serve_program_compiles"] = warm["program_compiles"]
+    metrics["serve_distinct_buckets"] = warm["distinct_buckets"]
+    metrics["serve_steady_state_compiles"] = stats["program_compiles"]
+    return [
+        Row(f"serve/sync_loop/r={requests},n={n},k={k}", sync_s * 1e6,
+            f"requests_per_s={requests / sync_s:.1f} (per-request "
+            f"block_until_ready, {len(shapes)} b=1 programs)"),
+        Row(f"serve/continuous_batching/r={requests},n={n},k={k}",
+            serve_s * 1e6,
+            f"requests_per_s={requests / serve_s:.1f} "
+            f"speedup_vs_sync={ratio:.2f}x "
+            f"compiles={warm['program_compiles']} "
+            f"buckets={warm['distinct_buckets']} "
+            f"p99_ms={stats['p99_latency_ms']:.1f}"),
+    ]
+
+
 def run(smoke: bool = False) -> tuple[list[Row], dict]:
     rows = []
     metrics: dict = {}
@@ -158,14 +239,16 @@ def run(smoke: bool = False) -> tuple[list[Row], dict]:
     return rows, metrics
 
 
-def check_regression(metrics: dict, baseline_path: Path) -> list[str]:
+def check_regression(
+    metrics: dict, baseline_path: Path, keys: tuple
+) -> list[str]:
     """Compare gate metrics against the committed baseline (>20% fails)."""
     if not baseline_path.is_file():
         print(f"# no baseline at {baseline_path}; skipping regression gate")
         return []
     base = json.loads(baseline_path.read_text())["metrics"]
     failures = []
-    for key in ("pallas_vs_loop_ratio", "batched_vs_vmapped_kernel_ratio"):
+    for key in keys:
         if key not in base or key not in metrics:
             continue
         floor = (1.0 - REGRESSION_TOLERANCE) * base[key]
@@ -176,30 +259,49 @@ def check_regression(metrics: dict, baseline_path: Path) -> list[str]:
     return failures
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="one tiny config per backend + the kernel-grid "
-                    "comparison; writes the CI artifact and enforces the "
-                    "regression gate")
-    ap.add_argument("--out", default="BENCH_throughput.json",
-                    help="artifact path for --smoke (default: ./%(default)s)")
-    args = ap.parse_args()
-    rows, metrics = run(smoke=args.smoke)
-    print("name,us_per_call,derived")
-    for row in rows:
-        print(row.csv())
-    if not args.smoke:
-        return
+def _write_artifact(path: str, rows: list, metrics: dict) -> None:
     artifact = {
         "host": jax.default_backend(),
         "rows": [{"name": r.name, "us": r.us, "derived": r.derived}
                  for r in rows],
         "metrics": metrics,
     }
-    Path(args.out).write_text(json.dumps(artifact, indent=2) + "\n")
-    print(f"# wrote {args.out}")
-    failures = check_regression(metrics, BASELINE_PATH)
+    Path(path).write_text(json.dumps(artifact, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config per backend + the kernel-grid and "
+                    "serve-mode comparisons; writes the CI artifacts and "
+                    "enforces the regression gates")
+    ap.add_argument("--out", default="BENCH_throughput.json",
+                    help="artifact path for --smoke (default: ./%(default)s)")
+    ap.add_argument("--serve-out", default="BENCH_serve.json",
+                    help="serve-mode artifact path for --smoke "
+                    "(default: ./%(default)s)")
+    args = ap.parse_args()
+    rows, metrics = run(smoke=args.smoke)
+    serve_metrics: dict = {}
+    serve_rows = serve_mode_comparison(serve_metrics, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows + serve_rows:
+        print(row.csv())
+    if not args.smoke:
+        return
+    _write_artifact(args.out, rows, metrics)
+    _write_artifact(args.serve_out, serve_rows, serve_metrics)
+    failures = check_regression(
+        metrics, BASELINE_PATH,
+        ("pallas_vs_loop_ratio", "batched_vs_vmapped_kernel_ratio"))
+    failures += check_regression(
+        serve_metrics, SERVE_BASELINE_PATH, ("serve_vs_sync_ratio",))
+    if serve_metrics.get("serve_steady_state_compiles", 0):
+        failures.append(
+            "serve_steady_state_compiles: warm server recompiled "
+            f"{serve_metrics['serve_steady_state_compiles']} programs "
+            "(shape buckets must bound compilation)")
     for f in failures:
         print(f"REGRESSION: {f}", file=sys.stderr)
     if failures:

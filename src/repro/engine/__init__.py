@@ -37,3 +37,8 @@ from repro.engine.engine import (  # noqa: F401
     SolverEngine,
     TopkResult,
 )
+from repro.engine.server import (  # noqa: F401
+    EeiServer,
+    ProgramCache,
+    ShapeBucket,
+)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import platform
 import time
@@ -36,25 +37,50 @@ from typing import Optional, Sequence
 
 import jax
 
+log = logging.getLogger("repro.autotune")
+
 CALIBRATION_ENV = "REPRO_CALIBRATION"
 CACHE_PATH = Path.home() / ".cache" / "repro" / "calibration.json"
 REPO_DEFAULT_PATH = Path(__file__).with_name("calibration_default.json")
 
-_SCHEMA_VERSION = 1
+#: v1 (PR 2): jnp-only crossovers, 3-tuple prod_diff blocks (bb fixed at 1).
+#: v2 adds the batch tile ``prod_diff_block_b`` and pallas-backend crossover
+#: measurements; v1 tables still load (warn + defaults), they just plan the
+#: pallas backend from the jnp crossovers like PR 2 did.
+_SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationTable:
     """One host class's measured pipeline constants (see module docstring)."""
 
-    eigh_crossover_n: int  # n below which LAPACK eigh wins outright
-    dense_crossover_n: int  # n up to which dense minors beat tridiag+Sturm
+    eigh_crossover_n: int  # n below which LAPACK eigh wins outright (jnp)
+    dense_crossover_n: int  # n up to which dense minors beat tridiag (jnp)
     prod_diff_blocks: tuple  # (block_i, block_j, block_k)
     sturm_blocks: tuple  # (block_b, block_m)
+    prod_diff_block_b: int = 1  # bb — matrices per batch-grid step
+    pallas_eigh_crossover_n: Optional[int] = None  # None -> use jnp value
+    pallas_dense_crossover_n: Optional[int] = None  # None -> use jnp value
     host: str = ""  # host class the numbers were measured on
     backend: str = ""  # jax backend (cpu | tpu | gpu) at measurement
     measured_at: str = ""  # ISO timestamp, empty for hand-written tables
     source: str = "memory"  # where the table was loaded from
+
+    def crossovers_for(self, backend: Optional[str] = None) -> tuple:
+        """``(eigh_crossover_n, dense_crossover_n)`` for a plan backend.
+
+        The pallas kernels amortize differently than fused jnp (the paper's
+        Table 1 shows the crossover moving with the BLAS backing, and it
+        moves again with kernelized EEI), so v2 tables carry a second
+        measured pair; any other backend — and v1 tables, whose pallas
+        fields are None — falls back to the jnp pair.
+        """
+        if backend == "pallas" and self.pallas_eigh_crossover_n is not None:
+            return (self.pallas_eigh_crossover_n,
+                    self.pallas_dense_crossover_n
+                    if self.pallas_dense_crossover_n is not None
+                    else self.dense_crossover_n)
+        return self.eigh_crossover_n, self.dense_crossover_n
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -71,11 +97,25 @@ class CalibrationTable:
             raise ValueError(
                 f"calibration table schema_version {version} is newer than "
                 f"this code understands ({_SCHEMA_VERSION})")
+        if version < _SCHEMA_VERSION:
+            log.warning(
+                "calibration table %s has schema_version %d (current %d); "
+                "loading with defaults for the missing fields (bb=1, pallas "
+                "crossovers from the jnp sweep) — re-run "
+                "`python -m repro.engine.autotune` to refresh it",
+                source, version, _SCHEMA_VERSION)
+
+        def _opt_int(key):
+            return int(d[key]) if d.get(key) is not None else None
+
         return cls(
             eigh_crossover_n=int(d["eigh_crossover_n"]),
             dense_crossover_n=int(d["dense_crossover_n"]),
             prod_diff_blocks=tuple(int(x) for x in d["prod_diff_blocks"]),
             sturm_blocks=tuple(int(x) for x in d["sturm_blocks"]),
+            prod_diff_block_b=int(d.get("prod_diff_block_b", 1)),
+            pallas_eigh_crossover_n=_opt_int("pallas_eigh_crossover_n"),
+            pallas_dense_crossover_n=_opt_int("pallas_dense_crossover_n"),
             host=str(d.get("host", "")),
             backend=str(d.get("backend", "")),
             measured_at=str(d.get("measured_at", "")),
@@ -183,6 +223,8 @@ def _sym_stack(b: int, n: int, seed: int = 0) -> jax.Array:
 def _sweep_prod_diff_blocks(
     b: int, n: int, candidates: Sequence[tuple]
 ) -> tuple:
+    """Best ``(bb, bi, bj, bk)`` over the candidate grid (bb swept too —
+    b-tiling the batch axis is what recovers occupancy at small ``n``)."""
     from repro.kernels.prod_diff import ops as pd_ops
 
     a = _sym_stack(b, n)
@@ -192,11 +234,11 @@ def _sweep_prod_diff_blocks(
     mu = jnp.sort(_sym_stack(b, n, seed=1)[:, :, : n - 1], axis=-1)
     best, best_t = None, float("inf")
     for blk in candidates:
-        bi, bj, bk = blk
+        bb, bi, bj, bk = blk
 
-        def run(lam=lam, mu=mu, bi=bi, bj=bj, bk=bk):
+        def run(lam=lam, mu=mu, bb=bb, bi=bi, bj=bj, bk=bk):
             return pd_ops.eei_magnitudes_batched(
-                lam, mu, block_i=bi, block_j=bj, block_k=bk)
+                lam, mu, block_b=bb, block_i=bi, block_j=bj, block_k=bk)
 
         t = _time(run)
         if t < best_t:
@@ -225,8 +267,16 @@ def _sweep_sturm_blocks(b: int, n: int, candidates: Sequence[tuple]) -> tuple:
     return best
 
 
-def _measure_crossovers(sizes: Sequence[int], k: int, batch: int):
-    """Smallest n where each EEI method beats its cheaper alternative."""
+def _measure_crossovers(
+    sizes: Sequence[int], k: int, batch: int, backend: str = "jnp"
+):
+    """Smallest n where each EEI method beats its cheaper alternative.
+
+    ``backend`` picks whose stage implementations get timed: the planner's
+    TPU default is pallas, where the kernelized EEI amortizes differently
+    than fused jnp — sweeping only jnp would mis-place the TPU crossovers.
+    (The ``eigh`` leg always runs LAPACK regardless of backend.)
+    """
     from repro.engine.engine import SolverEngine
     from repro.engine.plan import SolverPlan
 
@@ -239,7 +289,7 @@ def _measure_crossovers(sizes: Sequence[int], k: int, batch: int):
         a = _sym_stack(batch, n)
         times = {}
         for method in ("eigh", "eei_dense", "eei_tridiag"):
-            eng = SolverEngine(SolverPlan(method=method, backend="jnp"))
+            eng = SolverEngine(SolverPlan(method=method, backend=backend))
             times[method] = _time(lambda eng=eng, a=a: eng.topk(a, k))
         best_eei = min(times["eei_dense"], times["eei_tridiag"])
         if eigh_x is None and best_eei < times["eigh"]:
@@ -265,25 +315,37 @@ def calibrate(
     """
     if smoke:
         sizes = [8, 16, 32]
-        pd_candidates = [(32, 32, 32), (64, 64, 64)]
+        pd_candidates = [(1, 32, 32, 32), (4, 32, 32, 32), (1, 64, 64, 64)]
         st_candidates = [(8, 64), (8, 128)]
         bench_b, bench_n = 8, 32
     else:
         sizes = [8, 16, 24, 32, 48, 64, 96, 128]
         pd_candidates = [
-            (32, 32, 32), (64, 64, 64), (128, 128, 128),
-            (128, 128, 64), (64, 128, 128),
+            # bb = 1 tiles (the PR-2 grid) ...
+            (1, 32, 32, 32), (1, 64, 64, 64), (1, 128, 128, 128),
+            (1, 128, 128, 64), (1, 64, 128, 128),
+            # ... and b-tiled blocks for the small-n occupancy regime.
+            (4, 32, 32, 32), (8, 32, 32, 32), (4, 64, 64, 64),
+            (8, 16, 64, 64), (16, 8, 32, 32),
         ]
         st_candidates = [(4, 128), (8, 64), (8, 128), (16, 128), (8, 256)]
         bench_b, bench_n = 64, 64
-    eigh_x, dense_x = _measure_crossovers(sizes, k=k, batch=batch)
+    eigh_x, dense_x = _measure_crossovers(sizes, k=k, batch=batch,
+                                          backend="jnp")
+    # The planner's accelerator default is the pallas backend — time its
+    # crossovers too instead of assuming they match fused jnp.
+    pallas_eigh_x, pallas_dense_x = _measure_crossovers(
+        sizes, k=k, batch=batch, backend="pallas")
     pd_blocks = _sweep_prod_diff_blocks(bench_b, bench_n, pd_candidates)
     st_blocks = _sweep_sturm_blocks(bench_b * bench_n, bench_n, st_candidates)
     return CalibrationTable(
         eigh_crossover_n=int(eigh_x),
         dense_crossover_n=int(dense_x),
-        prod_diff_blocks=tuple(pd_blocks),
+        prod_diff_blocks=tuple(pd_blocks[1:]),
         sturm_blocks=tuple(st_blocks),
+        prod_diff_block_b=int(pd_blocks[0]),
+        pallas_eigh_crossover_n=int(pallas_eigh_x),
+        pallas_dense_crossover_n=int(pallas_dense_x),
         host=host_key(),
         backend=jax.default_backend(),
         measured_at=time.strftime("%Y-%m-%dT%H:%M:%S"),

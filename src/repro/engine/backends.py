@@ -131,6 +131,7 @@ def make_pallas_backend(plan: SolverPlan) -> BackendStages:
     # kernel-side defaults are the uncalibrated fallback.
     table = autotune.get_table()
     pd_bi, pd_bj, pd_bk = table.prod_diff_blocks if table else (128, 128, 128)
+    pd_bb = table.prod_diff_block_b if table else 1
     st_bb, st_bm = table.sturm_blocks if table else (8, 128)
 
     def tridiag_eigenvalues(d, e):
@@ -144,7 +145,8 @@ def make_pallas_backend(plan: SolverPlan) -> BackendStages:
 
     def magnitudes(lam, mu):
         return pd_ops.eei_magnitudes_batched(
-            lam, mu, block_i=pd_bi, block_j=pd_bj, block_k=pd_bk)
+            lam, mu, block_b=pd_bb,
+            block_i=pd_bi, block_j=pd_bj, block_k=pd_bk)
 
     return BackendStages(
         name="pallas",

@@ -175,18 +175,26 @@ class SolverEngine:
         if b == 0:
             raise ValueError("cannot solve an empty matrix stack")
         step = self.plan.max_batch if self.plan.max_batch > 0 else b
-        outs = [self._run_chunk(program, a[i0:i0 + step])
+        # Every chunk runs at the full `step` shape — the ragged tail (e.g.
+        # b=100, max_batch=64 -> a 36-row remainder) is padded up and sliced
+        # so chunked solves reuse one compiled executable instead of
+        # compiling a second program for the tail shape.
+        pad_to = step if b > step else 0
+        outs = [self._run_chunk(program, a[i0:i0 + step], pad_to=pad_to)
                 for i0 in range(0, b, step)]
         out = outs[0] if len(outs) == 1 else jax.tree.map(
             lambda *xs: jnp.concatenate(xs, axis=0), *outs)
         return jax.tree.map(lambda x: x[0], out) if squeeze else out
 
-    def _run_chunk(self, program, a: jax.Array):
-        # The sharded backend needs the stack divisible by the mesh batch
-        # axis; pad by repeating the first matrix and slice the result back.
+    def _run_chunk(self, program, a: jax.Array, pad_to: int = 0):
+        # Pad the stack up to `pad_to` (tail chunks of a microbatched run)
+        # and to the mesh batch axis (the sharded backend needs the stack
+        # divisible by it) by repeating the first matrix; slice back after.
         b = a.shape[0]
         mult = self.plan.batch_axis_size
-        pad = (-b) % mult
+        target = max(b, pad_to)
+        target += (-target) % mult
+        pad = target - b
         if pad:
             a = jnp.concatenate(
                 [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])

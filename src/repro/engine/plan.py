@@ -40,19 +40,23 @@ EIGH_CROSSOVER_N = 24
 DENSE_CROSSOVER_N = 64
 
 
-def resolved_crossovers() -> tuple:
+def resolved_crossovers(backend: Optional[str] = None) -> tuple:
     """``(eigh_crossover_n, dense_crossover_n)`` the planner dispatches on.
 
     Reads the measured calibration table (env > user cache > repo default;
     see ``repro.engine.autotune``); the static module constants above are
-    used only when no table can be found.
+    used only when no table can be found.  ``backend`` selects the
+    backend-specific measurement when the table carries one (schema v2
+    times the pallas backend separately — the kernelized EEI crosses over
+    at a different ``n`` than fused jnp); v1 tables fall back to their
+    single jnp-measured pair.
     """
     from repro.engine import autotune
 
     table = autotune.get_table()
     if table is None:
         return EIGH_CROSSOVER_N, DENSE_CROSSOVER_N
-    return table.eigh_crossover_n, table.dense_crossover_n
+    return table.crossovers_for(backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,15 +128,8 @@ def plan_for(
     n = shape[-1]
     b = shape[0] if len(shape) == 3 else 1
 
-    if method is None:
-        eigh_x, dense_x = resolved_crossovers()
-        if n <= eigh_x or (k is not None and k >= n):
-            method = "eigh"
-        elif n <= dense_x:
-            method = "eei_dense"
-        else:
-            method = "eei_tridiag"
-
+    # Backend first: the method crossovers are backend-specific (the
+    # calibration table times the pallas kernels separately from fused jnp).
     if backend is None:
         if (mesh is not None and "data" in mesh.axis_names
                 and mesh.shape["data"] > 1 and b % mesh.shape["data"] == 0):
@@ -143,6 +140,15 @@ def plan_for(
             backend = "jnp"
     if backend != "sharded":
         mesh = None
+
+    if method is None:
+        eigh_x, dense_x = resolved_crossovers(backend)
+        if n <= eigh_x or (k is not None and k >= n):
+            method = "eigh"
+        elif n <= dense_x:
+            method = "eei_dense"
+        else:
+            method = "eei_tridiag"
 
     minor_axis = None
     if mesh is not None and "model" in mesh.axis_names:

@@ -1,0 +1,401 @@
+"""EeiServer — continuous-batching serving runtime for EEI top-k queries.
+
+``launch/serve.py --eei`` (and anything else serving the paper's workload —
+streams of partial eigenpair queries over many small symmetric matrices)
+used to run a static, synchronous loop: one fixed ``(b, n, k)`` per process,
+``block_until_ready`` after every request, and a fresh XLA compile for every
+distinct shape.  This module replaces that loop with a serving runtime:
+
+    submit() ──> request queue (heterogeneous n, k, largest)
+                     │  coalesce: FIFO groups sharing a coalesce key
+                     ▼           (bucket_n, bucket_k, largest)
+                dynamic stacks (up to SolverPlan.max_batch requests)
+                     │  pad to a ShapeBucket: b -> next power of two,
+                     ▼  n -> the kernel block grid, k -> next power of two
+                ProgramCache (bucket -> AOT-compiled executable;
+                     │         hit / miss / compile counters)
+                     ▼
+                async double-buffered dispatch (stack i+1 enqueues while
+                     │                          i computes on device)
+                     ▼
+                completion futures (per-request slices out of the padded
+                                    stack; guard rows never escape)
+
+Shape bucketing is what bounds compilation: every request executes through
+one of a small set of padded shapes, so a 100-request mixed stream compiles
+at most one program per distinct bucket instead of one per distinct request
+shape.  ``n`` rounds up to the kernel block-grid granule
+(``kernels/blocks.clamp_block``'s align-8 sublane grid that the calibrated
+tile shapes clamp to); ``b`` and ``k`` round to powers of two.
+
+Matrices are padded from ``(n, n)`` to ``(bn, bn)`` as ``diag(A, c * I)``
+with the guard value ``c`` placed strictly outside the spectrum (Gershgorin
+bound) on the side *away* from the requested extreme, so the guard
+eigenvalues can never enter a top-k (or bottom-k) window and the A-block
+eigenpairs are preserved exactly (the padded block decouples: Householder,
+Sturm and the sign recurrence all see an exactly-zero junction, which
+``tridiagonal_signs`` handles as a restart).
+
+Async dispatch exploits JAX's asynchronous execution: a compiled program
+call returns immediately with device buffers in flight, so the server keeps
+up to ``max_inflight`` stacks outstanding and only blocks when retiring the
+oldest — stack ``i+1`` is enqueued while ``i`` computes, removing the
+per-request ``block_until_ready`` barrier of the synchronous loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import engine as engine_mod
+from repro.engine.plan import SolverPlan, plan_for
+from repro.kernels import blocks
+
+log = logging.getLogger("repro.engine.server")
+
+#: Default matrix-size granule for shape buckets — the f32 sublane granule
+#: the Pallas block clamp aligns to (``kernels/blocks.clamp_block``).
+N_ALIGN = 8
+
+
+def _bucket_n(n: int, align: int) -> int:
+    """Matrix-size bucket: ``n`` rounded up to the block-grid granule."""
+    return -(-n // align) * align
+
+
+def make_eei_stream(
+    requests: int, n: int, k: int, seed: int = 0, mixed: bool = False
+) -> list:
+    """Pre-generated request stream: ``[(a (n_i, n_i) np.float32, k_i), ...]``.
+
+    Generated *outside* any timed region — host-side data synthesis used to
+    run inside ``serve.py``'s timed loop and deflate reported solves/s.
+    ``mixed`` samples ``n_i`` and ``k_i`` per request (the heterogeneous
+    stream shape buckets exist for); otherwise every request is ``(n, k)``.
+    """
+    rng = np.random.default_rng(seed)
+    sizes = sorted({max(8, n // 2), n, n + max(8, n // 2)}) if mixed else [n]
+    stream = []
+    for _ in range(requests):
+        n_i = int(rng.choice(sizes))
+        k_i = int(rng.integers(1, k + 1)) if mixed else k
+        a = rng.standard_normal((n_i, n_i)).astype(np.float32)
+        stream.append(((a + a.T) / 2, min(k_i, n_i)))
+    return stream
+
+
+class ShapeBucket(NamedTuple):
+    """One padded program shape: every request executes through one of these."""
+
+    b: int  # stack size (power of two)
+    n: int  # matrix size (block-grid aligned)
+    k: int  # top-k (power of two, <= n)
+    largest: bool
+
+    @classmethod
+    def for_requests(cls, count: int, n: int, k: int, largest: bool,
+                     n_align: int = N_ALIGN) -> "ShapeBucket":
+        bn = _bucket_n(n, n_align)
+        return cls(
+            b=blocks.pow2_bucket(count),
+            n=bn,
+            k=min(blocks.pow2_bucket(k), bn),
+            largest=bool(largest),
+        )
+
+
+class ProgramCache:
+    """Bucket -> AOT-compiled executable, with observable counters.
+
+    Replaces the engine's implicit ``lru_cache``-plus-XLA-shape-cache
+    behavior for serving: compiles are an explicit, countable event (tests
+    and the serve log assert a mixed stream compiles at most once per
+    distinct bucket), and entries hold the *compiled* executable — lookup
+    on the hot path is one dict probe, no retracing.
+    """
+
+    def __init__(self):
+        self._programs: "OrderedDict[tuple, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def compiles(self) -> int:
+        """Number of programs compiled (== misses: one compile per miss)."""
+        return self.misses
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def buckets(self) -> list:
+        """The distinct buckets compiled so far (insertion order)."""
+        return [key[0] for key in self._programs]
+
+    def get(self, bucket: ShapeBucket, plan: SolverPlan, dtype) -> object:
+        key = (bucket, plan, jnp.dtype(dtype).name)
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.hits += 1
+            return prog
+        self.misses += 1
+        fn = engine_mod._topk_program(plan, bucket.k, bucket.largest)
+        sds = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.n),
+                                   jnp.dtype(dtype))
+        prog = fn.lower(sds).compile()
+        self._programs[key] = prog
+        return prog
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: queue removal by object
+class _Request:
+    a: np.ndarray  # (n, n) symmetric, already cast to the server dtype
+    n: int
+    k: int
+    largest: bool
+    future: Future
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _InflightStack:
+    result: object  # TopkResult of device arrays, possibly still computing
+    requests: list  # the _Requests whose slices ride in this stack
+    bucket: ShapeBucket
+
+
+class EeiServer:
+    """Continuous-batching server for heterogeneous EEI top-k queries.
+
+    ``submit(a, k, largest)`` enqueues one query over a single symmetric
+    matrix and returns a ``concurrent.futures.Future`` resolving to a
+    ``TopkResult`` of numpy arrays with the *request's* shapes
+    (``(k,)`` eigenvalues, ``(k, n)`` vectors) — bucket padding never leaks.
+    Dispatch is driven by ``pump()`` (dispatches every coalesce group that
+    fills a whole ``max_batch`` stack) and ``flush()`` (drains everything,
+    partial stacks included, and blocks until all futures resolve).
+
+    ``plan`` pins one :class:`SolverPlan` for every bucket; by default each
+    bucket gets ``plan_for((b, n, n), k=...)`` so small-n buckets may route
+    to ``eigh`` while large-n buckets take the kernelized EEI pipeline,
+    exactly like per-request planning would.
+    """
+
+    def __init__(
+        self,
+        plan: Optional[SolverPlan] = None,
+        *,
+        max_batch: int = 64,
+        max_inflight: int = 2,
+        n_align: int = N_ALIGN,
+        dtype=jnp.float32,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self._plan = plan
+        # Stack buckets are powers of two, so a non-pow2 bound would round
+        # *up* past the operator's memory/latency limit — floor it instead
+        # (a max_batch of 48 serves stacks of at most 32).
+        self.max_batch = 1 << (max_batch.bit_length() - 1)
+        self.max_inflight = max_inflight
+        self.n_align = n_align
+        self.dtype = jnp.dtype(dtype)
+        self.cache = ProgramCache()
+        # Admission is bucketed at submit time: coalesce key -> FIFO deque.
+        # Keys are independent, so a partial group in one key never blocks a
+        # full stack forming in another, and group take-off is O(group)
+        # instead of a full-queue scan.
+        self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
+        self._inflight: "deque[_InflightStack]" = deque()
+        self.requests_submitted = 0
+        self.requests_completed = 0
+        self.requests_failed = 0
+        self.stacks_dispatched = 0
+        self.latencies_ms: list = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, a, k: int, largest: bool = True) -> Future:
+        """Admit one ``(n, n)`` top-k query; returns its completion future."""
+        a = np.asarray(a, dtype=self.dtype)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"expected one (n, n) matrix, got {a.shape}")
+        n = a.shape[0]
+        if k < 1 or k > n:
+            raise ValueError(f"k={k} out of range for n={n}")
+        req = _Request(a=a, n=n, k=int(k), largest=bool(largest),
+                       future=Future(), t_submit=time.monotonic())
+        self._queues.setdefault(self._coalesce_key(req), deque()).append(req)
+        self.requests_submitted += 1
+        self.pump()
+        return req.future
+
+    def _coalesce_key(self, req: _Request) -> tuple:
+        # k is deliberately NOT part of the key: requests with different k
+        # stack together (the program runs the group's max k rounded to a
+        # power of two and each future slices its own k back out), so a
+        # mixed-k stream coalesces into full stacks instead of fragmenting
+        # into near-empty per-k groups.
+        return (_bucket_n(req.n, self.n_align), req.largest)
+
+    def _pop_group(self, key: tuple) -> list:
+        q = self._queues[key]
+        group = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+        if not q:
+            del self._queues[key]
+        return group
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _guard_value(self, a: np.ndarray, largest: bool) -> float:
+        """Diagonal guard for the padded block: strictly outside the
+        spectrum, on the side away from the requested extreme."""
+        radius = np.sum(np.abs(a), axis=1) - np.abs(np.diagonal(a))
+        diag = np.diagonal(a)
+        lo = float(np.min(diag - radius))
+        hi = float(np.max(diag + radius))
+        margin = max(1.0, 0.01 * (hi - lo))
+        return lo - margin if largest else hi + margin
+
+    def _assemble(self, group: list, bucket: ShapeBucket) -> np.ndarray:
+        stack = np.zeros((bucket.b, bucket.n, bucket.n), dtype=self.dtype)
+        for row, req in enumerate(group):
+            stack[row, : req.n, : req.n] = req.a
+            if req.n < bucket.n:
+                guard = self._guard_value(req.a, req.largest)
+                idx = np.arange(req.n, bucket.n)
+                stack[row, idx, idx] = guard
+        # Batch padding repeats the first padded row: real matrices, so the
+        # program never sees degenerate all-zero inputs; sliced off below.
+        stack[len(group):] = stack[0]
+        return stack
+
+    def _dispatch(self, group: list) -> None:
+        bucket = ShapeBucket.for_requests(
+            len(group), max(r.n for r in group), max(r.k for r in group),
+            group[0].largest, n_align=self.n_align)
+        # The plan is a pure function of the bucket (never of raw group
+        # values), so one bucket can never compile under two plans.
+        plan = self._plan
+        if plan is None:
+            plan = plan_for((bucket.b, bucket.n, bucket.n), k=bucket.k)
+        # The sharded backend needs the stack divisible by the mesh batch
+        # axis (SolverEngine._run_chunk pads for the same reason) — round
+        # the pow2 bucket up to the next multiple.
+        mult = plan.batch_axis_size
+        if bucket.b % mult:
+            bucket = bucket._replace(b=bucket.b + (-bucket.b) % mult)
+        stack = self._assemble(group, bucket)
+        # Keep at most max_inflight stacks of device buffers live: retire
+        # the oldest *before* launching when at capacity.
+        while len(self._inflight) >= self.max_inflight:
+            self._retire(self._inflight.popleft())
+        try:
+            program = self.cache.get(bucket, plan, self.dtype)
+            result = program(jnp.asarray(stack))  # async: returns at once
+        except Exception as exc:  # compile/launch failure: fail the group,
+            self._fail(group, exc)  # not the whole serving process
+            return
+        self._inflight.append(_InflightStack(result, list(group), bucket))
+        self.stacks_dispatched += 1
+
+    def _fail(self, requests: list, exc: Exception) -> None:
+        """Resolve a group's futures with the error — a failed dispatch
+        must never strand callers blocked on ``future.result()``."""
+        log.error("EEI stack dispatch failed for %d request(s): %s",
+                  len(requests), exc)
+        for req in requests:
+            req.future.set_exception(exc)
+            self.requests_failed += 1
+
+    def _retire(self, inflight: _InflightStack) -> None:
+        """Block on one stack and resolve its requests' futures."""
+        try:
+            lam = np.asarray(inflight.result.eigenvalues)  # sync point
+            vec = np.asarray(inflight.result.vectors)
+        except Exception as exc:  # device-side failure surfaces here
+            self._fail(inflight.requests, exc)
+            return
+        t_done = time.monotonic()
+        for row, req in enumerate(inflight.requests):
+            # The program returns `bucket.k` ascending pairs at the requested
+            # extreme.  Guards were placed on the far side of the spectrum,
+            # so the request's k pairs are the window's own extreme end:
+            # the *last* k for largest, the *first* k for smallest.
+            if req.largest:
+                lam_r = lam[row, -req.k:]
+                vec_r = vec[row, -req.k:, : req.n]
+            else:
+                lam_r = lam[row, : req.k]
+                vec_r = vec[row, : req.k, : req.n]
+            req.future.set_result(
+                engine_mod.TopkResult(lam_r, vec_r))
+            self.latencies_ms.append((t_done - req.t_submit) * 1e3)
+            self.requests_completed += 1
+
+    # -- draining ----------------------------------------------------------
+
+    def pump(self) -> None:
+        """Dispatch every coalesce group that fills a whole stack.
+
+        Partial groups keep accumulating (so the stream batches instead of
+        degenerating to per-request programs), but only within their own
+        key — a partial group never delays a full stack of another shape.
+        """
+        for key in [k for k, q in self._queues.items()
+                    if len(q) >= self.max_batch]:
+            while len(self._queues.get(key, ())) >= self.max_batch:
+                self._dispatch(self._pop_group(key))
+
+    def flush(self) -> None:
+        """Dispatch all queued requests (partial stacks too) and block
+        until every in-flight stack has retired."""
+        while self._queues:
+            key = next(iter(self._queues))
+            self._dispatch(self._pop_group(key))
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+
+    # -- observability -----------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero request/stack/latency counters and the cache's hit counter,
+        keeping compiled programs — benchmarks warm the cache with one pass,
+        reset, then time a steady-state pass (compiles then stay 0)."""
+        self.requests_submitted = 0
+        self.requests_completed = 0
+        self.requests_failed = 0
+        self.stacks_dispatched = 0
+        self.latencies_ms = []
+        self.cache.hits = 0
+        self.cache.misses = 0
+
+    def stats(self) -> dict:
+        lat = sorted(self.latencies_ms)
+
+        def pct(p):
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, int(p / 100.0 * len(lat)))]
+
+        return {
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "requests_failed": self.requests_failed,
+            "stacks_dispatched": self.stacks_dispatched,
+            "program_compiles": self.cache.compiles,
+            "program_hits": self.cache.hits,
+            "distinct_buckets": len(self.cache),
+            "p50_latency_ms": pct(50),
+            "p99_latency_ms": pct(99),
+        }

@@ -12,6 +12,30 @@ which bounds padding overhead at ``align - 1`` elements per axis instead of
 from __future__ import annotations
 
 
+def pow2_bucket(x: int) -> int:
+    """Smallest power of two ``>= x`` (``x >= 1``).
+
+    Shape-bucketing helper shared by the serving runtime (stack sizes round
+    to powers of two so a request stream executes through a bounded set of
+    compiled programs) and the batch-axis block clamp below.
+    """
+    if x < 1:
+        raise ValueError(f"bucket size must be >= 1, got {x}")
+    return 1 << (x - 1).bit_length()
+
+
+def clamp_batch_block(requested: int, b: int) -> int:
+    """Batch-axis (``bb``) block near ``requested`` for a ``b``-row stack.
+
+    The batch axis has no hardware granule (``align=1``) but a block that
+    does not divide the padded stack wastes whole phantom matrices, so the
+    clamp snaps to a power of two: the padded stack is then at most
+    ``pow2_bucket(b)`` rows and every grid step is full.
+    """
+    clamped = clamp_block(requested, b, align=1)
+    return min(pow2_bucket(clamped), pow2_bucket(b))
+
+
 def clamp_block(requested: int, dim: int, align: int = 8) -> int:
     """Aligned block near ``requested`` that does not overshoot ``dim``.
 

@@ -7,10 +7,15 @@ tables over a stack of ``b`` matrices).
 Design (TPU-native re-think of the paper's "batched products"):
 
 * **batch is a first-class grid axis**: one ``pallas_call`` covers the whole
-  ``(b, n, n)`` stack with a 4-D ``(b, I/bi, J/bj, K/bk)`` grid — no
+  ``(b, n, n)`` stack with a 4-D ``(B/bb, I/bi, J/bj, K/bk)`` grid — no
   ``jax.vmap`` lifting, no per-matrix program launches, and the validity
   mask is *shared* across the batch (every matrix in a stack has the same
   shape) so it is fetched once per tile instead of once per matrix;
+* **the batch axis itself is tiled** (``bb >= 1`` matrices per grid step):
+  at very small ``n`` a single matrix's ``(bi, bj)`` tile underfills the
+  8x128 VPU registers, so a batch tile stacks ``bb`` matrices into one
+  rank-4 ``(bb, bi, chunk, bj)`` VPU op and recovers sublane occupancy;
+  ``bb = 1`` reproduces the PR-2 one-matrix-per-step grid exactly;
 * the paper's batch = our VMEM tile; per-batch partial ratios = per-tile
   partial log-sums accumulated across the ``k`` grid axis;
 * log-space replaces the paper's ratio-pairing as the overflow fix, so tile
@@ -22,7 +27,7 @@ Design (TPU-native re-think of the paper's "batched products"):
 * ``mu`` is passed transposed ``(K, J)`` so the lane dimension of every load
   matches the lane dimension of the output tile (no in-kernel transposes).
 
-Grid: ``(b, I/bi, J/bj, K/bk)`` with ``k`` innermost; the output block is
+Grid: ``(B/bb, I/bi, J/bj, K/bk)`` with ``k`` innermost; the output block is
 revisited across ``k`` steps and accumulated in place (initialized at
 ``k == 0``).  The legacy single-matrix 3-D grid (the PR-1 kernel this
 replaces on the engine path) is kept as ``logabs_sum_padded`` — it is the
@@ -52,33 +57,38 @@ def _logabs_sum_batched_kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    lam = lam_ref[0]  # (bi, 1) sublane vector
-    mut = mut_ref[0]  # (bk, bj)
+    lam = lam_ref[...]  # (bb, bi, 1)
+    mut = mut_ref[...]  # (bb, bk, bj)
     mask = mask_ref[...]  # (bk, bj), shared across the batch axis
-    floor = floor_ref[0, 0, 0]
+    floor = floor_ref[...]  # (bb, 1, 1) per-matrix gap clamp
 
     def body(c, acc):
-        mu_c = jax.lax.dynamic_slice_in_dim(mut, c * K_CHUNK, K_CHUNK, axis=0)
+        mu_c = jax.lax.dynamic_slice_in_dim(mut, c * K_CHUNK, K_CHUNK, axis=1)
         m_c = jax.lax.dynamic_slice_in_dim(mask, c * K_CHUNK, K_CHUNK, axis=0)
-        ad = jnp.abs(lam[:, :, None] - mu_c[None, :, :])  # (bi, K_CHUNK, bj)
-        ad = jnp.where(m_c[None, :, :] > 0, jnp.maximum(ad, floor), 1.0)
-        return acc + jnp.sum(jnp.log(ad), axis=1)
+        # (bb, bi, K_CHUNK, bj): bb matrices advance in one VPU op.
+        ad = jnp.abs(lam[:, :, :, None] - mu_c[:, None, :, :])
+        ad = jnp.where(
+            m_c[None, None, :, :] > 0,
+            jnp.maximum(ad, floor[:, :, :, None]), 1.0)
+        return acc + jnp.sum(jnp.log(ad), axis=2)
 
     acc = jax.lax.fori_loop(
-        0, block_k // K_CHUNK, body, jnp.zeros(out_ref.shape[1:], out_ref.dtype)
+        0, block_k // K_CHUNK, body, jnp.zeros(out_ref.shape, out_ref.dtype)
     )
-    out_ref[...] += acc[None]
+    out_ref[...] += acc
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_i", "block_j", "block_k", "interpret"),
 )
 def logabs_sum_batched_padded(
-    lam_col: jax.Array,  # (B, I, 1), I % block_i == 0
+    lam_col: jax.Array,  # (B, I, 1), B % block_b == 0, I % block_i == 0
     mu_t: jax.Array,  # (B, K, J), K % block_k == 0, J % block_j == 0
     mask_t: jax.Array,  # (K, J) 1.0 valid / 0.0 padded — shared across B
-    floor: jax.Array,  # (B, 1, 1) per-matrix gap clamp
+    floor: jax.Array,  # (B, 1, 1) per-matrix gap clamp (1.0 on padded rows)
     *,
+    block_b: int = 1,
     block_i: int = 128,
     block_j: int = 128,
     block_k: int = 128,
@@ -89,17 +99,23 @@ def logabs_sum_batched_padded(
         raise ValueError(f"block_k must be a multiple of {K_CHUNK}, got {block_k}")
     b_total, i_total, _ = lam_col.shape
     k_total, j_total = mask_t.shape
-    grid = (b_total, i_total // block_i, j_total // block_j, k_total // block_k)
+    if b_total % block_b:
+        raise ValueError(
+            f"batch {b_total} not a multiple of block_b={block_b}")
+    grid = (b_total // block_b, i_total // block_i, j_total // block_j,
+            k_total // block_k)
     return pl.pallas_call(
         functools.partial(_logabs_sum_batched_kernel, block_k=block_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_i, 1), lambda b, i, j, k: (b, i, 0)),
-            pl.BlockSpec((1, block_k, block_j), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec((block_b, block_i, 1), lambda b, i, j, k: (b, i, 0)),
+            pl.BlockSpec(
+                (block_b, block_k, block_j), lambda b, i, j, k: (b, k, j)),
             pl.BlockSpec((block_k, block_j), lambda b, i, j, k: (k, j)),
-            pl.BlockSpec((1, 1, 1), lambda b, i, j, k: (b, 0, 0)),
+            pl.BlockSpec((block_b, 1, 1), lambda b, i, j, k: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_i, block_j), lambda b, i, j, k: (b, i, j)),
+        out_specs=pl.BlockSpec(
+            (block_b, block_i, block_j), lambda b, i, j, k: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((b_total, i_total, j_total), lam_col.dtype),
         interpret=interpret,
     )(lam_col, mu_t, mask_t, floor)

@@ -37,13 +37,15 @@ def default_interpret() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_i", "block_j", "block_k", "interpret"),
 )
 def logabs_sum_batched(
     lam: jax.Array,  # (B, I)
     mu: jax.Array,  # (B, J, K)
     floor: jax.Array | float,  # scalar or (B,)
     *,
+    block_b: int = 1,
     block_i: int = 128,
     block_j: int = 128,
     block_k: int = 128,
@@ -51,34 +53,42 @@ def logabs_sum_batched(
 ):
     """``out[b, i, j] = sum_k log(max(|lam[b, i] - mu[b, j, k]|, floor[b]))``.
 
-    One pallas_call for the whole stack: batch rides the leading grid axis,
-    the padding mask is shared across matrices, and blocks are clamped to the
-    padded problem shape (no 128x padding for small ``n``).
+    One pallas_call for the whole stack: batch rides the leading grid axis
+    (``block_b`` matrices per grid step — b-tiling recovers sublane occupancy
+    at very small ``n``), the padding mask is shared across matrices, and
+    blocks are clamped to the padded problem shape (no 128x padding for small
+    ``n``).  Batch-padded rows get ``lam = mu = 0`` and ``floor = 1`` so they
+    contribute exact zeros instead of ``log(0)``; they are sliced off before
+    returning.
     """
     if interpret is None:
         interpret = default_interpret()
     b_n, i_n = lam.shape
     _, j_n, k_n = mu.shape
+    block_b = blocks.clamp_batch_block(block_b, b_n)
     block_i = blocks.clamp_block(block_i, i_n)
     block_j = blocks.clamp_block(block_j, j_n)
     block_k = blocks.clamp_block(block_k, k_n, align=_kernel.K_CHUNK)
-    lam_col = _pad_to(lam[:, :, None], 1, block_i)
-    mu_p = _pad_to(_pad_to(mu, 1, block_j), 2, block_k)
+    lam_col = _pad_to(_pad_to(lam[:, :, None], 1, block_i), 0, block_b)
+    mu_p = _pad_to(
+        _pad_to(_pad_to(mu, 1, block_j), 2, block_k), 0, block_b)
     mask_p = _pad_to(
         _pad_to(jnp.ones((j_n, k_n), lam.dtype), 0, block_j), 1, block_k
     )
     floor_arr = (jnp.zeros((b_n,), lam.dtype) + jnp.asarray(floor, lam.dtype))
+    floor_arr = _pad_to(floor_arr, 0, block_b, value=1.0)
     out = _kernel.logabs_sum_batched_padded(
         lam_col,
         jnp.swapaxes(mu_p, 1, 2),
         jnp.swapaxes(mask_p, 0, 1),
-        floor_arr.reshape(b_n, 1, 1),
+        floor_arr.reshape(-1, 1, 1),
+        block_b=block_b,
         block_i=block_i,
         block_j=block_j,
         block_k=block_k,
         interpret=interpret,
     )
-    return out[:, :i_n, :j_n]
+    return out[:b_n, :i_n, :j_n]
 
 
 def _floor_from_spectra(lam: jax.Array) -> jax.Array:
@@ -89,12 +99,14 @@ def _floor_from_spectra(lam: jax.Array) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("block_b", "block_i", "block_j", "block_k", "interpret"),
 )
 def eei_magnitudes_batched(
     lam: jax.Array,  # (B, n) matrix spectra (ascending)
     mu: jax.Array,  # (B, n, n-1) minor spectra
     *,
+    block_b: int = 1,
     block_i: int = 128,
     block_j: int = 128,
     block_k: int = 128,
@@ -108,7 +120,7 @@ def eei_magnitudes_batched(
     floor = _floor_from_spectra(lam)  # (B,)
     log_num = logabs_sum_batched(
         lam, mu, floor,
-        block_i=block_i, block_j=block_j, block_k=block_k,
+        block_b=block_b, block_i=block_i, block_j=block_j, block_k=block_k,
         interpret=interpret,
     )
     diff = jnp.abs(lam[:, :, None] - lam[:, None, :])

@@ -10,11 +10,17 @@ scheduler concern; the cache layout supports it — position is per-batch
 scalar here for the dry-run shapes).
 
 The EEI mode serves the paper's workload — streams of top-k eigenpair
-queries over stacks of symmetric matrices — through the plan-driven
-``repro.engine.SolverEngine`` (one batched program per stack):
+queries over many small symmetric matrices — through the continuous-batching
+``repro.engine.EeiServer`` (queue -> coalesce -> shape buckets -> program
+cache -> async double-buffered dispatch):
 
     PYTHONPATH=src python -m repro.launch.serve --eei --batch 8 --n 64 \
-        --k 4 --requests 16
+        --k 4 --requests 64 [--mixed] [--sync]
+
+``--mixed`` samples ``n`` and ``k`` per request (the heterogeneous stream
+the server exists for); ``--sync`` runs the PR-2-style synchronous
+per-request loop instead (the baseline the server is benchmarked against).
+The request stream is generated *before* the timed region either way.
 """
 
 from __future__ import annotations
@@ -38,46 +44,81 @@ log = logging.getLogger("repro.serve")
 
 
 def serve_eei(args):
-    """Serve a stream of batched top-k spectral queries via the engine."""
-    from repro.engine import SolverEngine, autotune, plan_for, \
+    """Serve a pre-generated stream of top-k spectral queries.
+
+    Default: continuous batching through ``EeiServer``.  ``--sync``: the
+    synchronous per-request loop (one engine.topk + block_until_ready per
+    matrix) — the PR-2 baseline the server's ≥2x requests/s claim is
+    measured against.
+    """
+    from repro.engine import EeiServer, SolverEngine, autotune, plan_for, \
         resolved_crossovers
+    from repro.engine.server import make_eei_stream
 
     if args.calibration:
         autotune.set_table(autotune.load_table(args.calibration))
     table = autotune.get_table()
-    eigh_x, dense_x = resolved_crossovers()
-    log.info("plan calibration: %s (eigh_crossover_n=%d dense_crossover_n=%d)",
-             table.source if table else "static fallback constants",
-             eigh_x, dense_x)
 
     mesh = parse_mesh(args.mesh)
-    rng = np.random.default_rng(args.seed)
-    shape = (args.batch, args.n, args.n)
-    plan = plan_for(shape, k=args.k,
+    plan = plan_for((args.batch, args.n, args.n), k=args.k,
                     mesh=mesh if mesh.devices.size > 1 else None)
-    engine = SolverEngine(plan)
-    log.info("eei serve plan: method=%s backend=%s batch=%d n=%d k=%d",
-             plan.method, plan.backend, args.batch, args.n, args.k)
+    # Crossovers are backend-specific since schema v2 — log the pair the
+    # resolved plan's backend actually dispatches on.
+    eigh_x, dense_x = resolved_crossovers(plan.backend)
+    log.info("plan calibration: %s (backend=%s eigh_crossover_n=%d "
+             "dense_crossover_n=%d)",
+             table.source if table else "static fallback constants",
+             plan.backend, eigh_x, dense_x)
+    if args.mixed and not args.sync:
+        # The server re-plans per shape bucket; the fixed plan above is
+        # only the log's reference point for the nominal (batch, n, k).
+        log.info("eei serve: per-bucket planning, max_batch=%d nominal "
+                 "n=%d k=%d mode=continuous-batching mixed-shapes",
+                 args.batch, args.n, args.k)
+    else:
+        log.info("eei serve plan: method=%s backend=%s max_batch=%d n=%d "
+                 "k=%d mode=%s", plan.method, plan.backend, args.batch,
+                 args.n, args.k,
+                 "sync-loop" if args.sync else "continuous-batching")
 
-    def stack():
-        a = rng.standard_normal(shape).astype(np.float32)
-        return jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+    # The stream is generated before t0 — only serving is timed.
+    stream = make_eei_stream(args.requests, args.n, args.k,
+                             seed=args.seed, mixed=args.mixed)
 
-    # Warmup compiles the batched program once per (plan, n, k).
-    out = engine.topk(stack(), args.k)
-    jax.block_until_ready(out)
+    if args.sync:
+        engine = SolverEngine(plan)
+        # Warmup compiles outside the timed region, like the server path.
+        for n_i in sorted({a.shape[0] for a, _ in stream}):
+            for k_i in sorted({k for a, k in stream if a.shape[0] == n_i}):
+                jax.block_until_ready(
+                    engine.topk(jnp.zeros((n_i, n_i), jnp.float32), k_i))
+        t0 = time.monotonic()
+        out = None
+        for a, k_i in stream:
+            out = engine.topk(jnp.asarray(a), k_i)
+            jax.block_until_ready(out)
+        dt = time.monotonic() - t0
+        log.info("sync loop served %d requests in %.3fs (%.1f solves/s, "
+                 "%.1f requests/s)", len(stream), dt,
+                 len(stream) / max(dt, 1e-9), len(stream) / max(dt, 1e-9))
+        return out
 
+    server = EeiServer(plan if args.mixed is False else None,
+                       max_batch=args.batch, max_inflight=args.inflight)
     t0 = time.monotonic()
-    solved = 0
-    for _ in range(args.requests):
-        out = engine.topk(stack(), args.k)
-        jax.block_until_ready(out)
-        solved += args.batch
+    futures = [server.submit(a, k_i) for a, k_i in stream]
+    server.flush()
     dt = time.monotonic() - t0
-    log.info("served %d top-%d solves in %.3fs (%.1f solves/s, "
-             "%.1f requests/s)", solved, args.k, dt,
-             solved / max(dt, 1e-9), args.requests / max(dt, 1e-9))
-    return out
+    stats = server.stats()
+    log.info("served %d requests in %.3fs (%.1f solves/s, %.1f requests/s)",
+             len(stream), dt, len(stream) / max(dt, 1e-9),
+             len(stream) / max(dt, 1e-9))
+    log.info("latency p50=%.1fms p99=%.1fms | %d stacks, %d program "
+             "compiles over %d distinct buckets, %d cache hits",
+             stats["p50_latency_ms"], stats["p99_latency_ms"],
+             stats["stacks_dispatched"], stats["program_compiles"],
+             stats["distinct_buckets"], stats["program_hits"])
+    return futures[-1].result()
 
 
 def main(argv=None):
@@ -87,8 +128,17 @@ def main(argv=None):
                     help="serve batched EEI top-k queries instead of an LM")
     ap.add_argument("--n", type=int, default=64, help="EEI matrix size")
     ap.add_argument("--k", type=int, default=4, help="EEI top-k per query")
-    ap.add_argument("--requests", type=int, default=8,
-                    help="EEI request batches to serve")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="EEI requests (single-matrix queries) to serve")
+    ap.add_argument("--mixed", action="store_true",
+                    help="EEI: sample n and k per request (heterogeneous "
+                    "stream through the shape-bucketed server)")
+    ap.add_argument("--sync", action="store_true",
+                    help="EEI: synchronous per-request loop instead of the "
+                    "continuous-batching server (baseline)")
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="EEI server: max in-flight stacks (double "
+                    "buffering = 2)")
     ap.add_argument("--calibration", default=None,
                     help="path to an autotune calibration table (JSON); "
                     "default: env/cache/repo-default resolution chain")

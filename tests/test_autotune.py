@@ -1,0 +1,101 @@
+"""Calibration-table schema: v2 round-trip, v1 warn-and-fallback, and the
+backend-specific crossover resolution the planner dispatches on."""
+
+import json
+import logging
+from pathlib import Path
+
+import pytest
+
+from repro.engine import autotune
+from repro.engine.autotune import CalibrationTable, load_table
+
+PR2_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr2.json"
+
+
+def _v2_table() -> CalibrationTable:
+    return CalibrationTable(
+        eigh_crossover_n=24, dense_crossover_n=48,
+        prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
+        prod_diff_block_b=4,
+        pallas_eigh_crossover_n=16, pallas_dense_crossover_n=32,
+        host="test", backend="cpu")
+
+
+def test_v2_round_trip(tmp_path):
+    table = _v2_table()
+    path = table.save(tmp_path / "cal.json")
+    loaded = load_table(path)
+    d = json.loads(path.read_text())
+    assert d["schema_version"] == 2
+    assert loaded.prod_diff_block_b == 4
+    assert loaded.pallas_eigh_crossover_n == 16
+    assert loaded.crossovers_for("pallas") == (16, 32)
+    assert loaded.crossovers_for("jnp") == (24, 48)
+    assert loaded.crossovers_for(None) == (24, 48)
+
+
+def test_v1_table_loads_with_warning_and_defaults(tmp_path, caplog):
+    """Older (PR-2, schema v1) tables must warn and fall back, not crash."""
+    v1 = {
+        "schema_version": 1,
+        "eigh_crossover_n": 128, "dense_crossover_n": 8,
+        "prod_diff_blocks": [64, 128, 128], "sturm_blocks": [16, 128],
+        "host": "x86_64-cpu-cpu", "backend": "cpu",
+    }
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(v1))
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        table = load_table(path)
+    assert "schema_version 1" in caplog.text
+    assert table.eigh_crossover_n == 128
+    assert table.prod_diff_block_b == 1  # bb default: PR-2 grid
+    assert table.pallas_eigh_crossover_n is None
+    # pallas falls back to the jnp-measured pair on v1 tables
+    assert table.crossovers_for("pallas") == (128, 8)
+
+
+def test_pr2_checked_in_default_still_loads():
+    """Regression: the exact calibration_default.json shipped by PR 2."""
+    table = load_table(PR2_DEFAULT)
+    assert table.eigh_crossover_n == 128
+    assert table.dense_crossover_n == 8
+    assert table.prod_diff_blocks == (64, 128, 128)
+    assert table.prod_diff_block_b == 1
+    assert table.crossovers_for("pallas") == table.crossovers_for("jnp")
+
+
+def test_newer_schema_still_rejected(tmp_path):
+    path = tmp_path / "future.json"
+    d = _v2_table().to_dict()
+    d["schema_version"] = 99
+    path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="newer"):
+        load_table(path)
+
+
+def test_repo_default_is_current_schema():
+    """The committed repo default is regenerated at the current schema (the
+    v1 copy lives in tests/data/ purely as the back-compat fixture)."""
+    d = json.loads(autotune.REPO_DEFAULT_PATH.read_text())
+    assert d["schema_version"] == autotune._SCHEMA_VERSION
+    table = load_table(autotune.REPO_DEFAULT_PATH)
+    assert table.pallas_eigh_crossover_n is not None
+
+
+def test_planner_uses_backend_specific_crossovers():
+    from repro.engine import plan, plan_for, set_table
+
+    try:
+        set_table(CalibrationTable(
+            eigh_crossover_n=8, dense_crossover_n=12,
+            prod_diff_blocks=(32, 32, 32), sturm_blocks=(8, 64),
+            prod_diff_block_b=2,
+            pallas_eigh_crossover_n=16, pallas_dense_crossover_n=24))
+        assert plan.resolved_crossovers("jnp") == (8, 12)
+        assert plan.resolved_crossovers("pallas") == (16, 24)
+        # n=14: above the jnp eigh crossover but below the pallas one
+        assert plan_for((14, 14), backend="jnp").method == "eei_tridiag"
+        assert plan_for((14, 14), backend="pallas").method == "eigh"
+    finally:
+        set_table(None)

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.engine import (
+    SolveResult,
     SolverEngine,
     SolverPlan,
     available_backends,
@@ -98,6 +99,26 @@ def test_eigenvalues_only_and_microbatching():
                                rtol=1e-6, atol=1e-8)
     lam2, _ = engine.solve(a)  # 5 -> chunks of 2, 2, 1
     np.testing.assert_allclose(np.asarray(lam2), np.asarray(lam_ref),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_microbatch_ragged_tail_reuses_one_program_shape():
+    """b=5 with max_batch=2 must run every chunk at the (2, n, n) step shape
+    — the ragged 1-row tail is padded up and sliced, not recompiled."""
+    engine = SolverEngine(SolverPlan(method="eei_tridiag", max_batch=2))
+    seen = []
+
+    def fake_program(a):
+        seen.append(a.shape)
+        return SolveResult(jnp.zeros(a.shape[:2]), jnp.zeros(a.shape))
+
+    engine._run(fake_program, _stack(6, b=5))
+    assert seen == [(2, N, N)] * 3  # uniform shapes: one executable
+    # and the padded-tail path is numerically invisible
+    a = _stack(6, b=5)
+    lam_ref, _ = _oracle(a)
+    lam, _ = engine.solve(a)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(lam_ref),
                                rtol=1e-6, atol=1e-8)
 
 

@@ -114,9 +114,44 @@ def test_batched_eei_magnitudes_matches_vmapped(bn):
                                rtol=1e-6, atol=1e-9)
 
 
+@pytest.mark.parametrize("bb", [2, 4, 8])
+@pytest.mark.parametrize("bn", [(3, 9), (8, 16), (6, 24)])
+def test_b_tiled_batch_block_bitwise_matches_bb1(bn, bb):
+    """bb > 1 stacks matrices into one grid step; every output element
+    still depends only on its own batch row, so results are *bitwise*
+    equal to the one-matrix-per-step (bb=1) grid and match the reference,
+    including when bb does not divide b (batch rows pad with floor=1)."""
+    b, n = bn
+    rng = np.random.default_rng(b * 31 + n)
+    lam = jnp.asarray(np.sort(rng.standard_normal((b, n)), axis=-1))
+    mu = jnp.asarray(rng.standard_normal((b, n, n - 1)))
+    out_bb = pd_ops.logabs_sum_batched(lam, mu, 1e-9, block_b=bb)
+    out_b1 = pd_ops.logabs_sum_batched(lam, mu, 1e-9, block_b=1)
+    assert out_bb.shape == (b, n, n)
+    np.testing.assert_array_equal(np.asarray(out_bb), np.asarray(out_b1))
+    out_ref = jnp.stack([pd_ref.logabs_sum(lam[q], mu[q], 1e-9)
+                         for q in range(b)])
+    np.testing.assert_allclose(np.asarray(out_bb), np.asarray(out_ref),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_b_tiled_eei_magnitudes_matches_eigh():
+    b, n = 5, 12
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((b, n, n))
+    a = jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+    lam, v = jax.vmap(jnp.linalg.eigh)(a)
+    mu = jax.vmap(identity.minor_spectra)(a)
+    out = pd_ops.eei_magnitudes_batched(lam, mu, block_b=4)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(v * v, -1, -2)),
+                               rtol=1e-6, atol=1e-9)
+
+
 def test_block_clamping_small_problems():
     """A default 128 tile on a tiny problem must clamp, not pad 128x."""
-    from repro.kernels.blocks import clamp_block
+    from repro.kernels.blocks import clamp_batch_block, clamp_block, \
+        pow2_bucket
 
     assert clamp_block(128, 3) == 8  # pad 3 -> 8, not 3 -> 128
     assert clamp_block(128, 17) == 24  # aligned, single tile
@@ -125,6 +160,14 @@ def test_block_clamping_small_problems():
     assert clamp_block(8, 130, align=1) == 8  # batch axis: no alignment
     assert clamp_block(8, 3, align=1) == 3
     assert clamp_block(12, 64) == 16  # unaligned requests round up
+    # batch-axis clamp snaps to powers of two (full grid steps after pow2
+    # stack bucketing) and never exceeds the bucketed stack
+    assert pow2_bucket(1) == 1 and pow2_bucket(5) == 8 and \
+        pow2_bucket(64) == 64
+    assert clamp_batch_block(8, 5) == 8  # 5 pads to one full step of 8
+    assert clamp_batch_block(128, 6) == 8
+    assert clamp_batch_block(1, 100) == 1
+    assert clamp_batch_block(3, 100) == 4
 
 
 # -- sturm --------------------------------------------------------------------

@@ -1,0 +1,282 @@
+"""EeiServer: continuous batching, shape buckets, program-cache bounds.
+
+The serving machinery's contract: coalescing + bucket padding + slicing add
+*zero* numerical change (server output is bit-identical to ``SolverEngine``
+on the equivalent padded stack, and bit-identical k-slices of it), padded
+rows/components never leak into results, and a mixed 100-request stream
+executes through at most one compile per distinct shape bucket.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import (
+    EeiServer,
+    ProgramCache,
+    ShapeBucket,
+    SolverEngine,
+    SolverPlan,
+)
+from repro.engine.server import make_eei_stream
+
+PLAN = SolverPlan(method="eei_tridiag", backend="jnp")
+
+
+def _sym(rng, n: int) -> np.ndarray:
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    return (a + a.T) / 2
+
+
+def _serve(server: EeiServer, stream):
+    futs = [server.submit(a, k) for a, k in stream]
+    server.flush()
+    return [f.result() for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# Numerical contract
+# ---------------------------------------------------------------------------
+
+
+def test_full_stack_bit_identical_to_engine_program():
+    """One full stack of mixed-k requests == engine.topk on the same stack.
+
+    The server's value-add (queueing, bucketing, the program cache, async
+    dispatch, per-request slicing) must be numerically invisible: for
+    aligned n the padded stack *is* the engine's stack, and heterogeneous k
+    rides the group-max program with per-request slices that are bitwise
+    equal to what smaller-k programs produce (k-selected stages are
+    per-pair independent).
+    """
+    rng = np.random.default_rng(0)
+    mats = [_sym(rng, 16) for _ in range(8)]
+    ks = [4, 2, 1, 3, 4, 4, 2, 3]
+    server = EeiServer(PLAN, max_batch=8)
+    results = _serve(server, list(zip(mats, ks)))
+    assert server.stats()["stacks_dispatched"] == 1
+
+    ref = SolverEngine(PLAN).topk(jnp.asarray(np.stack(mats)), 4)
+    lam_ref = np.asarray(ref.eigenvalues)
+    vec_ref = np.asarray(ref.vectors)
+    for i, ((lam, vec), k) in enumerate(zip(results, ks)):
+        assert lam.shape == (k,) and vec.shape == (k, 16)
+        np.testing.assert_array_equal(lam, lam_ref[i, -k:])
+        np.testing.assert_array_equal(vec, vec_ref[i, -k:])
+
+
+def test_mixed_stream_matches_per_request_topk():
+    """Heterogeneous (n, k) stream vs one engine.topk call per request.
+
+    Per-request programs run at b=1 while the server batches, so float32
+    XLA fusions may differ in the last bits — agreement is to tight
+    tolerance, and eigenvalues/vectors land in the request's own shapes.
+    """
+    rng = np.random.default_rng(1)
+    stream = [(_sym(rng, n), k)
+              for n, k in [(16, 4), (24, 2), (16, 1), (32, 4), (24, 3),
+                           (16, 2), (32, 1), (16, 4), (24, 4), (32, 2)]]
+    server = EeiServer(PLAN, max_batch=4)
+    results = _serve(server, stream)
+    engine = SolverEngine(PLAN)
+    for (a, k), (lam, vec) in zip(stream, results):
+        ref = engine.topk(jnp.asarray(a), k)
+        np.testing.assert_allclose(lam, np.asarray(ref.eigenvalues),
+                                   rtol=1e-5, atol=1e-5)
+        err = np.minimum(np.abs(vec - np.asarray(ref.vectors)),
+                         np.abs(vec + np.asarray(ref.vectors))).max()
+        assert err < 5e-3, err
+
+
+@pytest.mark.parametrize("largest", [True, False])
+def test_guard_padded_n_never_leaks(largest):
+    """Unaligned n pads to the bucket via guard-diagonal embedding; results
+    must carry only the request's own eigenpairs (vs an eigh oracle)."""
+    rng = np.random.default_rng(2)
+    stream = [(_sym(rng, n), 3) for n in (9, 13, 17, 21, 30, 9, 13, 11)]
+    server = EeiServer(PLAN, max_batch=4)
+    futs = [server.submit(a, k, largest=largest) for a, k in stream]
+    server.flush()
+    for (a, k), fut in zip(stream, futs):
+        lam, vec = fut.result()
+        n = a.shape[0]
+        assert lam.shape == (k,) and vec.shape == (k, n)
+        w, v = np.linalg.eigh(a.astype(np.float64))
+        w_sel = w[-k:] if largest else w[:k]
+        v_sel = (v[:, -k:] if largest else v[:, :k]).T
+        np.testing.assert_allclose(lam, w_sel, rtol=1e-4, atol=1e-4)
+        # guard eigenvalues sit outside the spectrum — none may appear
+        assert np.all(lam >= w[0] - 1e-3) and np.all(lam <= w[-1] + 1e-3)
+        err = np.abs(np.abs(vec) - np.abs(v_sel)).max()
+        assert err < 5e-3, err
+
+
+def test_batch_padding_rows_never_leak():
+    """A partial stack (3 requests into a pow2-4 bucket) returns exactly 3
+    results; the padded row is sliced off before futures resolve."""
+    rng = np.random.default_rng(3)
+    stream = [(_sym(rng, 16), 2) for _ in range(3)]
+    server = EeiServer(PLAN, max_batch=8)
+    results = _serve(server, stream)
+    assert len(results) == 3
+    assert server.stats()["requests_completed"] == 3
+    bucket = server.cache.buckets()[0]
+    assert bucket.b == 4  # 3 requests padded to the pow2 bucket
+    engine = SolverEngine(PLAN)
+    for (a, k), (lam, vec) in zip(stream, results):
+        ref = engine.topk(jnp.asarray(a), k)
+        np.testing.assert_allclose(lam, np.asarray(ref.eigenvalues),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Program-cache bounds (the compile-amortization contract)
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_bounded_by_buckets_on_100_request_stream():
+    stream = make_eei_stream(100, 16, 4, seed=7, mixed=True)
+    server = EeiServer(PLAN, max_batch=16)
+    results = _serve(server, stream)
+    assert len(results) == 100
+    stats = server.stats()
+    assert stats["requests_completed"] == 100
+    # one compile per distinct bucket, nothing per-request / per-shape
+    assert server.cache.compiles == stats["distinct_buckets"]
+    assert server.cache.compiles == len(set(server.cache.buckets()))
+    assert server.cache.compiles <= 8  # 100 requests, single-digit programs
+    assert server.cache.hits == stats["stacks_dispatched"] - \
+        server.cache.compiles
+    # replaying the same stream is all hits, zero compiles
+    before = server.cache.compiles
+    _serve(server, stream)
+    assert server.cache.compiles == before
+
+
+def test_warm_server_replay_is_steady_state():
+    stream = make_eei_stream(40, 16, 4, seed=8, mixed=True)
+    server = EeiServer(PLAN, max_batch=8)
+    _serve(server, stream)
+    server.reset_stats()
+    results = _serve(server, stream)
+    assert len(results) == 40
+    stats = server.stats()
+    assert stats["program_compiles"] == 0  # warm: buckets bound compilation
+    assert stats["program_hits"] == stats["stacks_dispatched"]
+    assert stats["p99_latency_ms"] >= stats["p50_latency_ms"] >= 0.0
+
+
+def test_shape_bucket_rounding():
+    b = ShapeBucket.for_requests(5, 17, 3, True)
+    assert b == ShapeBucket(b=8, n=24, k=4, largest=True)
+    # k bucket never exceeds the padded n
+    b = ShapeBucket.for_requests(1, 17, 17, False)
+    assert b.n == 24 and b.k == 24 and b.b == 1
+    assert ShapeBucket.for_requests(16, 16, 4, True) == \
+        ShapeBucket(16, 16, 4, True)
+
+
+def test_program_cache_counters():
+    cache = ProgramCache()
+    bucket = ShapeBucket(2, 16, 2, True)
+    p1 = cache.get(bucket, PLAN, jnp.float32)
+    p2 = cache.get(bucket, PLAN, jnp.float32)
+    assert p1 is p2
+    assert (cache.hits, cache.misses, cache.compiles, len(cache)) == \
+        (1, 1, 1, 1)
+    cache.get(ShapeBucket(2, 16, 2, False), PLAN, jnp.float32)
+    assert cache.compiles == 2 and len(cache) == 2
+
+
+def test_bucket_rounds_up_to_mesh_batch_axis(monkeypatch):
+    """A sharded plan needs stacks divisible by the mesh batch axis; a
+    partial group's pow2 bucket must round up to it (the engine pads its
+    chunks the same way), not crash inside shard_map."""
+    monkeypatch.setattr(SolverPlan, "batch_axis_size",
+                        property(lambda self: 8))
+    rng = np.random.default_rng(11)
+    stream = [(_sym(rng, 16), 2) for _ in range(3)]
+    server = EeiServer(PLAN, max_batch=16)
+    results = _serve(server, stream)
+    assert server.cache.buckets()[0].b == 8  # pow2(3)=4, padded to axis 8
+    engine = SolverEngine(PLAN)
+    for (a, k), (lam, vec) in zip(stream, results):
+        np.testing.assert_allclose(
+            lam, np.asarray(engine.topk(jnp.asarray(a), k).eigenvalues),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_non_pow2_max_batch_floors_to_bound():
+    """Stack buckets are pow2 — max_batch=48 must serve stacks of at most
+    32, never round a full group up past the operator's bound."""
+    server = EeiServer(PLAN, max_batch=48)
+    assert server.max_batch == 32
+    assert EeiServer(PLAN, max_batch=16).max_batch == 16
+    assert EeiServer(PLAN, max_batch=1).max_batch == 1
+
+
+def test_submit_validation():
+    server = EeiServer(PLAN)
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        server.submit(rng.standard_normal((4, 5)), 1)
+    with pytest.raises(ValueError):
+        server.submit(_sym(rng, 4), 0)
+    with pytest.raises(ValueError):
+        server.submit(_sym(rng, 4), 5)
+    with pytest.raises(ValueError):
+        EeiServer(PLAN, max_batch=0)
+    with pytest.raises(ValueError):
+        EeiServer(PLAN, max_inflight=0)
+
+
+def test_partial_group_does_not_block_other_full_stacks():
+    """Head-of-line regression: a partial group in one coalesce key must
+    not delay a full stack forming in another key."""
+    rng = np.random.default_rng(10)
+    server = EeiServer(PLAN, max_batch=4)
+    f_head = server.submit(_sym(rng, 16), 2)  # partial n=16 group sits first
+    futs = [server.submit(_sym(rng, 32), 2) for _ in range(4)]
+    # the full n=32 stack dispatched despite the queued partial n=16 group
+    assert server.stats()["stacks_dispatched"] == 1
+    assert not f_head.done()
+    server.flush()
+    assert f_head.done() and all(f.done() for f in futs)
+    assert server.stats()["stacks_dispatched"] == 2
+
+
+def test_failed_dispatch_resolves_futures_with_exception(monkeypatch):
+    """A compile/launch failure must fail the group's futures, not strand
+    callers blocked on future.result() (and not kill the server)."""
+    rng = np.random.default_rng(12)
+    server = EeiServer(PLAN, max_batch=4)
+
+    def boom(*a, **k):
+        raise RuntimeError("synthetic compile failure")
+
+    monkeypatch.setattr(server.cache, "get", boom)
+    futs = [server.submit(_sym(rng, 16), 2) for _ in range(4)]
+    assert all(f.done() for f in futs)  # resolved, not stranded
+    with pytest.raises(RuntimeError, match="synthetic"):
+        futs[0].result()
+    assert server.stats()["requests_failed"] == 4
+    # the server keeps serving after a failed group
+    monkeypatch.undo()
+    ok = server.submit(_sym(rng, 16), 2)
+    server.flush()
+    assert ok.result().eigenvalues.shape == (2,)
+
+
+def test_double_buffer_keeps_stacks_inflight():
+    """With max_inflight=2, dispatching 3 full stacks retires only the
+    oldest eagerly; the rest resolve on flush()."""
+    rng = np.random.default_rng(9)
+    server = EeiServer(PLAN, max_batch=2, max_inflight=2)
+    futs = [server.submit(_sym(rng, 16), 2) for _ in range(6)]
+    # 3 full stacks dispatched by pump(); at most one retired so far
+    assert server.stats()["stacks_dispatched"] == 3
+    assert sum(f.done() for f in futs) <= 2
+    server.flush()
+    assert all(f.done() for f in futs)
+    assert server.stats()["requests_completed"] == 6
