@@ -19,6 +19,12 @@ continuous-batching ``EeiServer`` (shape buckets + program cache + async
 double-buffered dispatch) against the synchronous per-request loop on the
 same pre-generated mixed-shape stream.
 
+It also exercises the threaded linger runtime (PR 4) on a *sparse* stream:
+requests arrive with inter-arrival gaps and nothing calls ``flush()`` — the
+background admission thread must dispatch partial stacks and resolve every
+future (gated: zero unresolved futures), with requests/s and the sparse-pass
+compile count recorded in ``BENCH_serve.json``.
+
 ``--smoke`` runs one tiny config per backend plus the kernel-grid and
 serve-mode comparisons, writes the ``BENCH_throughput.json`` and
 ``BENCH_serve.json`` artifacts, and exits non-zero if a gated metric
@@ -61,6 +67,14 @@ KERNEL_GRID_B, KERNEL_GRID_N = 64, 64
 #: same mixed-shape stream.
 SERVE_SMOKE = (96, 16, 4, 16)
 SERVE_FULL = (512, 32, 8, 32)
+
+#: Sparse-stream linger benchmark (requests, n, k, max_batch): the threaded
+#: serving runtime on a stream with inter-arrival gaps — no flush() at all,
+#: the linger admission thread dispatches partial stacks.
+LINGER_SMOKE = (48, 16, 4, 8)
+LINGER_FULL = (256, 32, 8, 32)
+LINGER_MS = 2.0
+LINGER_GAP_MS = 0.5  # mean inter-arrival sleep (exponential)
 
 BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
 SERVE_BASELINE_PATH = Path(__file__).parent / "baselines" / "serve_smoke.json"
@@ -199,6 +213,78 @@ def serve_mode_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
     ]
 
 
+def linger_serve_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
+    """Sparse-stream serving through the threaded linger runtime.
+
+    The stream arrives with inter-arrival gaps (exponential, mean
+    ``LINGER_GAP_MS``) and nothing ever calls ``flush()``: the background
+    admission thread must dispatch partial stacks after ``LINGER_MS`` and
+    resolve every future.  The gated metric is liveness —
+    ``linger_unresolved_futures`` must be zero (a linger/locking regression
+    shows up as a stranded or timed-out future, not as a slow ratio).
+    Requests/s is recorded but not gated: a sparse stream's throughput is
+    dominated by the injected gaps.
+    """
+    import time as _time
+    from concurrent.futures import TimeoutError as FuturesTimeoutError
+
+    from repro.engine import EeiServer, SolverPlan
+    from repro.engine.server import make_eei_stream
+
+    requests, n, k, max_batch = LINGER_SMOKE if smoke else LINGER_FULL
+    plan = SolverPlan(method="eei_tridiag", backend="jnp")
+    stream = make_eei_stream(requests, n, k, seed=1, mixed=True)
+
+    server = EeiServer(plan, max_batch=max_batch, linger_ms=LINGER_MS)
+    gap_s = LINGER_GAP_MS / 1e3
+    # Warm with the *same* sparse arrival schedule: partial-stack buckets
+    # (small pow2 b) only form under sparse arrivals, so a dense warm pass
+    # would leave them cold and the timed pass would measure compiles.
+    rng = np.random.default_rng(0)
+    for a, k_i in stream:
+        _time.sleep(rng.exponential(gap_s))
+        server.submit(a, k_i)
+    server.flush()
+    server.reset_stats()
+
+    rng = np.random.default_rng(0)
+    t0 = _time.perf_counter()
+    futs = []
+    for a, k_i in stream:
+        _time.sleep(rng.exponential(gap_s))
+        futs.append(server.submit(a, k_i))
+    unresolved = failed = 0
+    for f in futs:
+        try:
+            f.result(timeout=120)
+        except FuturesTimeoutError:
+            unresolved += 1  # truly stranded: linger/locking regression
+        except Exception:
+            failed += 1  # resolved with an error: a request failure
+    dt = _time.perf_counter() - t0
+    stats = server.stats()
+    server.close()
+
+    metrics["linger_requests_per_s"] = requests / dt
+    metrics["linger_p50_ms"] = stats["p50_latency_ms"]
+    metrics["linger_p99_ms"] = stats["p99_latency_ms"]
+    metrics["linger_stacks_dispatched"] = stats["stacks_dispatched"]
+    # Sparse arrivals form partial stacks the dense warm pass never shaped
+    # (different pow2 b), so a few compiles are legitimate here — recorded,
+    # not gated (unlike the dense steady-state gate above).
+    metrics["linger_sparse_pass_compiles"] = stats["program_compiles"]
+    metrics["linger_unresolved_futures"] = unresolved
+    metrics["linger_failed_requests"] = failed
+    return [
+        Row(f"serve/linger_sparse/r={requests},n={n},k={k}", dt * 1e6,
+            f"requests_per_s={requests / dt:.1f} "
+            f"linger_ms={LINGER_MS} gap_ms={LINGER_GAP_MS} "
+            f"stacks={stats['stacks_dispatched']} "
+            f"p99_ms={stats['p99_latency_ms']:.1f} (no flush; "
+            f"admission thread dispatches partial stacks)"),
+    ]
+
+
 def run(smoke: bool = False) -> tuple[list[Row], dict]:
     rows = []
     metrics: dict = {}
@@ -285,6 +371,7 @@ def main() -> None:
     rows, metrics = run(smoke=args.smoke)
     serve_metrics: dict = {}
     serve_rows = serve_mode_comparison(serve_metrics, smoke=args.smoke)
+    serve_rows += linger_serve_comparison(serve_metrics, smoke=args.smoke)
     print("name,us_per_call,derived")
     for row in rows + serve_rows:
         print(row.csv())
@@ -302,6 +389,18 @@ def main() -> None:
             "serve_steady_state_compiles: warm server recompiled "
             f"{serve_metrics['serve_steady_state_compiles']} programs "
             "(shape buckets must bound compilation)")
+    if serve_metrics.get("linger_unresolved_futures", 0):
+        failures.append(
+            "linger_unresolved_futures: "
+            f"{serve_metrics['linger_unresolved_futures']} futures did not "
+            "resolve in the flushless sparse-stream pass (linger admission "
+            "must complete the stream without an explicit flush)")
+    if serve_metrics.get("linger_failed_requests", 0):
+        failures.append(
+            "linger_failed_requests: "
+            f"{serve_metrics['linger_failed_requests']} requests resolved "
+            "with an error in the sparse-stream pass (dispatch/compile "
+            "failure, not a linger-liveness problem)")
     for f in failures:
         print(f"REGRESSION: {f}", file=sys.stderr)
     if failures:

@@ -38,7 +38,10 @@ from repro.engine.engine import (  # noqa: F401
     TopkResult,
 )
 from repro.engine.server import (  # noqa: F401
+    DispatchRecord,
     EeiServer,
     ProgramCache,
+    QueueFull,
+    ServerClosed,
     ShapeBucket,
 )

@@ -86,7 +86,14 @@ def _solve_program(plan: SolverPlan):
 
 
 @functools.lru_cache(maxsize=None)
-def _topk_program(plan: SolverPlan, k: int, largest: bool):
+def topk_program(plan: SolverPlan, k: int, largest: bool):
+    """The jitted batched top-k program for one ``(plan, k, largest)``.
+
+    Public because the serving runtime's ``ProgramCache`` AOT-compiles it
+    per shape bucket, and the stream-conformance tests replay it as the
+    synchronous oracle a dispatched stack must match bitwise.  The
+    ``lru_cache`` is thread-safe; the returned jitted callable is too.
+    """
     stages = registry.get_backend(plan)
 
     def fn(a):
@@ -152,7 +159,7 @@ class SolverEngine:
         """Top-k (eigenvalue, signed unit eigenvector) pairs per matrix."""
         if k < 1 or k > a.shape[-1]:
             raise ValueError(f"k={k} out of range for n={a.shape[-1]}")
-        return self._run(_topk_program(self.plan, int(k), bool(largest)), a)
+        return self._run(topk_program(self.plan, int(k), bool(largest)), a)
 
     def eigenvalues(self, a: jax.Array) -> jax.Array:
         """Eigenvalues only, ``(..., n)`` ascending."""

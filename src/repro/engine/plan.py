@@ -119,9 +119,13 @@ def plan_for(
       (:func:`resolved_crossovers`), else the static fallback constants;
     * small matrices keep dense minors (n eigvalsh calls beat the
       tridiagonalization constant); larger ones take the tridiagonal path;
-    * a mesh with >1 device along its batch axis and a divisible stack picks
-      the sharded backend; a real TPU picks Pallas kernels; the fused-jnp
-      backend is the portable default.
+    * a mesh with >1 device along its batch axis picks the sharded backend
+      whenever the stack puts at least one matrix on every device —
+      divisibility is *not* required, because both ``SolverEngine._run_chunk``
+      and the serving runtime pad indivisible stacks up to the batch axis
+      and slice back (pow2 serving buckets meet non-pow2 meshes here); a
+      real TPU picks Pallas kernels; the fused-jnp backend is the portable
+      default.
     """
     if len(shape) not in (2, 3):
         raise ValueError(f"expected (n, n) or (b, n, n), got {shape}")
@@ -132,7 +136,7 @@ def plan_for(
     # calibration table times the pallas kernels separately from fused jnp).
     if backend is None:
         if (mesh is not None and "data" in mesh.axis_names
-                and mesh.shape["data"] > 1 and b % mesh.shape["data"] == 0):
+                and mesh.shape["data"] > 1 and b >= mesh.shape["data"]):
             backend = "sharded"
         elif jax.default_backend() == "tpu":
             backend = "pallas"

@@ -1,4 +1,4 @@
-"""EeiServer — continuous-batching serving runtime for EEI top-k queries.
+"""EeiServer — concurrent continuous-batching serving runtime for EEI top-k.
 
 ``launch/serve.py --eei`` (and anything else serving the paper's workload —
 streams of partial eigenpair queries over many small symmetric matrices)
@@ -6,20 +6,46 @@ used to run a static, synchronous loop: one fixed ``(b, n, k)`` per process,
 ``block_until_ready`` after every request, and a fresh XLA compile for every
 distinct shape.  This module replaces that loop with a serving runtime:
 
-    submit() ──> request queue (heterogeneous n, k, largest)
-                     │  coalesce: FIFO groups sharing a coalesce key
-                     ▼           (bucket_n, bucket_k, largest)
-                dynamic stacks (up to SolverPlan.max_batch requests)
-                     │  pad to a ShapeBucket: b -> next power of two,
-                     ▼  n -> the kernel block grid, k -> next power of two
-                ProgramCache (bucket -> AOT-compiled executable;
-                     │         hit / miss / compile counters)
-                     ▼
-                async double-buffered dispatch (stack i+1 enqueues while
-                     │                          i computes on device)
-                     ▼
-                completion futures (per-request slices out of the padded
-                                    stack; guard rows never escape)
+    submit() ──> request queues (heterogeneous n, k, largest; thread-safe
+         │       from any number of producer threads, with optional
+         │       ``max_pending`` backpressure: block or raise QueueFull)
+         ▼  coalesce: FIFO groups sharing a key (bucket_n, largest)
+    admission ──> dynamic stacks (full stacks immediately; *partial* stacks
+         │        once their oldest request has lingered ``linger_ms`` —
+         ▼        sparse streams drain with no explicit flush())
+    ProgramCache (bucket -> AOT-compiled executable; hit / miss / compile
+         │        counters; internally locked, shareable between servers)
+         ▼
+    async dispatch (≤ max_inflight stacks of device buffers outstanding)
+         │
+         ▼
+    retire ──> completion futures (per-request slices out of the padded
+               stack; guard rows never escape; a failed dispatch or a
+               closed server resolves futures with the error — callers
+               blocked on ``future.result()`` are never stranded)
+
+Two run modes share every dispatch/retire/cache path:
+
+* **caller-driven** (``linger_ms=None``, the default): no background
+  threads.  ``submit()`` dispatches full stacks inline (via ``pump()``)
+  and ``flush()`` drains partial stacks and blocks until every future
+  resolves — the PR-3 behavior, still thread-safe under the server lock.
+* **threaded** (``linger_ms`` set): a background *admission* thread forms
+  stacks — full groups immediately, partial groups once their oldest
+  request has waited ``linger_ms`` — and a *retire* thread blocks on the
+  oldest in-flight stack and resolves futures, so producers never block on
+  device sync.  ``flush()`` becomes a drain barrier; ``close()`` drains
+  everything, joins both threads, and resolves any late ``submit()`` with
+  an already-set :class:`ServerClosed` error.
+
+Threading model (see ``docs/ARCHITECTURE.md`` for the full write-up):
+one re-entrant server lock guards queues, the in-flight deque and all
+counters; a single condition variable (``_cv``) carries every wakeup
+(new work, linger deadline, in-flight capacity, drain progress).  The
+``ProgramCache`` lock is a *leaf*: the cache never calls back into the
+server, so lock order is server lock -> cache lock and never the reverse.
+The admission thread compiles and launches *outside* the server lock, so a
+multi-second XLA compile never blocks ``submit()``.
 
 Shape bucketing is what bounds compilation: every request executes through
 one of a small set of padded shapes, so a 100-request mixed stream compiles
@@ -36,20 +62,20 @@ eigenpairs are preserved exactly (the padded block decouples: Householder,
 Sturm and the sign recurrence all see an exactly-zero junction, which
 ``tridiagonal_signs`` handles as a restart).
 
-Async dispatch exploits JAX's asynchronous execution: a compiled program
-call returns immediately with device buffers in flight, so the server keeps
-up to ``max_inflight`` stacks outstanding and only blocks when retiring the
-oldest — stack ``i+1`` is enqueued while ``i`` computes, removing the
-per-request ``block_until_ready`` barrier of the synchronous loop.
+The ``sharded`` backend serves through the same path: pow2 stack buckets
+are rounded up to the mesh batch axis, so a serve mode runs on a
+multi-device mesh (``serve.py --eei --sharded``; tests force a 2-device
+host mesh via ``XLA_FLAGS=--xla_force_host_platform_device_count``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 import time
 from collections import OrderedDict, deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import NamedTuple, Optional
 
 import jax
@@ -65,6 +91,18 @@ log = logging.getLogger("repro.engine.server")
 #: Default matrix-size granule for shape buckets — the f32 sublane granule
 #: the Pallas block clamp aligns to (``kernels/blocks.clamp_block``).
 N_ALIGN = 8
+
+
+class ServerClosed(RuntimeError):
+    """The server has been closed; the request was not (or will not be)
+    served.  Late ``submit()`` calls get a future with this error already
+    set rather than an exception at the call site, so producer loops that
+    race ``close()`` observe a uniformly-resolved future either way."""
+
+
+class QueueFull(RuntimeError):
+    """``max_pending`` backpressure bound hit under ``pending_policy
+    ='except'``."""
 
 
 def _bucket_n(n: int, align: int) -> int:
@@ -113,6 +151,17 @@ class ShapeBucket(NamedTuple):
         )
 
 
+class _PendingProgram:
+    """In-flight compile: later same-bucket getters wait on the event."""
+
+    __slots__ = ("event", "program", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.program = None
+        self.error = None
+
+
 class ProgramCache:
     """Bucket -> AOT-compiled executable, with observable counters.
 
@@ -121,9 +170,26 @@ class ProgramCache:
     and the serve log assert a mixed stream compiles at most once per
     distinct bucket), and entries hold the *compiled* executable — lookup
     on the hot path is one dict probe, no retracing.
+
+    Thread-safe, and the lock is never held across a compile: a miss
+    installs a per-key placeholder under the lock and compiles outside it,
+    so concurrent gets for *other* buckets stay one-dict-probe fast while
+    same-bucket racers wait on the placeholder's event (a *successful*
+    compile happens at most once per bucket, so ``compiles == distinct
+    buckets`` whenever every compile succeeds, and ``hits + misses``
+    always equals the number of ``get()`` calls — a waiter counts as a
+    hit).  A failed compile is re-raised to every waiter and evicted, so
+    the next ``get()`` retries — that retry counts a fresh miss, so after
+    transient compile failures ``compiles`` may exceed the distinct
+    bucket count.
+    The lock is a leaf in the server's lock order — nothing under it ever
+    calls back into an ``EeiServer``.  One cache instance may be shared
+    between servers (pass it as ``EeiServer(cache=...)``) to reuse
+    compiles across server restarts or fuzzer iterations.
     """
 
     def __init__(self):
+        self._lock = threading.Lock()
         self._programs: "OrderedDict[tuple, object]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -138,20 +204,50 @@ class ProgramCache:
 
     def buckets(self) -> list:
         """The distinct buckets compiled so far (insertion order)."""
-        return [key[0] for key in self._programs]
+        with self._lock:
+            return [key[0] for key in self._programs]
+
+    def reset_counters(self) -> None:
+        """Zero hit/miss counters, keeping compiled programs (benchmarks
+        warm the cache, reset, then time a steady-state pass)."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
 
     def get(self, bucket: ShapeBucket, plan: SolverPlan, dtype) -> object:
         key = (bucket, plan, jnp.dtype(dtype).name)
-        prog = self._programs.get(key)
-        if prog is not None:
-            self.hits += 1
-            return prog
-        self.misses += 1
-        fn = engine_mod._topk_program(plan, bucket.k, bucket.largest)
-        sds = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.n),
-                                   jnp.dtype(dtype))
-        prog = fn.lower(sds).compile()
-        self._programs[key] = prog
+        with self._lock:
+            found = self._programs.get(key)
+            if found is None:
+                self.misses += 1  # this caller owns the compile
+                entry = _PendingProgram()
+                self._programs[key] = entry
+            else:
+                self.hits += 1
+                if not isinstance(found, _PendingProgram):
+                    return found
+        if found is not None:
+            # Same-bucket racer: wait for the owner's compile.
+            found.event.wait()
+            if found.error is not None:
+                raise found.error
+            return found.program
+        try:
+            fn = engine_mod.topk_program(plan, bucket.k, bucket.largest)
+            sds = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.n),
+                                       jnp.dtype(dtype))
+            prog = fn.lower(sds).compile()
+        except BaseException as exc:
+            entry.error = exc
+            with self._lock:
+                if self._programs.get(key) is entry:
+                    del self._programs[key]  # next get() retries the compile
+            entry.event.set()
+            raise
+        entry.program = prog
+        with self._lock:
+            self._programs[key] = prog
+        entry.event.set()
         return prog
 
 
@@ -172,21 +268,51 @@ class _InflightStack:
     bucket: ShapeBucket
 
 
+@dataclasses.dataclass
+class DispatchRecord:
+    """One dispatched stack, as the conformance tests replay it: the exact
+    padded input, the plan/bucket it compiled under, and the requests whose
+    futures were resolved from its rows.  Recorded only when the server is
+    constructed with ``record_dispatches=True``."""
+
+    bucket: ShapeBucket
+    plan: SolverPlan
+    stack: np.ndarray  # the assembled (bucket.b, bucket.n, bucket.n) input
+    requests: list  # [_Request, ...] in row order
+
+
 class EeiServer:
-    """Continuous-batching server for heterogeneous EEI top-k queries.
+    """Concurrent continuous-batching server for heterogeneous EEI queries.
 
     ``submit(a, k, largest)`` enqueues one query over a single symmetric
     matrix and returns a ``concurrent.futures.Future`` resolving to a
     ``TopkResult`` of numpy arrays with the *request's* shapes
     (``(k,)`` eigenvalues, ``(k, n)`` vectors) — bucket padding never leaks.
-    Dispatch is driven by ``pump()`` (dispatches every coalesce group that
-    fills a whole ``max_batch`` stack) and ``flush()`` (drains everything,
-    partial stacks included, and blocks until all futures resolve).
+    ``submit`` is safe from any number of producer threads in both modes.
+
+    With ``linger_ms=None`` (default) dispatch is caller-driven: ``pump()``
+    dispatches every coalesce group that fills a whole ``max_batch`` stack
+    (``submit`` pumps automatically) and ``flush()`` drains everything,
+    partial stacks included, and blocks until all futures resolve.
+
+    With ``linger_ms`` set, a background admission thread dispatches full
+    stacks immediately and partial stacks once their oldest request has
+    waited ``linger_ms`` — sparse streams complete with no ``flush()`` at
+    all — and a retire thread resolves futures off the producers' path.
+    ``flush()`` is then a drain barrier, and ``close()`` (or using the
+    server as a context manager) drains and joins the threads.
+
+    ``max_pending`` bounds the number of queued-but-undispatched requests:
+    ``pending_policy='block'`` makes ``submit`` wait for space (in
+    caller-driven mode it drains inline instead, which keeps single-threaded
+    callers live), ``'except'`` makes it raise :class:`QueueFull`.
 
     ``plan`` pins one :class:`SolverPlan` for every bucket; by default each
-    bucket gets ``plan_for((b, n, n), k=...)`` so small-n buckets may route
-    to ``eigh`` while large-n buckets take the kernelized EEI pipeline,
-    exactly like per-request planning would.
+    bucket gets ``plan_for((b, n, n), k=..., mesh=mesh)`` so small-n buckets
+    may route to ``eigh`` while large-n buckets take the kernelized EEI
+    pipeline — and, when a ``mesh`` with a multi-device data axis is given,
+    large stacks route to the ``sharded`` backend (pow2 stack buckets round
+    up to the mesh batch axis).
     """
 
     def __init__(
@@ -197,12 +323,27 @@ class EeiServer:
         max_inflight: int = 2,
         n_align: int = N_ALIGN,
         dtype=jnp.float32,
+        linger_ms: Optional[float] = None,
+        max_pending: int = 0,
+        pending_policy: str = "block",
+        mesh: Optional[jax.sharding.Mesh] = None,
+        cache: Optional[ProgramCache] = None,
+        record_dispatches: bool = False,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if linger_ms is not None and linger_ms < 0:
+            raise ValueError(f"linger_ms must be >= 0, got {linger_ms}")
+        if max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        if pending_policy not in ("block", "except"):
+            raise ValueError(
+                f"pending_policy must be 'block' or 'except', "
+                f"got {pending_policy!r}")
         self._plan = plan
+        self._mesh = mesh
         # Stack buckets are powers of two, so a non-pow2 bound would round
         # *up* past the operator's memory/latency limit — floor it instead
         # (a max_batch of 48 serves stacks of at most 32).
@@ -210,23 +351,67 @@ class EeiServer:
         self.max_inflight = max_inflight
         self.n_align = n_align
         self.dtype = jnp.dtype(dtype)
-        self.cache = ProgramCache()
+        self.linger_ms = linger_ms
+        self.max_pending = max_pending
+        self.pending_policy = pending_policy
+        self.cache = cache if cache is not None else ProgramCache()
+        self.record_dispatches = record_dispatches
+        self.dispatch_log: "list[DispatchRecord]" = []
+
+        # One re-entrant lock guards queues, in-flight state and counters;
+        # one condition variable carries every wakeup (new work, linger
+        # deadline, capacity, drain progress) — notify_all on any state
+        # change, so no waiter class can miss its wakeup.  Re-entrant so a
+        # future callback that re-enters submit() from a server thread
+        # cannot self-deadlock.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
         # Admission is bucketed at submit time: coalesce key -> FIFO deque.
         # Keys are independent, so a partial group in one key never blocks a
         # full stack forming in another, and group take-off is O(group)
         # instead of a full-queue scan.
         self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
         self._inflight: "deque[_InflightStack]" = deque()
+        self._pending = 0  # queued, not yet popped for dispatch
+        self._dispatching = 0  # groups popped but not yet in-flight/failed
+        self._retiring = 0  # stacks popped by the retire thread, syncing
+        self._draining = 0  # flush() barriers forcing partial dispatch
+        self._closed = False
+        self._admission_done = False
         self.requests_submitted = 0
         self.requests_completed = 0
         self.requests_failed = 0
+        self.requests_rejected = 0  # late submits after close()
         self.stacks_dispatched = 0
         self.latencies_ms: list = []
+
+        # Snapshot the mode: _threaded must not flip if a caller mutates
+        # linger_ms later (the linger *value* is re-read each admission
+        # round; the thread topology is fixed at construction).
+        self._threaded_mode = linger_ms is not None
+        self._admission_thread: Optional[threading.Thread] = None
+        self._retire_thread: Optional[threading.Thread] = None
+        if self._threaded:
+            self._admission_thread = threading.Thread(
+                target=self._admission_main, name="eei-admission", daemon=True)
+            self._retire_thread = threading.Thread(
+                target=self._retire_main, name="eei-retire", daemon=True)
+            self._admission_thread.start()
+            self._retire_thread.start()
+
+    @property
+    def _threaded(self) -> bool:
+        return self._threaded_mode
 
     # -- admission ---------------------------------------------------------
 
     def submit(self, a, k: int, largest: bool = True) -> Future:
-        """Admit one ``(n, n)`` top-k query; returns its completion future."""
+        """Admit one ``(n, n)`` top-k query; returns its completion future.
+
+        Thread-safe.  After ``close()`` the returned future already carries
+        a :class:`ServerClosed` error.  With ``max_pending`` set, blocks or
+        raises :class:`QueueFull` per ``pending_policy``.
+        """
         a = np.asarray(a, dtype=self.dtype)
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
             raise ValueError(f"expected one (n, n) matrix, got {a.shape}")
@@ -235,9 +420,38 @@ class EeiServer:
             raise ValueError(f"k={k} out of range for n={n}")
         req = _Request(a=a, n=n, k=int(k), largest=bool(largest),
                        future=Future(), t_submit=time.monotonic())
-        self._queues.setdefault(self._coalesce_key(req), deque()).append(req)
-        self.requests_submitted += 1
-        self.pump()
+        with self._cv:
+            if self._closed:
+                return self._reject_locked(req)
+            if self.max_pending and self._pending >= self.max_pending:
+                if self.pending_policy == "except":
+                    raise QueueFull(
+                        f"{self._pending} requests pending "
+                        f"(max_pending={self.max_pending})")
+                if not self._threaded:
+                    # Caller-driven mode has no admission thread to make
+                    # space — drain inline so single-threaded producers
+                    # stay live instead of self-deadlocking.
+                    self.flush()
+                else:
+                    while self._pending >= self.max_pending:
+                        self._cv.wait()
+                        if self._closed:
+                            return self._reject_locked(req)
+            self._queues.setdefault(
+                self._coalesce_key(req), deque()).append(req)
+            self._pending += 1
+            self.requests_submitted += 1
+            req.t_submit = time.monotonic()  # linger clock starts at enqueue
+            self._cv.notify_all()
+        if not self._threaded:
+            self.pump()
+        return req.future
+
+    def _reject_locked(self, req: _Request) -> Future:
+        self.requests_rejected += 1
+        req.future.set_exception(ServerClosed(
+            "EeiServer is closed; request was rejected"))
         return req.future
 
     def _coalesce_key(self, req: _Request) -> tuple:
@@ -248,12 +462,21 @@ class EeiServer:
         # into near-empty per-k groups.
         return (_bucket_n(req.n, self.n_align), req.largest)
 
-    def _pop_group(self, key: tuple) -> list:
+    def _pop_group_locked(self, key: tuple) -> list:
         q = self._queues[key]
         group = [q.popleft() for _ in range(min(len(q), self.max_batch))]
         if not q:
             del self._queues[key]
+        self._pending -= len(group)
+        self._cv.notify_all()  # space for backpressured producers
         return group
+
+    def _pop_all_locked(self) -> list:
+        """Every queued group (each at most ``max_batch``), queue emptied."""
+        groups = []
+        while self._queues:
+            groups.append(self._pop_group_locked(next(iter(self._queues))))
+        return groups
 
     # -- dispatch ----------------------------------------------------------
 
@@ -280,7 +503,7 @@ class EeiServer:
         stack[len(group):] = stack[0]
         return stack
 
-    def _dispatch(self, group: list) -> None:
+    def _plan_bucket(self, group: list) -> tuple:
         bucket = ShapeBucket.for_requests(
             len(group), max(r.n for r in group), max(r.k for r in group),
             group[0].largest, n_align=self.n_align)
@@ -288,38 +511,70 @@ class EeiServer:
         # values), so one bucket can never compile under two plans.
         plan = self._plan
         if plan is None:
-            plan = plan_for((bucket.b, bucket.n, bucket.n), k=bucket.k)
+            plan = plan_for((bucket.b, bucket.n, bucket.n), k=bucket.k,
+                            mesh=self._mesh)
         # The sharded backend needs the stack divisible by the mesh batch
         # axis (SolverEngine._run_chunk pads for the same reason) — round
         # the pow2 bucket up to the next multiple.
         mult = plan.batch_axis_size
         if bucket.b % mult:
             bucket = bucket._replace(b=bucket.b + (-bucket.b) % mult)
-        stack = self._assemble(group, bucket)
-        # Keep at most max_inflight stacks of device buffers live: retire
-        # the oldest *before* launching when at capacity.
-        while len(self._inflight) >= self.max_inflight:
-            self._retire(self._inflight.popleft())
+        return bucket, plan
+
+    def _dispatch(self, group: list) -> None:
+        """Assemble, fetch the program, launch.  Never raises: any failure
+        (planning, assembly, compile, launch) resolves the group's futures
+        with the error instead of stranding callers or killing a server
+        thread.  Appends to ``_inflight`` under the lock."""
         try:
+            bucket, plan = self._plan_bucket(group)
+            stack = self._assemble(group, bucket)
             program = self.cache.get(bucket, plan, self.dtype)
             result = program(jnp.asarray(stack))  # async: returns at once
         except Exception as exc:  # compile/launch failure: fail the group,
             self._fail(group, exc)  # not the whole serving process
             return
-        self._inflight.append(_InflightStack(result, list(group), bucket))
-        self.stacks_dispatched += 1
+        with self._cv:
+            self._inflight.append(_InflightStack(result, list(group), bucket))
+            self.stacks_dispatched += 1
+            if self.record_dispatches:
+                self.dispatch_log.append(DispatchRecord(
+                    bucket=bucket, plan=plan, stack=stack,
+                    requests=list(group)))
+            self._cv.notify_all()
+
+    @staticmethod
+    def _set(future: Future, *, result=None, error=None) -> bool:
+        """Resolve a future, tolerating caller-side ``cancel()``: a
+        cancelled future is already resolved, and raising out of a server
+        thread here would poison every *other* request that thread owns."""
+        try:
+            if error is not None:
+                future.set_exception(error)
+            else:
+                future.set_result(result)
+            return True
+        except InvalidStateError:
+            return False
 
     def _fail(self, requests: list, exc: Exception) -> None:
         """Resolve a group's futures with the error — a failed dispatch
-        must never strand callers blocked on ``future.result()``."""
+        must never strand callers blocked on ``future.result()``.
+        Counters update before the futures resolve (see ``_retire``)."""
         log.error("EEI stack dispatch failed for %d request(s): %s",
                   len(requests), exc)
+        with self._cv:
+            self.requests_failed += len(requests)
+            self._cv.notify_all()
         for req in requests:
-            req.future.set_exception(exc)
-            self.requests_failed += 1
+            self._set(req.future, error=exc)
 
     def _retire(self, inflight: _InflightStack) -> None:
-        """Block on one stack and resolve its requests' futures."""
+        """Block on one stack and resolve its requests' futures.
+
+        Called with the lock held in caller-driven mode (the device sync is
+        the caller's own flush) and without it from the retire thread (the
+        sync must not block producers)."""
         try:
             lam = np.asarray(inflight.result.eigenvalues)  # sync point
             vec = np.asarray(inflight.result.vectors)
@@ -327,6 +582,7 @@ class EeiServer:
             self._fail(inflight.requests, exc)
             return
         t_done = time.monotonic()
+        results = []
         for row, req in enumerate(inflight.requests):
             # The program returns `bucket.k` ascending pairs at the requested
             # extreme.  Guards were placed on the far side of the spectrum,
@@ -338,10 +594,160 @@ class EeiServer:
             else:
                 lam_r = lam[row, : req.k]
                 vec_r = vec[row, : req.k, : req.n]
-            req.future.set_result(
-                engine_mod.TopkResult(lam_r, vec_r))
-            self.latencies_ms.append((t_done - req.t_submit) * 1e3)
-            self.requests_completed += 1
+            results.append((req, engine_mod.TopkResult(lam_r, vec_r)))
+        # Counters update BEFORE futures resolve: a caller woken by
+        # future.result() may read stats() immediately and must see this
+        # stack's requests already accounted for.
+        with self._cv:
+            self.latencies_ms.extend(
+                (t_done - req.t_submit) * 1e3 for req, _ in results)
+            self.requests_completed += len(results)
+            self._cv.notify_all()
+        for req, res in results:
+            self._set(req.future, result=res)
+
+    def _make_room_locked(self) -> None:
+        """Caller-driven mode: retire the oldest stack(s) until a launch
+        keeps at most ``max_inflight`` stacks of device buffers live."""
+        while len(self._inflight) >= self.max_inflight:
+            self._retire(self._inflight.popleft())
+
+    # -- background threads ------------------------------------------------
+
+    def _ready_key_locked(self, now: float):
+        """Dispatchable coalesce key, or ``(None, deadline)`` where
+        ``deadline`` is the next linger expiry (``None`` if no queue).
+
+        Among ready keys (full, linger-expired, or force-drained) the one
+        with the *oldest head request* wins — FIFO across keys.  Picking
+        the first ready key in insertion order would let a continuously
+        full key starve another key's expired partial group indefinitely;
+        with oldest-head order the starved key's fixed, aging head
+        eventually outranks the hot key's ever-renewing one, so the
+        linger bound stays a real latency bound.
+        """
+        force = self._closed or self._draining > 0
+        linger_s = (self.linger_ms or 0.0) / 1e3
+        best_key = best_t = deadline = None
+        for key, q in self._queues.items():
+            head_t = q[0].t_submit
+            expiry = head_t + linger_s
+            if len(q) >= self.max_batch or force or now >= expiry:
+                if best_t is None or head_t < best_t:
+                    best_key, best_t = key, head_t
+            elif best_key is None:
+                deadline = expiry if deadline is None else \
+                    min(deadline, expiry)
+        return best_key, (None if best_key is not None else deadline)
+
+    def _admission_loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    key, deadline = self._ready_key_locked(time.monotonic())
+                    if key is not None:
+                        group = self._pop_group_locked(key)
+                        self._dispatching += 1
+                        break
+                    if self._closed and not self._queues:
+                        return
+                    timeout = None
+                    if deadline is not None:
+                        timeout = max(deadline - time.monotonic(), 0.0) + 1e-4
+                    self._cv.wait(timeout)
+            try:
+                with self._cv:
+                    # Capacity gate: at most max_inflight stacks of device
+                    # buffers outstanding (on device + being retired).
+                    while len(self._inflight) + self._retiring >= \
+                            self.max_inflight:
+                        if not self._retire_thread.is_alive():
+                            # Retirement is permanently gone (bounded
+                            # restarts exhausted): capacity will never
+                            # free — fail the held group instead of
+                            # waiting forever (close() must not hang).
+                            raise ServerClosed(
+                                "retire thread died; cannot dispatch")
+                        self._cv.wait(timeout=0.1)
+                # Outside the lock: assembly, cache lookup (possibly a
+                # multi-second compile) and the async launch never block
+                # producers or the retire thread.
+                self._dispatch(group)
+            except BaseException as exc:
+                # _dispatch absorbs Exceptions, so this is a BaseException
+                # (crash) or the capacity gate's dead-retirement escape.
+                # The popped group is in no queue anymore — resolve its
+                # futures before the crash handler takes over (_set
+                # tolerates rows _dispatch already resolved).
+                self._fail(group, ServerClosed(
+                    f"admission thread crashed: {exc!r}"))
+                raise
+            finally:
+                with self._cv:
+                    self._dispatching -= 1
+                    self._cv.notify_all()
+
+    def _admission_main(self) -> None:
+        try:
+            self._admission_loop()
+        except BaseException as exc:  # never die silently: fail the queue
+            log.exception("EEI admission thread crashed")
+            with self._cv:
+                # Nothing will drain the queues anymore — close so later
+                # submits are rejected instead of silently stranded.
+                self._closed = True
+                groups = self._pop_all_locked()
+            for group in groups:
+                self._fail(group, ServerClosed(
+                    f"admission thread crashed: {exc!r}"))
+        finally:
+            with self._cv:
+                self._admission_done = True
+                self._cv.notify_all()
+
+    def _retire_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._inflight:
+                    if self._admission_done and not self._dispatching:
+                        return
+                    self._cv.wait()
+                stack = self._inflight.popleft()
+                self._retiring += 1
+                self._cv.notify_all()
+            try:
+                self._retire(stack)
+            except BaseException as exc:
+                # _retire absorbs Exceptions; a BaseException here would
+                # otherwise strand the popped stack (it is no longer in
+                # _inflight, so the crash handler cannot see it).
+                self._fail(stack.requests, ServerClosed(
+                    f"retire thread crashed: {exc!r}"))
+                raise
+            finally:
+                with self._cv:
+                    self._retiring -= 1
+                    self._cv.notify_all()
+
+    def _retire_main(self) -> None:
+        # A handful of restarts: a crash drains + fails the stacks it held,
+        # then keeps retiring whatever the admission thread still launches,
+        # so one bad stack never strands later ones.  Persistent crashing
+        # gives up after the bounded retries (close() joins regardless).
+        for _ in range(8):
+            try:
+                self._retire_loop()
+                return
+            except BaseException as exc:
+                log.exception("EEI retire thread crashed")
+                with self._cv:
+                    self._closed = True  # stop admitting: retirement is sick
+                    stacks = list(self._inflight)
+                    self._inflight.clear()
+                    self._cv.notify_all()
+                for stack in stacks:
+                    self._fail(stack.requests, ServerClosed(
+                        f"retire thread crashed: {exc!r}"))
 
     # -- draining ----------------------------------------------------------
 
@@ -351,20 +757,96 @@ class EeiServer:
         Partial groups keep accumulating (so the stream batches instead of
         degenerating to per-request programs), but only within their own
         key — a partial group never delays a full stack of another shape.
+        In threaded mode this is just a wakeup for the admission thread.
         """
-        for key in [k for k, q in self._queues.items()
-                    if len(q) >= self.max_batch]:
-            while len(self._queues.get(key, ())) >= self.max_batch:
-                self._dispatch(self._pop_group(key))
+        if self._threaded:
+            with self._cv:
+                self._cv.notify_all()
+            return
+        with self._cv:
+            for key in [k for k, q in self._queues.items()
+                        if len(q) >= self.max_batch]:
+                while len(self._queues.get(key, ())) >= self.max_batch:
+                    self._make_room_locked()
+                    self._dispatch(self._pop_group_locked(key))
 
     def flush(self) -> None:
-        """Dispatch all queued requests (partial stacks too) and block
-        until every in-flight stack has retired."""
-        while self._queues:
-            key = next(iter(self._queues))
-            self._dispatch(self._pop_group(key))
-        while self._inflight:
-            self._retire(self._inflight.popleft())
+        """Drain: dispatch all queued requests (partial stacks too) and
+        block until every in-flight stack has retired.
+
+        Idempotent and re-callable: a second ``flush()`` (including one
+        racing the first from another thread) finds nothing left and
+        returns immediately.  In threaded mode this is a barrier — the
+        admission thread does the dispatching; the caller just waits.
+        """
+        if self._threaded:
+            with self._cv:
+                self._draining += 1
+                self._cv.notify_all()
+                try:
+                    while (self._queues or self._dispatching
+                           or self._inflight or self._retiring):
+                        if self._admission_done and not (
+                                self._retire_thread
+                                and self._retire_thread.is_alive()):
+                            break  # threads gone; nothing will drain more
+                        self._cv.wait(timeout=0.1)
+                finally:
+                    self._draining -= 1
+                    self._cv.notify_all()
+            return
+        with self._cv:
+            while self._queues:
+                self._make_room_locked()
+                key = next(iter(self._queues))
+                self._dispatch(self._pop_group_locked(key))
+            while self._inflight:
+                self._retire(self._inflight.popleft())
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None
+              ) -> None:
+        """Shut the server down.  Idempotent.
+
+        ``drain=True`` (default) dispatches everything still queued and
+        blocks until every future has resolved; ``drain=False`` resolves
+        queued requests' futures with :class:`ServerClosed` instead (all
+        futures still resolve — never stranded), but always retires stacks
+        already on device.  After ``close()``, ``submit()`` returns futures
+        with :class:`ServerClosed` already set.  In threaded mode both
+        background threads are joined (``timeout`` bounds the join; raises
+        ``RuntimeError`` if they fail to drain in time).
+        """
+        with self._cv:
+            first = not self._closed
+            self._closed = True
+            groups = self._pop_all_locked() if first and not drain else []
+            self._cv.notify_all()
+        for group in groups:
+            self._fail(group, ServerClosed(
+                "EeiServer closed before this request was dispatched"))
+        if self._threaded:
+            self._admission_thread.join(timeout)
+            self._retire_thread.join(timeout)
+            if (self._admission_thread.is_alive()
+                    or self._retire_thread.is_alive()):
+                raise RuntimeError(
+                    f"EeiServer.close(): threads failed to drain within "
+                    f"{timeout}s")
+        elif first:
+            if drain:
+                self.flush()
+            else:
+                # Stacks already on device must still retire — their device
+                # work is spent either way, and their futures must resolve.
+                with self._cv:
+                    while self._inflight:
+                        self._retire(self._inflight.popleft())
+
+    def __enter__(self) -> "EeiServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # -- observability -----------------------------------------------------
 
@@ -372,30 +854,38 @@ class EeiServer:
         """Zero request/stack/latency counters and the cache's hit counter,
         keeping compiled programs — benchmarks warm the cache with one pass,
         reset, then time a steady-state pass (compiles then stay 0)."""
-        self.requests_submitted = 0
-        self.requests_completed = 0
-        self.requests_failed = 0
-        self.stacks_dispatched = 0
-        self.latencies_ms = []
-        self.cache.hits = 0
-        self.cache.misses = 0
+        with self._cv:
+            self.requests_submitted = 0
+            self.requests_completed = 0
+            self.requests_failed = 0
+            self.requests_rejected = 0
+            self.stacks_dispatched = 0
+            self.latencies_ms = []
+            self.dispatch_log = []
+        self.cache.reset_counters()
 
     def stats(self) -> dict:
-        lat = sorted(self.latencies_ms)
+        with self._cv:
+            lat = sorted(self.latencies_ms)
+            snap = {
+                "requests_submitted": self.requests_submitted,
+                "requests_completed": self.requests_completed,
+                "requests_failed": self.requests_failed,
+                "requests_rejected": self.requests_rejected,
+                "requests_pending": self._pending,
+                "stacks_dispatched": self.stacks_dispatched,
+            }
 
         def pct(p):
             if not lat:
                 return 0.0
             return lat[min(len(lat) - 1, int(p / 100.0 * len(lat)))]
 
-        return {
-            "requests_submitted": self.requests_submitted,
-            "requests_completed": self.requests_completed,
-            "requests_failed": self.requests_failed,
-            "stacks_dispatched": self.stacks_dispatched,
+        snap.update({
             "program_compiles": self.cache.compiles,
             "program_hits": self.cache.hits,
             "distinct_buckets": len(self.cache),
             "p50_latency_ms": pct(50),
             "p99_latency_ms": pct(99),
-        }
+        })
+        return snap

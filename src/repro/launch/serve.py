@@ -15,11 +15,20 @@ queries over many small symmetric matrices — through the continuous-batching
 cache -> async double-buffered dispatch):
 
     PYTHONPATH=src python -m repro.launch.serve --eei --batch 8 --n 64 \
-        --k 4 --requests 64 [--mixed] [--sync]
+        --k 4 --requests 64 [--mixed] [--sync] [--linger-ms 2] \
+        [--gap-ms 1] [--sharded]
 
 ``--mixed`` samples ``n`` and ``k`` per request (the heterogeneous stream
 the server exists for); ``--sync`` runs the PR-2-style synchronous
 per-request loop instead (the baseline the server is benchmarked against).
+``--linger-ms`` turns on the threaded serving runtime: a background
+admission thread dispatches partial stacks once their oldest request has
+lingered that long, so the stream completes with *no* ``flush()`` — pair it
+with ``--gap-ms`` (mean inter-arrival sleep) to emulate the sparse stream
+the linger thread exists for.  ``--sharded`` serves through the multi-device
+mesh from ``--mesh`` (the server rounds pow2 stack buckets up to the mesh
+batch axis); force host devices off-TPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 The request stream is generated *before* the timed region either way.
 """
 
@@ -60,8 +69,13 @@ def serve_eei(args):
     table = autotune.get_table()
 
     mesh = parse_mesh(args.mesh)
-    plan = plan_for((args.batch, args.n, args.n), k=args.k,
-                    mesh=mesh if mesh.devices.size > 1 else None)
+    if args.sharded and mesh.shape["data"] < 2:
+        raise SystemExit(
+            "--sharded needs a multi-device data axis; pass --mesh DxM and "
+            "(off-TPU) XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    serve_mesh = mesh if mesh.devices.size > 1 else None
+    plan = plan_for((args.batch, args.n, args.n), k=args.k, mesh=serve_mesh,
+                    backend="sharded" if args.sharded else None)
     # Crossovers are backend-specific since schema v2 — log the pair the
     # resolved plan's backend actually dispatches on.
     eigh_x, dense_x = resolved_crossovers(plan.backend)
@@ -69,17 +83,19 @@ def serve_eei(args):
              "dense_crossover_n=%d)",
              table.source if table else "static fallback constants",
              plan.backend, eigh_x, dense_x)
+    mode = "sync-loop" if args.sync else (
+        f"continuous-batching linger={args.linger_ms}ms"
+        if args.linger_ms is not None else "continuous-batching")
     if args.mixed and not args.sync:
         # The server re-plans per shape bucket; the fixed plan above is
         # only the log's reference point for the nominal (batch, n, k).
         log.info("eei serve: per-bucket planning, max_batch=%d nominal "
-                 "n=%d k=%d mode=continuous-batching mixed-shapes",
-                 args.batch, args.n, args.k)
+                 "n=%d k=%d mode=%s mixed-shapes", args.batch, args.n,
+                 args.k, mode)
     else:
         log.info("eei serve plan: method=%s backend=%s max_batch=%d n=%d "
                  "k=%d mode=%s", plan.method, plan.backend, args.batch,
-                 args.n, args.k,
-                 "sync-loop" if args.sync else "continuous-batching")
+                 args.n, args.k, mode)
 
     # The stream is generated before t0 — only serving is timed.
     stream = make_eei_stream(args.requests, args.n, args.k,
@@ -103,12 +119,29 @@ def serve_eei(args):
                  len(stream) / max(dt, 1e-9), len(stream) / max(dt, 1e-9))
         return out
 
+    # --mixed uses per-bucket planning (plan=None + the serve mesh); a
+    # fixed nominal shape pins the one plan computed above.
     server = EeiServer(plan if args.mixed is False else None,
-                       max_batch=args.batch, max_inflight=args.inflight)
+                       max_batch=args.batch, max_inflight=args.inflight,
+                       linger_ms=args.linger_ms,
+                       mesh=serve_mesh if args.mixed else None)
+    gap_s = (args.gap_ms or 0.0) / 1e3
+    rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
-    futures = [server.submit(a, k_i) for a, k_i in stream]
-    server.flush()
+    futures = []
+    for a, k_i in stream:
+        if gap_s:
+            time.sleep(rng.exponential(gap_s))  # sparse Poisson-ish arrivals
+        futures.append(server.submit(a, k_i))
+    if args.linger_ms is not None:
+        # The whole point of the linger thread: the stream drains with no
+        # explicit flush — just wait on the completion futures.
+        for f in futures:
+            f.result(timeout=600)
+    else:
+        server.flush()
     dt = time.monotonic() - t0
+    server.close()
     stats = server.stats()
     log.info("served %d requests in %.3fs (%.1f solves/s, %.1f requests/s)",
              len(stream), dt, len(stream) / max(dt, 1e-9),
@@ -139,6 +172,16 @@ def main(argv=None):
     ap.add_argument("--inflight", type=int, default=2,
                     help="EEI server: max in-flight stacks (double "
                     "buffering = 2)")
+    ap.add_argument("--linger-ms", type=float, default=None,
+                    help="EEI: run the threaded serving runtime — a "
+                    "background admission thread dispatches partial stacks "
+                    "after this linger timeout (no explicit flush)")
+    ap.add_argument("--gap-ms", type=float, default=0.0,
+                    help="EEI: mean inter-arrival sleep between submits "
+                    "(emulates the sparse stream the linger thread serves)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="EEI: serve through the sharded backend on the "
+                    "--mesh data axis (stack buckets round up to it)")
     ap.add_argument("--calibration", default=None,
                     help="path to an autotune calibration table (JSON); "
                     "default: env/cache/repo-default resolution chain")

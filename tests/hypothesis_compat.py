@@ -2,50 +2,201 @@
 
 ``hypothesis`` is a dev-only dependency (see ``pyproject.toml``); CI images
 without it must still collect and run the rest of the suite.  When the real
-package is importable this module re-exports it untouched; otherwise it
-provides just enough of the ``given``/``settings``/``strategies`` surface for
-the property tests to *define* themselves and then skip at call time.
+package is importable this module re-exports it untouched.  Otherwise it
+provides a **degraded sampling fallback**: enough of the
+``given``/``settings``/``strategies``/``assume`` surface that the property
+tests still *run* — a bounded number of seeded random examples per test
+(boundary values first), no shrinking, no example database — instead of
+silently skipping.  The seed derives from the test's qualified name, so a
+failure reproduces deterministically and the falsifying example is printed.
+
+Environments that must run the real engine (CI does) set
+``REPRO_REQUIRE_HYPOTHESIS=1``: the import then fails loudly rather than
+letting property coverage degrade without anyone noticing.
+``REPRO_FALLBACK_EXAMPLES`` bounds examples per test in fallback mode
+(default 10; real hypothesis honors each test's own ``max_examples``).
 """
 
 from __future__ import annotations
 
+import os
+
+_REQUIRED = os.environ.get("REPRO_REQUIRE_HYPOTHESIS", "").lower() in (
+    "1", "true", "yes")
+
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
 
     HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    import pytest
+except ModuleNotFoundError as _exc:
+    if _REQUIRED:
+        raise ModuleNotFoundError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but the real `hypothesis` "
+            "package is not installed — property tests would run in the "
+            "degraded sampling fallback. Install it (pip install "
+            "hypothesis) or unset the variable.") from _exc
+
+    import functools
+    import random
+    import zlib
 
     HAVE_HYPOTHESIS = False
 
-    def given(*_args, **_kwargs):
+    #: Examples per property test in fallback mode (the real engine runs
+    #: each test's own ``max_examples``; the fallback bounds local runtime).
+    FALLBACK_EXAMPLES = int(os.environ.get("REPRO_FALLBACK_EXAMPLES", "10"))
+
+    class _Unsatisfied(Exception):
+        """Raised by ``assume(False)``: discard the example, draw another."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
+    class _Strategy:
+        """Seeded sampler: boundary examples first, then random draws."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self._edges = tuple(edges)
+
+        def example(self, rng, index: int):
+            if index < len(self._edges):
+                return self._edges[index]
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)),
+                             tuple(fn(e) for e in self._edges))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    value = self._draw(rng)
+                    if pred(value):
+                        return value
+                raise _Unsatisfied
+
+            return _Strategy(draw, tuple(e for e in self._edges if pred(e)))
+
+    class _Strategies:
+        """The subset of ``hypothesis.strategies`` this repo's tests use."""
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2 ** 15) if min_value is None else int(min_value)
+            hi = 2 ** 15 if max_value is None else int(max_value)
+            return _Strategy(lambda rng: rng.randint(lo, hi), (lo, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5, (False, True))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            if not seq:
+                raise ValueError("sampled_from() on an empty collection")
+            return _Strategy(lambda rng: rng.choice(seq), (seq[0], seq[-1]))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kwargs):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: rng.uniform(lo, hi), (lo, hi))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value, (value,))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = min_size + 8 if max_size is None else max_size
+
+            def draw(rng):
+                size = rng.randint(min_size, hi)
+                return [elements.example(rng, len(elements._edges) + 1)
+                        for _ in range(size)]
+
+            edges = ([],) if min_size == 0 else ()
+            return _Strategy(draw, edges)
+
+        @staticmethod
+        def tuples(*elements):
+            def draw(rng):
+                return tuple(e.example(rng, len(e._edges) + 1)
+                             for e in elements)
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(*_args, **kw_strategies):
+        if _args:
+            raise TypeError(
+                "the hypothesis fallback shim supports keyword-form "
+                "@given only (given(x=st.integers(...), ...))")
+
         def deco(fn):
             # Zero-arg wrapper: pytest must not mistake the wrapped test's
             # hypothesis parameters for fixtures.
-            def skipper():
-                pytest.skip("hypothesis not installed")
+            @functools.wraps(fn)
+            def runner():
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = random.Random(seed)
+                budget = runner._repro_max_examples
+                ran = attempt = 0
+                while ran < budget and attempt < budget * 50:
+                    attempt += 1
+                    try:
+                        # A .filter() strategy that cannot satisfy its
+                        # predicate raises _Unsatisfied and counts as a
+                        # discard, same as assume() inside the test body.
+                        kwargs = {name: strat.example(rng, attempt - 1)
+                                  for name, strat in kw_strategies.items()}
+                    except _Unsatisfied:
+                        continue
+                    except BaseException:
+                        # Separate from the call below so a broken draw
+                        # never prints a stale example as "falsifying".
+                        print(f"Strategy draw failed (fallback sampler, "
+                              f"seed={seed}, attempt={attempt}) for "
+                              f"{fn.__name__}")
+                        raise
+                    try:
+                        fn(**kwargs)
+                    except _Unsatisfied:
+                        continue
+                    except BaseException:
+                        print(f"Falsifying example (fallback sampler, "
+                              f"seed={seed}): {fn.__name__}(**{kwargs!r})")
+                        raise
+                    ran += 1
+                if ran == 0:
+                    # Mirror real hypothesis's Unsatisfiable error: a
+                    # property that never executes must not pass silently.
+                    raise AssertionError(
+                        f"fallback sampler could not satisfy the "
+                        f"assumptions of {fn.__name__} in {attempt} "
+                        f"attempts — zero examples executed")
 
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            skipper.__module__ = fn.__module__
-            return skipper
+            # functools.wraps sets __wrapped__ = fn, which would make
+            # pytest unwrap to fn's signature and treat the strategy
+            # parameters as fixtures — drop it.
+            del runner.__wrapped__
+            runner._repro_max_examples = FALLBACK_EXAMPLES
+            return runner
 
         return deco
 
-    def settings(*_args, **_kwargs):
-        return lambda fn: fn
+    def settings(max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None and \
+                    hasattr(fn, "_repro_max_examples"):
+                fn._repro_max_examples = min(
+                    int(max_examples), FALLBACK_EXAMPLES)
+            return fn
 
-    class _Strategy:
-        """Inert stand-in for a hypothesis strategy object."""
-
-        def __call__(self, *args, **kwargs):
-            return self
-
-        def __getattr__(self, name):
-            return self
-
-    class _Strategies:
-        def __getattr__(self, name):
-            return _Strategy()
-
-    st = _Strategies()
+        return deco

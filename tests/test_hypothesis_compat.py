@@ -1,0 +1,81 @@
+"""The degraded-sampling fallback in ``hypothesis_compat``.
+
+These only run where the real ``hypothesis`` is absent (the fallback is
+active); with the real engine installed the shim is a pure re-export and
+there is nothing of ours to test.
+"""
+
+import pytest
+
+import hypothesis_compat as hc
+
+pytestmark = pytest.mark.skipif(
+    hc.HAVE_HYPOTHESIS, reason="real hypothesis installed; shim is inert")
+
+
+def test_sampler_runs_boundaries_first_and_bounded_examples():
+    seen = []
+
+    @hc.settings(max_examples=50, deadline=None)
+    @hc.given(x=hc.st.integers(3, 7))
+    def prop(x):
+        seen.append(x)
+
+    prop()
+    assert seen[0] == 3 and seen[1] == 7  # boundary examples first
+    assert all(3 <= x <= 7 for x in seen)
+    assert len(seen) == min(50, hc.FALLBACK_EXAMPLES)
+
+
+def test_sampler_is_deterministic_per_test():
+    runs = []
+    for _ in range(2):
+        seen = []
+
+        @hc.given(x=hc.st.integers(0, 10_000))
+        def prop(x):
+            seen.append(x)
+
+        prop()
+        runs.append(seen)
+    assert runs[0] == runs[1]  # seed derives from the test name
+
+
+def test_assume_discards_and_unsatisfiable_fails():
+    ran = []
+
+    @hc.given(x=hc.st.integers(0, 100))
+    def sometimes(x):
+        hc.assume(x % 2 == 0)
+        ran.append(x)
+
+    sometimes()
+    assert ran and all(x % 2 == 0 for x in ran)
+
+    @hc.given(x=hc.st.integers(0, 100))
+    def never(x):
+        hc.assume(False)
+
+    # Zero executed examples must fail loudly, not pass silently.
+    with pytest.raises(AssertionError, match="zero examples"):
+        never()
+
+
+def test_filter_strategy_discards_not_errors():
+    ran = []
+
+    @hc.given(x=hc.st.integers(0, 100).filter(lambda v: v >= 99))
+    def prop(x):
+        ran.append(x)
+
+    prop()  # sparse filter: discards must not surface as errors
+    assert all(x >= 99 for x in ran)
+
+
+def test_failing_example_propagates():
+    @hc.given(x=hc.st.integers(0, 100))
+    def bad(x):
+        assert x < 0
+
+    with pytest.raises(AssertionError):
+        bad()

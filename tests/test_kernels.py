@@ -234,3 +234,65 @@ def test_property_sturm_sorted_and_exact(b, n, seed):
     for i in range(b):
         ref = np.asarray(jnp.linalg.eigvalsh(tridiagonal_matrix(d[i], e[i])))
         np.testing.assert_allclose(ev[i], ref, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Block / bucket invariants (the shapes serving buckets and kernel grids
+# are built from) — property-based
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(x=st.integers(1, 1 << 20))
+def test_property_pow2_bucket(x):
+    from repro.kernels.blocks import pow2_bucket
+
+    p = pow2_bucket(x)
+    assert p >= x, "bucket never shrinks the request"
+    assert p & (p - 1) == 0, "bucket is a power of two"
+    assert p < 2 * x, "bucket is the *smallest* pow2 >= x"
+    assert pow2_bucket(p) == p, "idempotent on powers of two"
+
+
+def test_pow2_bucket_rejects_nonpositive():
+    from repro.kernels.blocks import pow2_bucket
+
+    for bad in (0, -1, -128):
+        with pytest.raises(ValueError):
+            pow2_bucket(bad)
+
+
+@settings(max_examples=25, deadline=None)
+@given(requested=st.integers(1, 512), dim=st.integers(1, 512),
+       align=st.sampled_from([1, 8]))
+def test_property_clamp_block(requested, dim, align):
+    from repro.kernels.blocks import clamp_block
+
+    block = clamp_block(requested, dim, align=align)
+    rounded_dim = -(-dim // align) * align
+    assert block % align == 0, "blocks stay on the hardware granule"
+    assert align <= block <= max(rounded_dim, align), \
+        "a block never overshoots the padded problem axis"
+    assert block <= -(-requested // align) * align, \
+        "a block never exceeds the aligned request"
+    if requested >= rounded_dim:
+        # Big requests clamp to one whole (aligned) axis: padding is then
+        # bounded by align - 1, never by the requested tile.
+        assert block == rounded_dim
+        assert block - dim < align
+    # monotone: asking for more never yields a smaller block
+    assert clamp_block(requested + 1, dim, align=align) >= block
+
+
+@settings(max_examples=25, deadline=None)
+@given(requested=st.integers(1, 512), b=st.integers(1, 512))
+def test_property_clamp_batch_block(requested, b):
+    from repro.kernels.blocks import clamp_batch_block, pow2_bucket
+
+    bb = clamp_batch_block(requested, b)
+    assert bb >= 1
+    assert bb & (bb - 1) == 0, "batch blocks are powers of two"
+    assert bb <= pow2_bucket(b), "never exceeds the padded (pow2) stack"
+    assert pow2_bucket(b) % bb == 0, \
+        "a pow2-bucketed serving stack always runs full grid steps"
+    assert bb <= pow2_bucket(requested), "never overshoots the request's pow2"

@@ -1,20 +1,38 @@
-"""EeiServer: continuous batching, shape buckets, program-cache bounds.
+"""EeiServer: continuous batching, shape buckets, program-cache bounds,
+and the concurrent runtime (linger admission, producer races, close).
 
 The serving machinery's contract: coalescing + bucket padding + slicing add
 *zero* numerical change (server output is bit-identical to ``SolverEngine``
 on the equivalent padded stack, and bit-identical k-slices of it), padded
 rows/components never leak into results, and a mixed 100-request stream
 executes through at most one compile per distinct shape bucket.
+
+The property-based stream-conformance suite at the bottom locks the
+threaded runtime down: random heterogeneous ``(n, k, largest)`` streams
+with random pump/linger timing must stay bitwise-equal to the synchronous
+``SolverEngine.topk`` oracle on every dispatched stack, every submitted
+future must resolve exactly once, and the program-cache counters must
+account for every dispatch.
 """
+
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, settings, st
 from repro.engine import (
     EeiServer,
     ProgramCache,
+    QueueFull,
+    ServerClosed,
     ShapeBucket,
     SolverEngine,
     SolverPlan,
@@ -22,6 +40,11 @@ from repro.engine import (
 from repro.engine.server import make_eei_stream
 
 PLAN = SolverPlan(method="eei_tridiag", backend="jnp")
+
+#: One cache across the whole module: fuzzer iterations and the thread
+#: tests reuse compiled programs instead of recompiling per example (the
+#: cache is documented shareable and thread-safe).
+SHARED_CACHE = ProgramCache()
 
 
 def _sym(rng, n: int) -> np.ndarray:
@@ -33,6 +56,39 @@ def _serve(server: EeiServer, stream):
     futs = [server.submit(a, k) for a, k in stream]
     server.flush()
     return [f.result() for f in futs]
+
+
+def _assert_stream_conformant(server: EeiServer) -> None:
+    """Every dispatched stack must be bitwise-equal to the synchronous
+    ``SolverEngine.topk`` oracle run on the *same* padded stack under the
+    *same* plan, sliced per request — coalescing, padding, threading and
+    slicing add zero numerical change.  Needs ``record_dispatches=True``."""
+    for rec in server.dispatch_log:
+        ref = SolverEngine(rec.plan).topk(
+            jnp.asarray(rec.stack), rec.bucket.k, rec.bucket.largest)
+        lam, vec = np.asarray(ref.eigenvalues), np.asarray(ref.vectors)
+        for row, req in enumerate(rec.requests):
+            res = req.future.result(timeout=60)
+            if req.largest:
+                lam_e, vec_e = lam[row, -req.k:], vec[row, -req.k:, : req.n]
+            else:
+                lam_e, vec_e = lam[row, : req.k], vec[row, : req.k, : req.n]
+            np.testing.assert_array_equal(res.eigenvalues, lam_e)
+            np.testing.assert_array_equal(res.vectors, vec_e)
+
+
+def _assert_accounting(server: EeiServer, futures, cache_before) -> None:
+    """Future accounting (every submit resolves exactly once) and program
+    cache accounting (hit + miss == dispatch count)."""
+    assert all(f.done() for f in futures)
+    stats = server.stats()
+    assert stats["requests_submitted"] == len(futures)
+    assert (stats["requests_completed"] + stats["requests_failed"]
+            == len(futures))
+    assert len({id(f) for f in futures}) == len(futures)  # no duplicates
+    hits0, misses0 = cache_before
+    assert (server.cache.hits - hits0) + (server.cache.misses - misses0) \
+        == stats["stacks_dispatched"]
 
 
 # ---------------------------------------------------------------------------
@@ -280,3 +336,542 @@ def test_double_buffer_keeps_stacks_inflight():
     server.flush()
     assert all(f.done() for f in futs)
     assert server.stats()["requests_completed"] == 6
+
+
+# ---------------------------------------------------------------------------
+# Threaded runtime: linger admission, close semantics, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_linger_dispatches_partial_stack_without_flush():
+    """A sparse stream (3 requests into a max_batch=8 server) must complete
+    via the linger thread alone — no pump(), no flush() — within the
+    timeout, bitwise-equal to the sync oracle."""
+    rng = np.random.default_rng(20)
+    with EeiServer(PLAN, max_batch=8, linger_ms=20, cache=SHARED_CACHE,
+                   record_dispatches=True) as server:
+        before = (server.cache.hits, server.cache.misses)
+        futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+        results = [f.result(timeout=120) for f in futs]  # no flush!
+        assert all(r.eigenvalues.shape == (2,) for r in results)
+        assert server.stats()["stacks_dispatched"] >= 1
+        _assert_accounting(server, futs, before)
+        _assert_stream_conformant(server)
+
+
+def test_linger_full_stack_dispatches_before_timeout():
+    """Full stacks must not wait out the linger: with a huge linger, a
+    full max_batch group still dispatches immediately."""
+    rng = np.random.default_rng(21)
+    with EeiServer(PLAN, max_batch=4, linger_ms=60_000,
+                   cache=SHARED_CACHE) as server:
+        futs = [server.submit(_sym(rng, 12), 2) for _ in range(4)]
+        for f in futs:
+            f.result(timeout=120)  # would time out if linger gated it
+        assert server.stats()["stacks_dispatched"] == 1
+
+
+def test_submit_after_close_resolves_with_error():
+    """Late submits must get a resolved-with-error future, not a stranded
+    one (and not an exception at the call site)."""
+    rng = np.random.default_rng(22)
+    for kwargs in ({}, {"linger_ms": 5.0, "cache": SHARED_CACHE}):
+        server = EeiServer(PLAN, max_batch=4, **kwargs)
+        server.close()
+        fut = server.submit(_sym(rng, 8), 1)
+        assert fut.done()
+        with pytest.raises(ServerClosed):
+            fut.result()
+        assert server.stats()["requests_rejected"] == 1
+        server.close()  # idempotent
+
+
+def test_close_drains_queued_and_inflight():
+    """close() before the linger expires must still drain the queued
+    partial group: every future resolves with a real result."""
+    rng = np.random.default_rng(23)
+    server = EeiServer(PLAN, max_batch=8, linger_ms=60_000,
+                       cache=SHARED_CACHE)
+    futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+    server.close(timeout=120)
+    for f in futs:
+        assert f.done()
+        assert f.result().eigenvalues.shape == (2,)
+    assert server.stats()["requests_completed"] == 3
+
+
+def test_close_without_drain_fails_queued_futures():
+    """close(drain=False) must resolve still-queued requests with
+    ServerClosed — resolved, never stranded."""
+    rng = np.random.default_rng(24)
+    server = EeiServer(PLAN, max_batch=8, linger_ms=60_000,
+                       cache=SHARED_CACHE)
+    futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+    server.close(drain=False, timeout=120)
+    for f in futs:
+        assert f.done()
+        with pytest.raises(ServerClosed):
+            f.result()
+    assert server.stats()["requests_failed"] == 3
+
+
+def test_flush_is_idempotent_and_reentrant():
+    """Double flush() (sequential and from two racing threads) must be a
+    safe no-op once drained — the double-flush idempotency guard."""
+    rng = np.random.default_rng(25)
+    server = EeiServer(PLAN, max_batch=4)
+    server.flush()  # flush on an empty server
+    futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+    server.flush()
+    dispatched = server.stats()["stacks_dispatched"]
+    server.flush()  # second flush: nothing new
+    assert server.stats()["stacks_dispatched"] == dispatched
+    assert all(f.done() for f in futs)
+    # threaded mode: two concurrent flush barriers
+    with EeiServer(PLAN, max_batch=8, linger_ms=10_000,
+                   cache=SHARED_CACHE) as tserver:
+        tfuts = [tserver.submit(_sym(rng, 12), 2) for _ in range(3)]
+        threads = [threading.Thread(target=tserver.flush) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+            assert not t.is_alive(), "flush barrier deadlocked"
+        assert all(f.done() for f in tfuts)
+
+
+def test_backpressure_except_policy_raises_queue_full():
+    rng = np.random.default_rng(26)
+    server = EeiServer(PLAN, max_batch=8, max_pending=2,
+                       pending_policy="except")
+    server.submit(_sym(rng, 8), 1)
+    server.submit(_sym(rng, 8), 1)
+    with pytest.raises(QueueFull):
+        server.submit(_sym(rng, 8), 1)
+    server.flush()  # drains; submits admissible again
+    f = server.submit(_sym(rng, 8), 1)
+    server.flush()
+    assert f.result().eigenvalues.shape == (1,)
+
+
+def test_backpressure_block_policy_drains_via_linger_thread():
+    """With pending_policy='block', producers stall at max_pending and the
+    linger thread makes space — bounded by a watchdog so a regression shows
+    as a failure, not a hang."""
+    rng = np.random.default_rng(27)
+    futs = []
+    with EeiServer(PLAN, max_batch=2, linger_ms=1, max_pending=2,
+                   pending_policy="block", cache=SHARED_CACHE) as server:
+        def produce():
+            for _ in range(8):
+                futs.append(server.submit(_sym(rng, 12), 2))
+
+        worker = threading.Thread(target=produce)
+        worker.start()
+        worker.join(timeout=120)
+        assert not worker.is_alive(), "blocking submit deadlocked"
+        for f in futs:
+            f.result(timeout=120)
+    assert server.stats()["requests_completed"] == 8
+
+
+def test_backpressure_block_policy_sync_mode_drains_inline():
+    """Caller-driven mode has no admission thread to free space: 'block'
+    must drain inline instead of self-deadlocking a single thread."""
+    rng = np.random.default_rng(28)
+    server = EeiServer(PLAN, max_batch=8, max_pending=2,
+                       pending_policy="block")
+    futs = [server.submit(_sym(rng, 8), 1) for _ in range(5)]
+    server.flush()
+    assert all(f.result().eigenvalues.shape == (1,) for f in futs)
+
+
+def test_validation_of_runtime_parameters():
+    with pytest.raises(ValueError):
+        EeiServer(PLAN, linger_ms=-1)
+    with pytest.raises(ValueError):
+        EeiServer(PLAN, max_pending=-1)
+    with pytest.raises(ValueError):
+        EeiServer(PLAN, pending_policy="drop")
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: producer threads racing the linger thread, cache locking
+# ---------------------------------------------------------------------------
+
+
+def test_producer_threads_race_linger_admission():
+    """N producer threads racing submit() against the linger thread: no
+    deadlock (every join is timeout-bounded), no lost or duplicated
+    futures, and ProgramCache hits + misses == dispatch count."""
+    rng = np.random.default_rng(30)
+    n_threads, per_thread = 4, 8
+    mats = [[(_sym(rng, int(n)), int(k))
+             for n, k in zip(rng.choice([6, 8, 12], per_thread),
+                             rng.integers(1, 3, per_thread))]
+            for _ in range(n_threads)]
+    futs_per_thread = [[] for _ in range(n_threads)]
+    with EeiServer(PLAN, max_batch=4, linger_ms=1, cache=SHARED_CACHE,
+                   record_dispatches=True) as server:
+        before = (server.cache.hits, server.cache.misses)
+
+        def produce(i):
+            for a, k in mats[i]:
+                futs_per_thread[i].append(server.submit(a, k))
+
+        threads = [threading.Thread(target=produce, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+            assert not t.is_alive(), "producer thread deadlocked"
+        futs = [f for fs in futs_per_thread for f in fs]
+        for f in futs:
+            f.result(timeout=120)
+        _assert_accounting(server, futs, before)
+        assert server.stats()["requests_failed"] == 0
+        _assert_stream_conformant(server)
+
+
+def test_program_cache_concurrent_gets_compile_once():
+    """Racing get()s for one bucket must compile exactly once and return
+    the same executable — the cache lock covers the compile."""
+    cache = ProgramCache()
+    bucket = ShapeBucket(2, 16, 2, True)
+    results = [None] * 4
+    barrier = threading.Barrier(4)
+
+    def work(i):
+        barrier.wait()
+        results[i] = cache.get(bucket, PLAN, jnp.float32)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive()
+    assert all(r is results[0] and r is not None for r in results)
+    assert cache.compiles == 1 and len(cache) == 1
+    assert cache.hits + cache.misses == 4
+
+
+# ---------------------------------------------------------------------------
+# Property-based stream conformance (the fuzzer the runtime is locked by)
+# ---------------------------------------------------------------------------
+
+# One request: (n, k_raw, largest, action-after-submit). k = 1 + k_raw % n
+# keeps k valid for any n. Actions: 0/3 nothing, 1 pump(), 2 sleep (lets
+# the linger thread fire mid-stream / exercises odd pump timing).
+_REQ = st.tuples(st.integers(4, 12), st.integers(0, 1), st.booleans(),
+                 st.integers(0, 3))
+
+
+def _run_stream(server, ops, seed):
+    rng = np.random.default_rng(seed)
+    futs = []
+    for n, k_raw, largest, action in ops:
+        futs.append(server.submit(_sym(rng, n), 1 + k_raw % n,
+                                  largest=largest))
+        if action == 1:
+            server.pump()
+        elif action == 2:
+            time.sleep(0.002)
+    return futs
+
+
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(_REQ, min_size=1, max_size=20),
+       max_batch=st.sampled_from([1, 2, 4]), seed=st.integers(0, 999))
+def test_stream_conformance_fuzz_caller_driven(ops, max_batch, seed):
+    """Random heterogeneous (n, k, largest) streams with random pump
+    timing, caller-driven mode: bitwise identity against the synchronous
+    SolverEngine.topk oracle on every dispatched stack, and every submit
+    resolves exactly once."""
+    server = EeiServer(PLAN, max_batch=max_batch, cache=SHARED_CACHE,
+                       record_dispatches=True)
+    before = (server.cache.hits, server.cache.misses)
+    futs = _run_stream(server, ops, seed)
+    server.flush()
+    _assert_accounting(server, futs, before)
+    assert server.stats()["requests_failed"] == 0
+    assert sum(len(r.requests) for r in server.dispatch_log) == len(ops)
+    _assert_stream_conformant(server)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ops=st.lists(_REQ, min_size=1, max_size=16),
+       max_batch=st.sampled_from([2, 4]),
+       linger_ms=st.sampled_from([0.0, 1.0, 5.0]),
+       seed=st.integers(0, 999))
+def test_stream_conformance_fuzz_linger_thread(ops, max_batch, linger_ms,
+                                               seed):
+    """The same conformance contract under the threaded runtime: random
+    linger timeouts and random sleeps decide how stacks form, but every
+    grouping must stay bitwise-equal to the sync oracle, with no flush()
+    ever called — futures resolve via the linger thread, and close()
+    drains the tail."""
+    server = EeiServer(PLAN, max_batch=max_batch, linger_ms=linger_ms,
+                       cache=SHARED_CACHE, record_dispatches=True)
+    before = (server.cache.hits, server.cache.misses)
+    try:
+        futs = _run_stream(server, ops, seed)
+        for f in futs:
+            f.result(timeout=120)  # linger thread must complete the stream
+    finally:
+        server.close(timeout=120)
+    _assert_accounting(server, futs, before)
+    assert server.stats()["requests_failed"] == 0
+    assert sum(len(r.requests) for r in server.dispatch_log) == len(ops)
+    _assert_stream_conformant(server)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 12), pad=st.integers(1, 8), seed=st.integers(0, 999),
+       largest=st.booleans(), scale=st.sampled_from([1e-2, 1.0, 1e2]))
+def test_property_guard_embedding_never_enters_window(n, pad, seed, largest,
+                                                      scale):
+    """Guard-diagonal embedding invariant at both spectrum extremes: the
+    guard value sits strictly outside the spectrum on the far side, so the
+    padded matrix's top-n (or bottom-n) eigenvalues are exactly A's and
+    guard eigenpairs can never enter any requested k-window."""
+    rng = np.random.default_rng(seed)
+    a = (scale * _sym(rng, n)).astype(np.float32)
+    server = EeiServer(PLAN)
+    guard = server._guard_value(a, largest)
+    w = np.linalg.eigvalsh(a.astype(np.float64))
+    if largest:
+        assert guard < w[0]  # strictly below: never in a top-k window
+    else:
+        assert guard > w[-1]  # strictly above: never in a bottom-k window
+    padded = np.zeros((n + pad, n + pad), dtype=np.float64)
+    padded[:n, :n] = a
+    idx = np.arange(n, n + pad)
+    padded[idx, idx] = guard
+    wp = np.linalg.eigvalsh(padded)
+    window = wp[pad:] if largest else wp[:n]
+    guards = wp[:pad] if largest else wp[n:]
+    np.testing.assert_allclose(window, w, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(guards, guard, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving (forced 2-device host mesh in a subprocess: the device
+# count must be set before jax initializes, which this process already did)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SERVE_SCRIPT = """
+import jax, numpy as np, jax.numpy as jnp
+assert jax.device_count() == 2, jax.device_count()
+from repro.engine import EeiServer, SolverEngine, SolverPlan, plan_for
+
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+plan = SolverPlan(method="eei_tridiag", backend="sharded", mesh=mesh)
+rng = np.random.default_rng(0)
+
+def sym(n):
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    return (a + a.T) / 2
+
+# per-bucket auto-planning picks the sharded backend for big-enough stacks
+auto = plan_for((4, 48, 48), k=2, mesh=mesh)
+assert auto.backend == "sharded", auto
+
+with EeiServer(plan, max_batch=4, linger_ms=5,
+               record_dispatches=True) as server:
+    futs = [server.submit(sym(n), 2) for n in (12, 12, 16, 12, 9)]
+    for f in futs:
+        f.result(timeout=240)  # no flush: linger thread drives dispatch
+    assert server.stats()["requests_completed"] == 5
+    # pow2 buckets round up to the mesh batch axis; bitwise vs the sync
+    # sharded oracle on the same padded stack
+    for rec in server.dispatch_log:
+        assert rec.bucket.b % 2 == 0, rec.bucket
+        ref = SolverEngine(rec.plan).topk(
+            jnp.asarray(rec.stack), rec.bucket.k, rec.bucket.largest)
+        lam = np.asarray(ref.eigenvalues)
+        vec = np.asarray(ref.vectors)
+        for row, req in enumerate(rec.requests):
+            res = req.future.result()
+            np.testing.assert_array_equal(res.eigenvalues, lam[row, -req.k:])
+            np.testing.assert_array_equal(res.vectors,
+                                          vec[row, -req.k:, : req.n])
+print("sharded serve OK")
+"""
+
+
+def test_sharded_serve_on_forced_two_device_host_mesh():
+    """The sharded backend through the full server path (linger thread,
+    bucket rounding to the mesh batch axis) on a 2-device host mesh."""
+    import repro.engine
+
+    # repro is a namespace package (__file__ is None) — derive src/ from a
+    # concrete module inside it.
+    src_dir = str(Path(repro.engine.__file__).parents[2])
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SERVE_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "sharded serve OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Stress lane (-m slow): heavier thread stress + sparse-stream serve smoke
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_thread_stress_producers_vs_linger():
+    """8 producer threads x 25 mixed requests racing the linger thread with
+    backpressure on: timeout-bounded (deadlock fails, never hangs), full
+    future/cache accounting, bitwise conformance on every stack."""
+    rng = np.random.default_rng(40)
+    n_threads, per_thread = 8, 25
+    streams = [[(_sym(rng, int(n)), int(k), bool(largest))
+                for n, k, largest in zip(
+                    rng.choice([6, 8, 12, 16], per_thread),
+                    rng.integers(1, 4, per_thread),
+                    rng.integers(0, 2, per_thread))]
+               for _ in range(n_threads)]
+    futs_per_thread = [[] for _ in range(n_threads)]
+    with EeiServer(PLAN, max_batch=8, linger_ms=1, max_pending=64,
+                   pending_policy="block", cache=SHARED_CACHE,
+                   record_dispatches=True) as server:
+        before = (server.cache.hits, server.cache.misses)
+
+        def produce(i):
+            local_rng = np.random.default_rng(100 + i)
+            for a, k, largest in streams[i]:
+                if local_rng.random() < 0.2:
+                    time.sleep(local_rng.random() * 0.002)
+                futs_per_thread[i].append(
+                    server.submit(a, min(k, a.shape[0]), largest=largest))
+
+        threads = [threading.Thread(target=produce, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+            assert not t.is_alive(), "producer thread deadlocked"
+        futs = [f for fs in futs_per_thread for f in fs]
+        for f in futs:
+            f.result(timeout=300)
+        _assert_accounting(server, futs, before)
+        assert server.stats()["requests_failed"] == 0
+        _assert_stream_conformant(server)
+
+
+@pytest.mark.slow
+def test_sparse_stream_serve_smoke():
+    """Sparse-stream serve smoke: a mixed stream with inter-arrival gaps
+    completes through the linger thread alone (no flush anywhere), within
+    the timeout, bitwise-equal to the sync oracle, with compiles bounded
+    by distinct buckets."""
+    stream = make_eei_stream(48, 16, 4, seed=41, mixed=True)
+    rng = np.random.default_rng(42)
+    with EeiServer(None, max_batch=8, linger_ms=3, cache=SHARED_CACHE,
+                   record_dispatches=True) as server:
+        before = (server.cache.hits, server.cache.misses)
+        futs = []
+        for a, k in stream:
+            time.sleep(rng.exponential(0.001))
+            futs.append(server.submit(a, k))
+        for f in futs:
+            f.result(timeout=300)
+        stats = server.stats()
+        assert stats["requests_completed"] == len(stream)
+        _assert_accounting(server, futs, before)
+        _assert_stream_conformant(server)
+
+
+# ---------------------------------------------------------------------------
+# Review regressions: cancellation, close(drain=False) retirement, fair
+# key selection, cache compile-failure propagation
+# ---------------------------------------------------------------------------
+
+
+def test_sync_close_without_drain_still_retires_inflight():
+    """Caller-driven close(drain=False): stacks already on device must
+    retire (their futures resolve with results), queued ones fail."""
+    rng = np.random.default_rng(50)
+    server = EeiServer(PLAN, max_batch=2)
+    inflight = [server.submit(_sym(rng, 12), 2) for _ in range(2)]  # full
+    assert server.stats()["stacks_dispatched"] == 1
+    queued = server.submit(_sym(rng, 12), 2)  # partial group stays queued
+    server.close(drain=False)
+    for f in inflight:
+        assert f.result(timeout=60).eigenvalues.shape == (2,)
+    with pytest.raises(ServerClosed):
+        queued.result(timeout=60)
+
+
+def test_cancelled_future_does_not_poison_the_stack():
+    """A caller cancelling its future must not crash the retire path or
+    lose the other requests riding the same stack."""
+    rng = np.random.default_rng(51)
+    with EeiServer(PLAN, max_batch=8, linger_ms=60_000,
+                   cache=SHARED_CACHE) as server:
+        futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+        assert futs[1].cancel()  # still queued: cancellable
+        server.flush()
+        for f in (futs[0], futs[2]):
+            assert f.result(timeout=120).eigenvalues.shape == (2,)
+        assert futs[1].cancelled()
+    stats = server.stats()
+    assert stats["requests_completed"] == 3  # stack retired whole
+
+
+def test_ready_key_selection_is_fifo_across_keys():
+    """An expired partial group must outrank a younger full group: the
+    oldest head request wins, so a hot key cannot starve a lingered one."""
+    import collections
+    from concurrent.futures import Future as _Future
+
+    from repro.engine.server import _Request
+
+    rng = np.random.default_rng(52)
+    server = EeiServer(PLAN, max_batch=2)  # sync mode: threads stay out
+    server.linger_ms = 10.0  # only _ready_key_locked reads it here
+    now = time.monotonic()
+    r_old = _Request(a=_sym(rng, 16), n=16, k=1, largest=True,
+                     future=_Future(), t_submit=now - 1.0)
+    r_new = [_Request(a=_sym(rng, 24), n=24, k=1, largest=True,
+                      future=_Future(), t_submit=now) for _ in range(2)]
+    with server._cv:
+        server._queues[(24, True)] = collections.deque(r_new)  # full, young
+        server._queues[(16, True)] = collections.deque([r_old])  # expired
+        key, deadline = server._ready_key_locked(now)
+    assert key == (16, True), "expired older head must win over full young"
+    assert deadline is None
+
+
+def test_program_cache_failed_compile_raises_everywhere_and_retries():
+    """A failing compile must propagate to concurrent same-bucket waiters
+    and be evicted so the next get() retries."""
+    cache = ProgramCache()
+    bucket = ShapeBucket(2, 16, 2, True)
+    calls = {"n": 0}
+    import repro.engine.engine as engine_mod
+    real = engine_mod.topk_program
+
+    def flaky(plan, k, largest):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("synthetic compile failure")
+        return real(plan, k, largest)
+
+    engine_mod.topk_program, orig = flaky, engine_mod.topk_program
+    try:
+        with pytest.raises(RuntimeError, match="synthetic"):
+            cache.get(bucket, PLAN, jnp.float32)
+        assert len(cache) == 0  # evicted: retry is possible
+        prog = cache.get(bucket, PLAN, jnp.float32)  # retries and succeeds
+        assert prog is not None and len(cache) == 1
+    finally:
+        engine_mod.topk_program = orig
