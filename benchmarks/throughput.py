@@ -19,6 +19,14 @@ continuous-batching ``EeiServer`` (shape buckets + program cache + async
 double-buffered dispatch) against the synchronous per-request loop on the
 same pre-generated mixed-shape stream.
 
+It also sweeps the top-k axis through the stage-graph's windowed
+composition (PR 5): at fixed ``n`` and k in {1, 4, 16}, the windowed path
+(index-targeted Sturm window + minor-determinant components — no
+minor-spectra stage) is served against the full-spectrum composition on
+the same stream, written to ``BENCH_topk.json`` and *gated*: windowed must
+beat full by >= 1.5x requests/s at k=1 (measured ~10-20x on the quiet
+reference container).
+
 It also exercises the threaded linger runtime (PR 4) on a *sparse* stream:
 requests arrive with inter-arrival gaps and nothing calls ``flush()`` — the
 background admission thread must dispatch partial stacks and resolve every
@@ -75,6 +83,18 @@ LINGER_SMOKE = (48, 16, 4, 8)
 LINGER_FULL = (256, 32, 8, 32)
 LINGER_MS = 2.0
 LINGER_GAP_MS = 0.5  # mean inter-arrival sleep (exponential)
+
+#: Windowed-composition top-k sweep (requests, n, max_batch): the windowed
+#: stage composition vs the full-spectrum composition on the same fixed-n
+#: request stream, at each serving-bucket k.
+TOPK_SMOKE = (32, 32, 16)
+TOPK_FULL = (96, 64, 16)
+TOPK_KS = (1, 4, 16)
+#: Hard floor on the k=1 windowed/full requests/s ratio (a within-run ratio
+#: of identical work — it transfers across CI hardware).  The windowed
+#: composition replaces the whole minor-spectra stage, so the quiet-machine
+#: ratio sits far above this (~10-20x measured on the reference container).
+TOPK_WINDOWED_K1_FLOOR = 1.5
 
 BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
 SERVE_BASELINE_PATH = Path(__file__).parent / "baselines" / "serve_smoke.json"
@@ -211,6 +231,53 @@ def serve_mode_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
             f"buckets={warm['distinct_buckets']} "
             f"p99_ms={stats['p99_latency_ms']:.1f}"),
     ]
+
+
+def topk_sweep_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
+    """Windowed vs full-spectrum serving across the top-k axis.
+
+    Both paths serve the *same* fixed-``n`` pre-generated stream through
+    ``EeiServer`` with pinned plans differing only in ``plan.spectrum``.
+    The windowed composition (index-targeted Sturm window + minor-
+    determinant components — no minor-spectra stage) must beat the
+    full-spectrum composition by ``TOPK_WINDOWED_K1_FLOOR`` at ``k=1``;
+    the k=4/k=16 ratios are recorded ungated.  Results land in
+    ``BENCH_topk.json``.
+    """
+    import time as _time
+
+    from repro.engine import EeiServer, SolverPlan
+    from repro.engine.server import make_eei_stream
+
+    requests, n, max_batch = TOPK_SMOKE if smoke else TOPK_FULL
+    rows = []
+    for k in TOPK_KS:
+        stream = make_eei_stream(requests, n, min(k, n), seed=2 + k)
+        rps = {}
+        for spectrum in ("full", "windowed"):
+            plan = SolverPlan(method="eei_tridiag", backend="jnp",
+                              spectrum=spectrum)
+            server = EeiServer(plan, max_batch=max_batch)
+            for a, k_i in stream:  # warmup pass compiles the bucket
+                server.submit(a, k_i)
+            server.flush()
+            server.reset_stats()
+            t0 = _time.perf_counter()
+            futs = [server.submit(a, k_i) for a, k_i in stream]
+            server.flush()
+            dt = _time.perf_counter() - t0
+            assert all(f.done() for f in futs)
+            assert server.stats()["program_compiles"] == 0  # warm
+            rps[spectrum] = requests / dt
+            rows.append(Row(
+                f"topk/{spectrum}/r={requests},n={n},k={k}", dt * 1e6,
+                f"requests_per_s={requests / dt:.1f}"))
+        ratio = rps["windowed"] / rps["full"]
+        metrics[f"topk_windowed_vs_full_k{k}_ratio"] = ratio
+        metrics[f"topk_windowed_k{k}_requests_per_s"] = rps["windowed"]
+        metrics[f"topk_full_k{k}_requests_per_s"] = rps["full"]
+        rows[-1].derived += f" speedup_vs_full={ratio:.2f}x"
+    return rows
 
 
 def linger_serve_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
@@ -367,23 +434,35 @@ def main() -> None:
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="serve-mode artifact path for --smoke "
                     "(default: ./%(default)s)")
+    ap.add_argument("--topk-out", default="BENCH_topk.json",
+                    help="windowed top-k sweep artifact path for --smoke "
+                    "(default: ./%(default)s)")
     args = ap.parse_args()
     rows, metrics = run(smoke=args.smoke)
     serve_metrics: dict = {}
     serve_rows = serve_mode_comparison(serve_metrics, smoke=args.smoke)
     serve_rows += linger_serve_comparison(serve_metrics, smoke=args.smoke)
+    topk_metrics: dict = {}
+    topk_rows = topk_sweep_comparison(topk_metrics, smoke=args.smoke)
     print("name,us_per_call,derived")
-    for row in rows + serve_rows:
+    for row in rows + serve_rows + topk_rows:
         print(row.csv())
     if not args.smoke:
         return
     _write_artifact(args.out, rows, metrics)
     _write_artifact(args.serve_out, serve_rows, serve_metrics)
+    _write_artifact(args.topk_out, topk_rows, topk_metrics)
     failures = check_regression(
         metrics, BASELINE_PATH,
         ("pallas_vs_loop_ratio", "batched_vs_vmapped_kernel_ratio"))
     failures += check_regression(
         serve_metrics, SERVE_BASELINE_PATH, ("serve_vs_sync_ratio",))
+    k1_ratio = topk_metrics.get("topk_windowed_vs_full_k1_ratio", 0.0)
+    if k1_ratio < TOPK_WINDOWED_K1_FLOOR:
+        failures.append(
+            f"topk_windowed_vs_full_k1_ratio: {k1_ratio:.2f} < "
+            f"{TOPK_WINDOWED_K1_FLOOR} (the windowed composition must beat "
+            "full-spectrum requests/s at k=1)")
     if serve_metrics.get("serve_steady_state_compiles", 0):
         failures.append(
             "serve_steady_state_compiles: warm server recompiled "

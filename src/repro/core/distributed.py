@@ -33,7 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import identity, minors
 from repro.engine.plan import SolverPlan
-from repro.engine.registry import BackendStages
+from repro.engine.registry import StageLibrary
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
@@ -62,19 +62,23 @@ def _shard_map(fn, mesh, in_specs, out_specs):
 # ---------------------------------------------------------------------------
 
 
-def make_sharded_backend(plan: SolverPlan) -> BackendStages:
-    """Stage bundle running the fused-jnp stages under ``shard_map``.
+def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
+    """Stage library running the fused-jnp stages under ``shard_map``.
 
     Every stage shards its leading batch axis over ``plan.batch_axis``; the
     pipeline is batch-parallel, so no collectives are needed until a caller
     gathers.  The engine guarantees divisibility by padding the stack.
+    Replicated side inputs (the windowed ``idx`` gather) carry a
+    no-axis spec.
     """
     from repro.engine.backends import make_jnp_backend
 
     inner = make_jnp_backend(plan)
     mesh, axis = plan.mesh, plan.batch_axis
 
-    def spec(rank: int) -> P:
+    def spec(rank) -> P:
+        if rank == "r1":  # rank-1 replicated side input (e.g. idx)
+            return P(None)
         return P(*((axis,) + (None,) * (rank - 1)))
 
     def shard(fn, in_ranks, out_ranks):
@@ -94,17 +98,30 @@ def make_sharded_backend(plan: SolverPlan) -> BackendStages:
                      (3,), (2, 2))(a)
         return d, e, None
 
-    return BackendStages(
-        name="sharded",
-        tridiagonalize=tridiagonalize,
-        tridiag_eigenvalues=shard(inner.tridiag_eigenvalues, (2, 2), 2),
-        tridiag_minor_spectra=shard(inner.tridiag_minor_spectra, (2, 2), 3),
-        dense_eigenvalues=shard(inner.dense_eigenvalues, (3,), 2),
-        dense_spectra=shard(inner.dense_spectra, (3,), (2, 3)),
-        magnitudes=shard(inner.magnitudes, (2, 3), 3),
-        tridiag_signs=shard(inner.tridiag_signs, (2, 2, 2, 3), 3),
-        dense_signs=shard(inner.dense_signs, (3, 2, 3), 3),
-    )
+    def tridiag_eigenvalues_windowed(d, e, k, largest):
+        # k/largest are static at trace time — close over them so the
+        # shard_mapped callable is array-only.
+        return shard(
+            lambda dd, ee: inner.tridiag_eigenvalues_windowed(
+                dd, ee, k, largest),
+            (2, 2), 2)(d, e)
+
+    return StageLibrary("sharded", {
+        "tridiagonalize": tridiagonalize,
+        "tridiag_eigenvalues": shard(inner.tridiag_eigenvalues, (2, 2), 2),
+        "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_minor_spectra": shard(
+            inner.tridiag_minor_spectra, (2, 2), 3),
+        "dense_eigenvalues": shard(inner.dense_eigenvalues, (3,), 2),
+        "dense_minor_spectra": shard(inner.dense_minor_spectra, (3,), 3),
+        "magnitudes": shard(inner.magnitudes, (2, 3), 3),
+        "magnitudes_windowed": shard(
+            inner.magnitudes_windowed, (2, 3, "r1"), 3),
+        "minor_det_components": shard(
+            inner.minor_det_components, (2, 2, 2), 3),
+        "tridiag_signs": shard(inner.tridiag_signs, (2, 2, 2, 3), 3),
+        "dense_signs": shard(inner.dense_signs, (3, 2, 3), 3),
+    })
 
 
 # ---------------------------------------------------------------------------

@@ -148,6 +148,104 @@ def logabs_numerator_dot(lam: jax.Array, mu: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Windowed numerators: minor determinants by ratio recurrence (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def tridiag_minor_logdets(d: jax.Array, e: jax.Array, x: jax.Array):
+    """``log|det(M_j - x_i I)| = log prod_k |x_i - mu[j, k]|`` for all ``j``.
+
+    The EEI numerator of row ``i`` is the characteristic polynomial of every
+    minor evaluated at ``lam[i]`` — and for a *tridiagonal* matrix that
+    determinant factors over the minor's two decoupled blocks,
+    ``det(M_j - xI) = f_j(x) * g_{j+1}(x)`` with ``f``/``g`` the leading /
+    trailing principal minors of ``T - xI``.  Both satisfy the Sturm ratio
+    recurrence ``q_l = (d_l - x) - e_{l-1}^2 / q_{l-1}`` (one forward pass,
+    one backward pass), so *every* minor's determinant at ``x`` falls out of
+    two O(n) sweeps + prefix sums of ``log|q|`` — O(n) per eigenvalue
+    instead of the O(n^2) of evaluating products over precomputed minor
+    spectra, and no minor spectra are needed at all.  This is the windowed
+    composition's components stage: O(n k) total for a k-window.
+
+    ``d (n,)``, ``e (n-1,)``, ``x (k,)`` -> ``(k, n)`` log-magnitudes.
+    A ``pivmin`` floor (as in Sturm counting) keeps the ratios finite when
+    ``x`` grazes an eigenvalue of a leading/trailing block.
+    """
+    n = d.shape[0]
+    k = x.shape[0]
+    if n == 1:
+        return jnp.zeros((k, 1), d.dtype)
+    eps = jnp.finfo(d.dtype).eps
+    scale = jnp.maximum(jnp.max(jnp.abs(d)), jnp.max(jnp.abs(e)))
+    tiny = jnp.asarray(jnp.finfo(d.dtype).tiny, d.dtype)
+    pivmin = jnp.maximum(eps * eps * scale * scale, tiny)
+
+    def clamp(q):
+        return jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+
+    e2 = e * e
+
+    def fwd(q, de):
+        dl, e2l = de
+        q = clamp(dl - x - e2l / q)
+        return q, q
+
+    q1 = clamp(d[0] - x)  # (k,)
+    _, q_rest = jax.lax.scan(fwd, q1, (d[1:n - 1], e2[: n - 2]))
+    q_all = jnp.concatenate([q1[None], q_rest])  # (n-1, k): q_1 .. q_{n-1}
+    # logF[j] = log|f_j| = sum_{l <= j} log|q_l|, j = 0 .. n-1.
+    log_f = jnp.concatenate([
+        jnp.zeros((1, k), d.dtype),
+        jnp.cumsum(jnp.log(jnp.abs(q_all)), axis=0),
+    ])
+
+    def bwd(p, de):
+        dm, e2m = de
+        p = clamp(dm - x - e2m / p)
+        return p, p
+
+    p_last = clamp(d[n - 1] - x)  # p_{n-1}
+    _, p_rest = jax.lax.scan(
+        bwd, p_last, (d[1:n - 1][::-1], e2[1:n - 1][::-1]))
+    p_all = jnp.concatenate([p_rest[::-1], p_last[None]])  # p_1 .. p_{n-1}
+    # logG[m] = log|g_m| = sum_{l >= m} log|p_l|, m = 1 .. n (logG[n] = 0).
+    log_p = jnp.log(jnp.abs(p_all))
+    log_g = jnp.concatenate([
+        jnp.cumsum(log_p[::-1], axis=0)[::-1],
+        jnp.zeros((1, k), d.dtype),
+    ])
+    # log|det(M_j - xI)| = logF[j] + logG[j+1], j = 0 .. n-1.
+    return jnp.swapaxes(log_f + log_g, 0, 1)
+
+
+def tridiag_windowed_magnitudes(d: jax.Array, e: jax.Array,
+                                lam_sel: jax.Array) -> jax.Array:
+    """Normalized ``|w[i, j]|^2`` rows for selected eigenvalues, ``(k, n)``.
+
+    Each row is the EEI numerator (minor determinants at ``lam_sel[i]``,
+    via :func:`tridiag_minor_logdets`) normalized by its own log-sum-exp.
+    The Cauchy denominator ``prod_{k != i}(lam_i - lam_k)`` is constant in
+    ``j`` and equals ``sum_j`` of the numerators (because
+    ``sum_j |v[i, j]|^2 = 1``), so normalizing by the row sum *is* the
+    identity — computed without the other ``n - k`` eigenvalues, which is
+    what lets the windowed composition skip the full spectrum and the whole
+    minor-spectra stage.
+    """
+    log_num = tridiag_minor_logdets(d, e, lam_sel)  # (k, n)
+    log_num = log_num - jnp.max(log_num, axis=-1, keepdims=True)
+    w = jnp.exp(log_num)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def tridiag_windowed_magnitudes_batched(d, e, lam_sel):
+    """Leading-axis batched :func:`tridiag_windowed_magnitudes`."""
+    from repro.linalg.batching import vmap_leading
+
+    return vmap_leading(tridiag_windowed_magnitudes, d.ndim - 1)(
+        d, e, lam_sel)
+
+
+# ---------------------------------------------------------------------------
 # Variant: baseline (Algorithm 1, faithful)
 # ---------------------------------------------------------------------------
 
@@ -287,7 +385,7 @@ def component_logspace(lam, mu_j, i, eps: float | None = None) -> jax.Array:
 
 
 def magnitudes_from_spectra(lam: jax.Array, mu: jax.Array, logspace: bool = True,
-                            reduce: str = "sum"):
+                            reduce: str = "sum", rows=None):
     """All ``|v[i, j]|^2`` from precomputed spectra; shape ``(..., n, n)``.
 
     ``i`` indexes eigenvalues (rows), ``j`` components (columns).
@@ -295,31 +393,46 @@ def magnitudes_from_spectra(lam: jax.Array, mu: jax.Array, logspace: bool = True
     (see ``logabs_numerator_dot``).  Degenerate gaps are clamped at
     ``eps * spectral scale`` so exactly-repeated eigenvalues stay finite.
 
+    ``rows`` (optional, ``(k,)`` eigenvalue indices) windows the numerator:
+    only the selected rows' difference products are evaluated — the
+    stage-graph's windowed components path, O(n^2 k) instead of O(n^3).
+    The gap floor and the Cauchy denominator are still functions of the
+    *full* spectrum, computed exactly as the unwindowed path computes them
+    and row-sliced, so the ``(k, n)`` result is bitwise-equal to the
+    matching rows of the full table.
+
     Leading batch axes are supported: ``lam (..., n)``, ``mu (..., n, n-1)``
-    map elementwise over the stack (the SolverEngine's batched path).
+    map elementwise over the stack (the SolverEngine's batched path);
+    ``rows`` is shared across the stack.
     """
     if lam.ndim > 1:
         from repro.linalg.batching import vmap_leading
 
         fn = lambda l, m: magnitudes_from_spectra(
-            l, m, logspace=logspace, reduce=reduce)
+            l, m, logspace=logspace, reduce=reduce, rows=rows)
         return vmap_leading(fn, lam.ndim - 1)(lam, mu)
+    lam_rows = lam if rows is None else lam[rows]
     if logspace:
         scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
         floor = jnp.finfo(lam.dtype).eps * scale
         if reduce == "dot":
-            log_num = logabs_numerator_dot(lam, mu, floor=floor)
+            log_num = logabs_numerator_dot(lam_rows, mu, floor=floor)
             log_den = logabs_denominator_dot(lam)
         else:
-            diff_n = jnp.maximum(jnp.abs(lam[:, None, None] - mu[None, :, :]),
-                                 floor)
-            log_num = jnp.sum(jnp.log(diff_n), axis=-1)  # (n, n)
+            diff_n = jnp.maximum(
+                jnp.abs(lam_rows[:, None, None] - mu[None, :, :]), floor)
+            log_num = jnp.sum(jnp.log(diff_n), axis=-1)  # (rows, n)
             diff_d = jnp.abs(lam[:, None] - lam[None, :])
             diff_d = jnp.where(jnp.eye(lam.shape[0], dtype=bool), 1.0,
                                jnp.maximum(diff_d, floor))
             log_den = jnp.sum(jnp.log(diff_d), axis=-1)  # (n,)
+        if rows is not None:
+            log_den = log_den[rows]
         return jnp.exp(log_num - log_den[:, None])
-    return numerator_products(lam, mu) / denominator_products(lam)[:, None]
+    den = denominator_products(lam)
+    if rows is not None:
+        den = den[rows]
+    return numerator_products(lam_rows, mu) / den[:, None]
 
 
 def eigenvector_magnitudes(a: jax.Array, i, logspace: bool = True) -> jax.Array:

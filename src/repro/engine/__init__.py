@@ -22,14 +22,22 @@ from repro.engine.plan import (  # noqa: F401
     BackendName,
     Method,
     SolverPlan,
+    Spectrum,
     plan_for,
     resolved_crossovers,
+    resolved_windowed_k_frac,
 )
 from repro.engine.registry import (  # noqa: F401
-    BackendStages,
+    Composition,
+    StageLibrary,
+    StageSig,
     available_backends,
+    available_compositions,
+    composition_for,
     get_backend,
+    get_composition,
     register_backend,
+    register_composition,
 )
 from repro.engine import backends as _backends  # noqa: F401  (registers defaults)
 from repro.engine.engine import (  # noqa: F401

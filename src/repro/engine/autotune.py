@@ -6,9 +6,9 @@ hardware-dependent — the paper's own Table 1 shows the eigh/EEI crossover
 moving with the BLAS backing.  This module closes the loop from measurement
 to dispatch:
 
-* :func:`calibrate` sweeps kernel block shapes and method crossovers with
-  the same timing harness as ``benchmarks/throughput.py`` and returns a
-  :class:`CalibrationTable`;
+* :func:`calibrate` sweeps kernel block shapes, method crossovers and the
+  windowed-composition ``k / n`` crossover with the same timing harness as
+  ``benchmarks/throughput.py`` and returns a :class:`CalibrationTable`;
 * tables persist as JSON — per-host under ``~/.cache/repro/`` (or
   ``$REPRO_CALIBRATION``), with a repo-checked default
   (``calibration_default.json``) so fresh checkouts plan from measured
@@ -37,6 +37,8 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro.engine.plan import WINDOWED_K_FRAC
+
 log = logging.getLogger("repro.autotune")
 
 CALIBRATION_ENV = "REPRO_CALIBRATION"
@@ -44,10 +46,14 @@ CACHE_PATH = Path.home() / ".cache" / "repro" / "calibration.json"
 REPO_DEFAULT_PATH = Path(__file__).with_name("calibration_default.json")
 
 #: v1 (PR 2): jnp-only crossovers, 3-tuple prod_diff blocks (bb fixed at 1).
-#: v2 adds the batch tile ``prod_diff_block_b`` and pallas-backend crossover
-#: measurements; v1 tables still load (warn + defaults), they just plan the
-#: pallas backend from the jnp crossovers like PR 2 did.
-_SCHEMA_VERSION = 2
+#: v2 (PR 3) adds the batch tile ``prod_diff_block_b`` and pallas-backend
+#: crossover measurements.  v3 (PR 5) adds ``windowed_k_frac`` — the
+#: measured ``k / n`` fraction at/below which the planner routes top-k
+#: queries through the windowed stage composition.  Older tables still load
+#: (warn once per process + defaults for the missing fields): a v2 table
+#: plans windows from the static ``plan.WINDOWED_K_FRAC`` fallback exactly
+#: like an uncalibrated host.
+_SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +67,7 @@ class CalibrationTable:
     prod_diff_block_b: int = 1  # bb — matrices per batch-grid step
     pallas_eigh_crossover_n: Optional[int] = None  # None -> use jnp value
     pallas_dense_crossover_n: Optional[int] = None  # None -> use jnp value
+    windowed_k_frac: float = WINDOWED_K_FRAC  # k/n below which windowed wins
     host: str = ""  # host class the numbers were measured on
     backend: str = ""  # jax backend (cpu | tpu | gpu) at measurement
     measured_at: str = ""  # ISO timestamp, empty for hand-written tables
@@ -98,10 +105,12 @@ class CalibrationTable:
                 f"calibration table schema_version {version} is newer than "
                 f"this code understands ({_SCHEMA_VERSION})")
         if version < _SCHEMA_VERSION:
-            log.warning(
+            _warn_once(
+                (source, version),
                 "calibration table %s has schema_version %d (current %d); "
-                "loading with defaults for the missing fields (bb=1, pallas "
-                "crossovers from the jnp sweep) — re-run "
+                "loading with defaults for the missing fields (v1: bb=1 + "
+                "pallas crossovers from the jnp sweep; v2: windowed_k_frac "
+                "from the static fallback) — re-run "
                 "`python -m repro.engine.autotune` to refresh it",
                 source, version, _SCHEMA_VERSION)
 
@@ -116,6 +125,8 @@ class CalibrationTable:
             prod_diff_block_b=int(d.get("prod_diff_block_b", 1)),
             pallas_eigh_crossover_n=_opt_int("pallas_eigh_crossover_n"),
             pallas_dense_crossover_n=_opt_int("pallas_dense_crossover_n"),
+            windowed_k_frac=float(
+                d.get("windowed_k_frac", WINDOWED_K_FRAC)),
             host=str(d.get("host", "")),
             backend=str(d.get("backend", "")),
             measured_at=str(d.get("measured_at", "")),
@@ -127,6 +138,21 @@ class CalibrationTable:
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(self.to_dict(), indent=2) + "\n")
         return path
+
+
+#: (source, version) pairs already warned about — old-schema tables get
+#: re-loaded freely (serve --calibration, tests, every fresh ``load_table``
+#: call), and repeating the same warning every time buries real signal.
+#: Deduped per process; keyed on the source too, so two *different* stale
+#: files each still get their one warning.
+_WARNED: set = set()
+
+
+def _warn_once(key, msg: str, *args) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    log.warning(msg, *args)
 
 
 def host_key() -> str:
@@ -302,6 +328,38 @@ def _measure_crossovers(
         dense_x if dense_x is not None else sizes[-1])
 
 
+def _measure_windowed_crossover(
+    n: int, batch: int, ks: Sequence[int], backend: str = "jnp"
+) -> float:
+    """Largest measured ``k / n`` where the windowed composition still
+    beats the full-spectrum composition on a batched topk.
+
+    Sweeps power-of-two ``k`` (the serving buckets' k axis) on the
+    tridiagonal method — the composition whose windowed variant replaces
+    the whole minor-spectra stage.  Returns 0.0 if windowed never wins
+    (the planner then never routes through it).
+    """
+    from repro.engine.engine import SolverEngine
+    from repro.engine.plan import SolverPlan
+
+    a = _sym_stack(batch, n)
+    frac = 0.0
+    for k in ks:
+        if k > n:
+            break
+        full = SolverEngine(SolverPlan(
+            method="eei_tridiag", backend=backend, spectrum="full"))
+        win = SolverEngine(SolverPlan(
+            method="eei_tridiag", backend=backend, spectrum="windowed"))
+        t_full = _time(lambda eng=full: eng.topk(a, k))
+        t_win = _time(lambda eng=win: eng.topk(a, k))
+        if t_win < t_full:
+            frac = k / n
+        else:
+            break  # windowed work grows with k; first loss ends the sweep
+    return frac
+
+
 def calibrate(
     *,
     smoke: bool = False,
@@ -318,8 +376,10 @@ def calibrate(
         pd_candidates = [(1, 32, 32, 32), (4, 32, 32, 32), (1, 64, 64, 64)]
         st_candidates = [(8, 64), (8, 128)]
         bench_b, bench_n = 8, 32
+        win_n, win_ks = 32, (1, 4, 16, 32)
     else:
         sizes = [8, 16, 24, 32, 48, 64, 96, 128]
+        win_n, win_ks = 64, (1, 2, 4, 8, 16, 32, 64)
         pd_candidates = [
             # bb = 1 tiles (the PR-2 grid) ...
             (1, 32, 32, 32), (1, 64, 64, 64), (1, 128, 128, 128),
@@ -338,6 +398,7 @@ def calibrate(
         sizes, k=k, batch=batch, backend="pallas")
     pd_blocks = _sweep_prod_diff_blocks(bench_b, bench_n, pd_candidates)
     st_blocks = _sweep_sturm_blocks(bench_b * bench_n, bench_n, st_candidates)
+    windowed_frac = _measure_windowed_crossover(win_n, batch, win_ks)
     return CalibrationTable(
         eigh_crossover_n=int(eigh_x),
         dense_crossover_n=int(dense_x),
@@ -346,6 +407,7 @@ def calibrate(
         prod_diff_block_b=int(pd_blocks[0]),
         pallas_eigh_crossover_n=int(pallas_eigh_x),
         pallas_dense_crossover_n=int(pallas_dense_x),
+        windowed_k_frac=float(windowed_frac),
         host=host_key(),
         backend=jax.default_backend(),
         measured_at=time.strftime("%Y-%m-%dT%H:%M:%S"),

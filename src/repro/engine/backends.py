@@ -1,4 +1,4 @@
-"""Default backends: reference, fused-jnp, Pallas.
+"""Default stage libraries (reference, fused-jnp, Pallas) + compositions.
 
 Each factory bundles batched stage implementations (see ``registry``):
 
@@ -9,15 +9,30 @@ Each factory bundles batched stage implementations (see ``registry``):
                 reductions expressed as fused ones-contractions
                 (``identity.*_dot``: producer fuses into the MXU dot, no
                 (b, n, n, n) temps).
-    pallas      the kernelized path — Sturm bisection and the prod-diff
-                log-sum run as natively batched Pallas TPU kernels
-                (interpret mode off-TPU): one pallas_call per stack with
-                batch on the leading grid axis, stacked minor bands flattened
-                onto the Sturm row axis, and tile shapes taken from the
-                autotune calibration table when present.
+    pallas      the kernelized path — Sturm bisection (full-spectrum and
+                index-targeted windows) and the prod-diff log-sum run as
+                natively batched Pallas TPU kernels (interpret mode
+                off-TPU): one pallas_call per stack with batch on the
+                leading grid axis, stacked minor bands flattened onto the
+                Sturm row axis, and tile shapes taken from the autotune
+                calibration table when present.
 
 The ``sharded`` backend lives in ``repro.core.distributed`` (it owns the
 mesh/axis logic) and is registered here lazily to avoid an import cycle.
+
+This module also registers the **default compositions** — the stage chains
+the engine's graph executors run:
+
+    eigh                  direct LAPACK (the oracle / small-n crossover)
+    eei_dense             dense minors -> full EEI table -> LU signs
+    eei_tridiag           Householder -> Sturm -> full EEI -> recurrence signs
+    eei_dense_windowed    as eei_dense, but the components stage evaluates
+                          only the k selected rows (prod_diff I-axis = k);
+                          bitwise-equal to the sliced full table
+    eei_tridiag_windowed  Householder -> *windowed* Sturm (k index-targeted
+                          brackets) -> minor-determinant components (ratio
+                          recurrence, O(n k): no minor-spectra stage at
+                          all) -> recurrence signs
 """
 
 from __future__ import annotations
@@ -32,7 +47,13 @@ from repro.core.directions import (
     tridiagonal_signs,
 )
 from repro.engine.plan import SolverPlan
-from repro.engine.registry import BackendStages, register_backend
+from repro.engine.registry import (
+    Composition,
+    StageLibrary,
+    StageSig,
+    register_backend,
+    register_composition,
+)
 from repro.linalg import householder, sturm
 
 # ---------------------------------------------------------------------------
@@ -48,10 +69,8 @@ def _dense_eigenvalues(a: jax.Array):
     return jax.vmap(jnp.linalg.eigvalsh)(a)
 
 
-def _dense_spectra(a: jax.Array):
-    lam = _dense_eigenvalues(a)
-    mu = jax.vmap(identity.minor_spectra)(a)
-    return lam, mu
+def _dense_minor_spectra(a: jax.Array):
+    return jax.vmap(identity.minor_spectra)(a)
 
 
 def _tridiag_signs(d, e, lam_sel, mag_sel):
@@ -71,16 +90,25 @@ def _dense_signs(a, lam_sel, mag_sel):
     return inverse_iteration_signs_batched(a, lam_sel, mag_sel)
 
 
+def _minor_det_components(d, e, lam_sel):
+    """Windowed |w|^2 rows via the minor-determinant ratio recurrence."""
+    return identity.tridiag_windowed_magnitudes_batched(d, e, lam_sel)
+
+
 # ---------------------------------------------------------------------------
 # reference / jnp
 # ---------------------------------------------------------------------------
 
 
-def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> BackendStages:
+def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
     iters = plan.bisect_iters
 
     def tridiag_eigenvalues(d, e):
         return sturm.bisect_eigenvalues_batched(d, e, n_iter=iters)
+
+    def tridiag_eigenvalues_windowed(d, e, k, largest):
+        return sturm.bisect_eigenvalues_windowed_batched(
+            d, e, k, largest=largest, n_iter=iters)
 
     def tridiag_minor_spectra(d, e):
         dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
@@ -90,25 +118,31 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> BackendStages:
         return identity.magnitudes_from_spectra(
             lam, mu, logspace=True, reduce=reduce)
 
-    return BackendStages(
-        name=name,
-        tridiagonalize=_tridiagonalize,
-        tridiag_eigenvalues=tridiag_eigenvalues,
-        tridiag_minor_spectra=tridiag_minor_spectra,
-        dense_eigenvalues=_dense_eigenvalues,
-        dense_spectra=_dense_spectra,
-        magnitudes=magnitudes,
-        tridiag_signs=_tridiag_signs,
-        dense_signs=(
+    def magnitudes_windowed(lam, mu, idx):
+        return identity.magnitudes_from_spectra(
+            lam, mu, logspace=True, reduce=reduce, rows=idx)
+
+    return StageLibrary(name, {
+        "tridiagonalize": _tridiagonalize,
+        "tridiag_eigenvalues": tridiag_eigenvalues,
+        "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_minor_spectra": tridiag_minor_spectra,
+        "dense_eigenvalues": _dense_eigenvalues,
+        "dense_minor_spectra": _dense_minor_spectra,
+        "magnitudes": magnitudes,
+        "magnitudes_windowed": magnitudes_windowed,
+        "minor_det_components": _minor_det_components,
+        "tridiag_signs": _tridiag_signs,
+        "dense_signs": (
             _dense_signs_reference if name == "reference" else _dense_signs),
-    )
+    })
 
 
-def make_reference_backend(plan: SolverPlan) -> BackendStages:
+def make_reference_backend(plan: SolverPlan) -> StageLibrary:
     return _make_jnp_like("reference", "sum", plan)
 
 
-def make_jnp_backend(plan: SolverPlan) -> BackendStages:
+def make_jnp_backend(plan: SolverPlan) -> StageLibrary:
     return _make_jnp_like("jnp", "dot", plan)
 
 
@@ -117,7 +151,7 @@ def make_jnp_backend(plan: SolverPlan) -> BackendStages:
 # ---------------------------------------------------------------------------
 
 
-def make_pallas_backend(plan: SolverPlan) -> BackendStages:
+def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
     # Kernel modules are imported lazily (mirrors the seed's lazy-kernel
     # convention: importing the engine must not require a Pallas-capable
     # install until a pallas plan actually runs).
@@ -138,6 +172,11 @@ def make_pallas_backend(plan: SolverPlan) -> BackendStages:
         return sturm_ops.sturm_eigenvalues(
             d, e, n_iter=iters, block_b=st_bb, block_m=st_bm)
 
+    def tridiag_eigenvalues_windowed(d, e, k, largest):
+        return sturm_ops.sturm_eigenvalues(
+            d, e, n_iter=iters, block_b=st_bb, block_m=st_bm,
+            window=(int(k), bool(largest)))
+
     def tridiag_minor_spectra(d, e):
         dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
         return sturm_ops.sturm_minor_spectra(
@@ -148,20 +187,29 @@ def make_pallas_backend(plan: SolverPlan) -> BackendStages:
             lam, mu, block_b=pd_bb,
             block_i=pd_bi, block_j=pd_bj, block_k=pd_bk)
 
-    return BackendStages(
-        name="pallas",
-        tridiagonalize=_tridiagonalize,
-        tridiag_eigenvalues=tridiag_eigenvalues,
-        tridiag_minor_spectra=tridiag_minor_spectra,
-        dense_eigenvalues=_dense_eigenvalues,
-        dense_spectra=_dense_spectra,
-        magnitudes=magnitudes,
-        tridiag_signs=_tridiag_signs,
-        dense_signs=_dense_signs,
-    )
+    def magnitudes_windowed(lam, mu, idx):
+        return pd_ops.eei_magnitudes_windowed(
+            lam, mu, idx, block_b=pd_bb,
+            block_i=pd_bi, block_j=pd_bj, block_k=pd_bk)
+
+    # The minor-determinant recurrence is sequential over the band — a VPU
+    # scan, not a tile job — so the pallas library shares the jnp stage.
+    return StageLibrary("pallas", {
+        "tridiagonalize": _tridiagonalize,
+        "tridiag_eigenvalues": tridiag_eigenvalues,
+        "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_minor_spectra": tridiag_minor_spectra,
+        "dense_eigenvalues": _dense_eigenvalues,
+        "dense_minor_spectra": _dense_minor_spectra,
+        "magnitudes": magnitudes,
+        "magnitudes_windowed": magnitudes_windowed,
+        "minor_det_components": _minor_det_components,
+        "tridiag_signs": _tridiag_signs,
+        "dense_signs": _dense_signs,
+    })
 
 
-def _sharded_factory(plan: SolverPlan) -> BackendStages:
+def _sharded_factory(plan: SolverPlan) -> StageLibrary:
     from repro.core.distributed import make_sharded_backend
 
     return make_sharded_backend(plan)
@@ -174,4 +222,72 @@ def register_default_backends() -> None:
     register_backend("sharded", _sharded_factory)
 
 
+# ---------------------------------------------------------------------------
+# Default compositions (stage chains per program kind)
+# ---------------------------------------------------------------------------
+
+# Shared stage signatures.
+_REDUCE = StageSig("reduce", "householder", ("a",), ("d", "e", "q"))
+_REDUCE_NOQ = StageSig("reduce", "householder", ("a",), ("d", "e"))
+_SPEC_DENSE = StageSig("spectrum", "dense_eigenvalues", ("a",), ("lam",))
+_SPEC_TRI = StageSig("spectrum", "tridiag_full", ("d", "e"), ("lam",))
+_SPEC_TRI_WIN = StageSig(
+    "spectrum", "tridiag_windowed", ("d", "e"), ("lam_sel",))
+_MINORS_DENSE = StageSig("minor_spectra", "dense_minors", ("a",), ("mu",))
+_MINORS_TRI = StageSig("minor_spectra", "tridiag_minors", ("d", "e"), ("mu",))
+_COMP_FULL = StageSig("components", "eei_full", ("lam", "mu"), ("mags",))
+_COMP_SELECT = StageSig(
+    "components", "eei_select", ("lam", "mu", "idx"), ("lam_sel", "mag_sel"))
+_COMP_WIN = StageSig(
+    "components", "eei_windowed", ("lam", "mu", "idx"),
+    ("lam_sel", "mag_sel"))
+_COMP_DET = StageSig(
+    "components", "minor_det", ("d", "e", "lam_sel"), ("mag_sel",))
+_REC_TRI = StageSig(
+    "recover", "tridiag_signs", ("d", "e", "q", "lam_sel", "mag_sel"),
+    ("vecs",))
+_REC_TRI_SOLVE = StageSig(
+    "recover", "tridiag_solve", ("d", "e", "q", "lam", "mags"), ("mags",))
+_REC_DENSE = StageSig(
+    "recover", "dense_signs", ("a", "lam_sel", "mag_sel"), ("vecs",))
+
+
+def register_default_compositions() -> None:
+    register_composition(Composition(
+        name="eigh", method="eigh", windowed=False,
+        topk=(
+            StageSig("spectrum", "eigh", ("a",), ("lam", "v")),
+            StageSig("recover", "eigh_topk", ("lam", "v", "idx"),
+                     ("lam_sel", "vecs")),
+        ),
+        solve=(
+            StageSig("spectrum", "eigh", ("a",), ("lam", "v")),
+            StageSig("recover", "eigh_solve", ("lam", "v"), ("mags",)),
+        ),
+        eigenvalues=(_SPEC_DENSE,),
+    ))
+    register_composition(Composition(
+        name="eei_dense", method="eei_dense", windowed=False,
+        topk=(_SPEC_DENSE, _MINORS_DENSE, _COMP_SELECT, _REC_DENSE),
+        solve=(_SPEC_DENSE, _MINORS_DENSE, _COMP_FULL),
+        eigenvalues=(_SPEC_DENSE,),
+    ))
+    register_composition(Composition(
+        name="eei_dense_windowed", method="eei_dense", windowed=True,
+        topk=(_SPEC_DENSE, _MINORS_DENSE, _COMP_WIN, _REC_DENSE),
+    ))
+    register_composition(Composition(
+        name="eei_tridiag", method="eei_tridiag", windowed=False,
+        topk=(_REDUCE, _SPEC_TRI, _MINORS_TRI, _COMP_SELECT, _REC_TRI),
+        solve=(_REDUCE, _SPEC_TRI, _MINORS_TRI, _COMP_FULL, _REC_TRI_SOLVE),
+        eigenvalues=(_REDUCE_NOQ, _SPEC_TRI),
+    ))
+    register_composition(Composition(
+        name="eei_tridiag_windowed", method="eei_tridiag", windowed=True,
+        topk=(_REDUCE, _SPEC_TRI_WIN, _COMP_DET, _REC_TRI),
+        eigenvalues=(_REDUCE_NOQ, _SPEC_TRI_WIN),
+    ))
+
+
 register_default_backends()
+register_default_compositions()

@@ -1,28 +1,42 @@
-"""SolverEngine — plan-driven, batched execution of the EEI pipeline.
+"""SolverEngine — plan-driven, batched graph execution of the EEI pipeline.
 
 ``SolverEngine.solve(a)`` / ``.topk(a, k)`` accept a single symmetric matrix
-``(n, n)`` or a stack ``(b, n, n)`` and run the plan's method on the plan's
-backend end-to-end batched — this is the serving path for streams of top-k
-queries over stacks of matrices (the regime the paper's use cases issue).
+``(n, n)`` or a stack ``(b, n, n)`` and run the plan's *composition* on the
+plan's backend end-to-end batched — this is the serving path for streams of
+top-k queries over stacks of matrices (the regime the paper's use cases
+issue).
 
-Pipelines (all arrays carry the leading stack axis):
+The engine is a generic **stage-graph executor**: a program builder resolves
+``plan -> composition -> stage chain`` (``registry``), binds each stage
+signature to its builder (the ``_STAGE_BUILDERS`` table below, which pulls
+implementations from the backend's stage library) and jits a function that
+threads a state dict through the chain.  There is no per-method branch in
+here — adding a method or a windowed variant is a registry change.
 
-    eigh         vmapped LAPACK — the oracle / small-n fallback.
-    eei_dense    dense minor spectra -> EEI products.
-    eei_tridiag  Householder tridiagonalize -> Sturm bisection for λ(A) and
-                 all decoupled tridiagonal minors -> EEI on the tridiagonal
-                 form -> recurrence signs -> back-transform with Q, so the
-                 returned tables live in the *dense* basis like the others.
+Compositions currently registered (see ``backends.py``):
 
-Jitted programs are cached per ``(plan, n, k)``; the sharded backend's stack
-is padded up to a multiple of the mesh batch axis and sliced back.
+    eigh                  vmapped LAPACK — the oracle / small-n fallback.
+    eei_dense[...]        dense minor spectra -> EEI products (optionally
+                          windowed to the k selected rows, bitwise-equal to
+                          the sliced full table).
+    eei_tridiag           Householder -> Sturm -> full EEI on the
+                          tridiagonal form -> recurrence signs ->
+                          back-transform with Q.
+    eei_tridiag_windowed  Householder -> index-targeted Sturm window (k
+                          bisection lanes) -> minor-determinant components
+                          (ratio recurrence, no minor-spectra stage) ->
+                          recurrence signs.  O(n^2 k + n^3-tridiagonalize)
+                          instead of the full path's O(n^3 * iters).
+
+Jitted programs are cached per ``(plan, kind, k)``; the sharded backend's
+stack is padded up to a multiple of the mesh batch axis and sliced back.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +62,14 @@ class TopkResult(NamedTuple):
     vectors: jax.Array
 
 
+class ProgramSpec(NamedTuple):
+    """Static description of one jitted program: kind + window."""
+
+    kind: str  # solve | topk | eigenvalues
+    k: int = 0  # 0 -> no window (full spectrum)
+    largest: bool = True
+
+
 def _renormalize(vecs: jax.Array) -> jax.Array:
     nrm = jnp.linalg.norm(vecs, axis=-1, keepdims=True)
     return vecs / jnp.maximum(nrm, 1e-30)
@@ -62,27 +84,228 @@ def _back_transform(w: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.einsum("...in,...jn->...ij", w, q)
 
 
-@functools.lru_cache(maxsize=None)
-def _solve_program(plan: SolverPlan):
-    stages = registry.get_backend(plan)
+# ---------------------------------------------------------------------------
+# Stage builders: (role, name) -> builder(lib, plan, spec) -> fn(state)->dict
+# ---------------------------------------------------------------------------
+
+
+def _b_householder(lib, plan, spec):
+    with_q = spec.kind != "eigenvalues"
+
+    def fn(st):
+        d, e, q = lib.tridiagonalize(st["a"], with_q)
+        return {"d": d, "e": e, "q": q}
+
+    return fn
+
+
+def _b_eigh(lib, plan, spec):
+    def fn(st):
+        lam, v = _batched_eigh(st["a"])
+        return {"lam": lam, "v": v}
+
+    return fn
+
+
+def _b_eigh_topk(lib, plan, spec):
+    def fn(st):
+        lam, v, idx = st["lam"], st["v"], st["idx"]
+        return {"lam_sel": lam[..., idx],
+                "vecs": jnp.swapaxes(v[..., :, idx], -1, -2)}
+
+    return fn
+
+
+def _b_eigh_solve(lib, plan, spec):
+    def fn(st):
+        return {"mags": jnp.swapaxes(st["v"] * st["v"], -1, -2)}
+
+    return fn
+
+
+def _b_dense_eigenvalues(lib, plan, spec):
+    return lambda st: {"lam": lib.dense_eigenvalues(st["a"])}
+
+
+def _b_tridiag_full(lib, plan, spec):
+    return lambda st: {"lam": lib.tridiag_eigenvalues(st["d"], st["e"])}
+
+
+def _b_tridiag_windowed(lib, plan, spec):
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        return {"lam_sel": lib.tridiag_eigenvalues_windowed(
+            st["d"], st["e"], k, largest)}
+
+    return fn
+
+
+def _b_dense_minors(lib, plan, spec):
+    return lambda st: {"mu": lib.dense_minor_spectra(st["a"])}
+
+
+def _b_tridiag_minors(lib, plan, spec):
+    return lambda st: {"mu": lib.tridiag_minor_spectra(st["d"], st["e"])}
+
+
+def _b_eei_full(lib, plan, spec):
+    return lambda st: {"mags": lib.magnitudes(st["lam"], st["mu"])}
+
+
+def _b_eei_select(lib, plan, spec):
+    def fn(st):
+        mags = lib.magnitudes(st["lam"], st["mu"])
+        idx = st["idx"]
+        return {"lam_sel": st["lam"][..., idx],
+                "mag_sel": mags[..., idx, :]}
+
+    return fn
+
+
+def _b_eei_windowed(lib, plan, spec):
+    def fn(st):
+        idx = st["idx"]
+        return {"lam_sel": st["lam"][..., idx],
+                "mag_sel": lib.magnitudes_windowed(st["lam"], st["mu"], idx)}
+
+    return fn
+
+
+def _b_minor_det(lib, plan, spec):
+    def fn(st):
+        return {"mag_sel": lib.minor_det_components(
+            st["d"], st["e"], st["lam_sel"])}
+
+    return fn
+
+
+def _b_tridiag_signs(lib, plan, spec):
+    def fn(st):
+        w = lib.tridiag_signs(st["d"], st["e"], st["lam_sel"], st["mag_sel"])
+        return {"vecs": _renormalize(_back_transform(w, st["q"]))}
+
+    return fn
+
+
+def _b_tridiag_solve(lib, plan, spec):
+    def fn(st):
+        # Sign + back-transform every row so the full table reports in the
+        # dense basis like the other compositions.
+        w = lib.tridiag_signs(st["d"], st["e"], st["lam"], st["mags"])
+        v = _back_transform(_renormalize(w), st["q"])
+        mags = v * v
+        return {"mags": mags / jnp.sum(mags, axis=-1, keepdims=True)}
+
+    return fn
+
+
+def _b_dense_signs(lib, plan, spec):
+    def fn(st):
+        return {"vecs": _renormalize(lib.dense_signs(
+            st["a"], st["lam_sel"], st["mag_sel"]))}
+
+    return fn
+
+
+_STAGE_BUILDERS = {
+    ("reduce", "householder"): _b_householder,
+    ("spectrum", "eigh"): _b_eigh,
+    ("spectrum", "dense_eigenvalues"): _b_dense_eigenvalues,
+    ("spectrum", "tridiag_full"): _b_tridiag_full,
+    ("spectrum", "tridiag_windowed"): _b_tridiag_windowed,
+    ("minor_spectra", "dense_minors"): _b_dense_minors,
+    ("minor_spectra", "tridiag_minors"): _b_tridiag_minors,
+    ("components", "eei_full"): _b_eei_full,
+    ("components", "eei_select"): _b_eei_select,
+    ("components", "eei_windowed"): _b_eei_windowed,
+    ("components", "minor_det"): _b_minor_det,
+    ("recover", "eigh_topk"): _b_eigh_topk,
+    ("recover", "eigh_solve"): _b_eigh_solve,
+    ("recover", "tridiag_signs"): _b_tridiag_signs,
+    ("recover", "tridiag_solve"): _b_tridiag_solve,
+    ("recover", "dense_signs"): _b_dense_signs,
+}
+
+
+def register_stage_builder(role: str, name: str, builder) -> None:
+    """Register (or replace) the builder behind a composition stage name."""
+    _STAGE_BUILDERS[(role, name)] = builder
+
+
+# ---------------------------------------------------------------------------
+# Generic graph executor
+# ---------------------------------------------------------------------------
+
+
+def _resolve_chain(plan: SolverPlan, spec: ProgramSpec):
+    """Pick the composition + chain a program executes.
+
+    * ``topk`` uses the windowed composition when the plan asks for it
+      (``plan.spectrum == "windowed"``);
+    * ``solve`` always uses the method's full composition — a full table
+      needs every spectrum row by definition;
+    * ``eigenvalues`` with a window (``spec.k > 0``) prefers the windowed
+      composition's eigenvalue chain (index-targeted bisection); methods
+      without one run the full chain and the executor slices the window
+      (bitwise-identical, since bisection lanes are index-independent).
+    """
+    if spec.kind == "topk":
+        windowed = plan.spectrum == "windowed"
+    elif spec.kind == "eigenvalues":
+        windowed = spec.k > 0
+    else:
+        windowed = False
+    comp = registry.composition_for(plan.method, windowed)
+    chain = comp.chain(spec.kind)
+    if chain is None:
+        comp = registry.composition_for(plan.method, False)
+        chain = comp.chain(spec.kind)
+    if chain is None:
+        raise ValueError(
+            f"composition {comp.name!r} declares no {spec.kind!r} chain")
+    return comp, chain
+
+
+def _window_idx(n: int, k: int, largest: bool) -> jax.Array:
+    return jnp.arange(n - k, n) if largest else jnp.arange(k)
+
+
+def _build_program(plan: SolverPlan, spec: ProgramSpec):
+    """Jitted graph executor for one ``(plan, spec)``."""
+    lib = registry.get_backend(plan)
+    _, chain = _resolve_chain(plan, spec)
+    fns = [_STAGE_BUILDERS[(sig.role, sig.name)](lib, plan, spec)
+           for sig in chain]
 
     def fn(a):
-        if plan.method == "eigh":
-            lam, v = _batched_eigh(a)
-            return SolveResult(lam, jnp.swapaxes(v * v, -1, -2))
-        if plan.method == "eei_dense":
-            lam, mu = stages.dense_spectra(a)
-            return SolveResult(lam, stages.magnitudes(lam, mu))
-        d, e, q = stages.tridiagonalize(a, True)
-        lam = stages.tridiag_eigenvalues(d, e)
-        mu = stages.tridiag_minor_spectra(d, e)
-        w_mags = stages.magnitudes(lam, mu)  # tridiagonal basis
-        w = stages.tridiag_signs(d, e, lam, w_mags)  # all n rows
-        v = _back_transform(_renormalize(w), q)
-        mags = v * v
-        return SolveResult(lam, mags / jnp.sum(mags, axis=-1, keepdims=True))
+        n = a.shape[-1]
+        state = {"a": a}
+        if spec.kind in ("topk", "eigenvalues"):
+            # Always present for these kinds — the registry validates
+            # chains against exactly this initial state, so a validated
+            # chain can never KeyError here.  k=0 (full eigenvalues) gets
+            # the identity window.
+            state["idx"] = _window_idx(n, spec.k or n, spec.largest)
+        for f in fns:
+            state.update(f(state))
+        if spec.kind == "topk":
+            return TopkResult(state["lam_sel"], state["vecs"])
+        if spec.kind == "solve":
+            return SolveResult(state["lam"], state["mags"])
+        if "lam_sel" in state:  # windowed eigenvalue chain
+            return state["lam_sel"]
+        lam = state["lam"]
+        # Windowed query on a full chain (eigh / dense methods): slice —
+        # bitwise-identical, every lane is index-independent.
+        return lam[..., state["idx"]] if spec.k else lam
 
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _solve_program(plan: SolverPlan):
+    return _build_program(plan, ProgramSpec("solve"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -94,43 +317,13 @@ def topk_program(plan: SolverPlan, k: int, largest: bool):
     synchronous oracle a dispatched stack must match bitwise.  The
     ``lru_cache`` is thread-safe; the returned jitted callable is too.
     """
-    stages = registry.get_backend(plan)
-
-    def fn(a):
-        n = a.shape[-1]
-        idx = jnp.arange(n - k, n) if largest else jnp.arange(k)
-        if plan.method == "eigh":
-            lam, v = _batched_eigh(a)
-            return TopkResult(
-                lam[..., idx], jnp.swapaxes(v[..., :, idx], -1, -2))
-        if plan.method == "eei_dense":
-            lam, mu = stages.dense_spectra(a)
-            mags = stages.magnitudes(lam, mu)
-            lam_s, mag_s = lam[..., idx], mags[..., idx, :]
-            return TopkResult(lam_s, _renormalize(
-                stages.dense_signs(a, lam_s, mag_s)))
-        d, e, q = stages.tridiagonalize(a, True)
-        lam = stages.tridiag_eigenvalues(d, e)
-        mu = stages.tridiag_minor_spectra(d, e)
-        mags = stages.magnitudes(lam, mu)
-        lam_s, mag_s = lam[..., idx], mags[..., idx, :]
-        w = stages.tridiag_signs(d, e, lam_s, mag_s)
-        return TopkResult(lam_s, _renormalize(_back_transform(w, q)))
-
-    return jax.jit(fn)
+    return _build_program(plan, ProgramSpec("topk", int(k), bool(largest)))
 
 
 @functools.lru_cache(maxsize=None)
-def _eigenvalues_program(plan: SolverPlan):
-    stages = registry.get_backend(plan)
-
-    def fn(a):
-        if plan.method in ("eigh", "eei_dense"):
-            return stages.dense_eigenvalues(a)
-        d, e, _ = stages.tridiagonalize(a, False)
-        return stages.tridiag_eigenvalues(d, e)
-
-    return jax.jit(fn)
+def _eigenvalues_program(plan: SolverPlan, k: int = 0, largest: bool = True):
+    return _build_program(
+        plan, ProgramSpec("eigenvalues", int(k), bool(largest)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,7 +344,9 @@ class SolverEngine:
 
         ``a`` is ``(n, n)`` or a stack ``(b, n, n)``; results carry the same
         leading axis.  On every backend the magnitudes live in the dense
-        basis (the tridiagonal path back-transforms with ``Q``).
+        basis (the tridiagonal path back-transforms with ``Q``).  Always
+        runs the method's *full* composition — a full table needs every
+        spectrum row, so ``plan.spectrum`` does not apply here.
         """
         return self._run(_solve_program(self.plan), a)
 
@@ -161,9 +356,19 @@ class SolverEngine:
             raise ValueError(f"k={k} out of range for n={a.shape[-1]}")
         return self._run(topk_program(self.plan, int(k), bool(largest)), a)
 
-    def eigenvalues(self, a: jax.Array) -> jax.Array:
-        """Eigenvalues only, ``(..., n)`` ascending."""
-        return self._run(_eigenvalues_program(self.plan), a)
+    def eigenvalues(self, a: jax.Array, k: Optional[int] = None,
+                    largest: bool = True) -> jax.Array:
+        """Eigenvalues only: ``(..., n)`` ascending, or — with ``k`` — the
+        ``k`` extremal eigenvalues ``(..., k)`` ascending via the windowed
+        spectrum stage (index-targeted bisection on the tridiagonal path:
+        ``k`` lanes instead of ``n``, bitwise-equal to the full slice)."""
+        if k is not None and (k < 1 or k > a.shape[-1]):
+            raise ValueError(f"k={k} out of range for n={a.shape[-1]}")
+        # `largest` is dead without a window — normalize it out of the
+        # program cache key so k=None never compiles twice.
+        program = _eigenvalues_program(
+            self.plan, int(k or 0), bool(largest) if k else True)
+        return self._run(program, a)
 
     # -- execution helpers ----------------------------------------------------
 

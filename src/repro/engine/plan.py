@@ -7,6 +7,9 @@ functions in ``core.distributed`` and per-kernel ``interpret`` plumbing).  A
 ``SolverPlan`` captures all of it in one hashable value:
 
     method        eigh | eei_dense | eei_tridiag   (what maths runs)
+    spectrum      full | windowed   (which composition top-k programs run:
+                  the full-spectrum chain, or the k-windowed chain that
+                  computes only the selected extremal rows)
     backend       reference | jnp | pallas | sharded   (who runs each stage)
     mesh / axes   device topology for the sharded backend
     precision     None (keep input dtype) | "float32" | "float64"
@@ -14,8 +17,9 @@ functions in ``core.distributed`` and per-kernel ``interpret`` plumbing).  A
     max_batch     microbatch bound for very long query stacks (0 -> no bound)
 
 Plans are produced by :func:`plan_for` from problem shape + device topology,
-or constructed explicitly.  The registry maps ``plan.backend`` to stage
-implementations; ``SolverEngine`` executes the plan.
+or constructed explicitly.  The registry resolves ``(plan.method,
+plan.spectrum)`` to a stage composition and ``plan.backend`` to the stage
+library that implements it; ``SolverEngine`` executes the plan.
 """
 
 from __future__ import annotations
@@ -27,6 +31,7 @@ import jax
 
 Method = Literal["eigh", "eei_dense", "eei_tridiag"]
 BackendName = Literal["reference", "jnp", "pallas", "sharded"]
+Spectrum = Literal["full", "windowed"]
 
 #: ``n`` below which a full LAPACK ``eigh`` beats any EEI pipeline (the
 #: paper's crossover regime; Table 1 shows speedup < 1 for small n).
@@ -38,6 +43,30 @@ EIGH_CROSSOVER_N = 24
 #: cheaper than tridiagonalize + Sturm on this class of hardware.
 #: Uncalibrated fallback — see :func:`resolved_crossovers`.
 DENSE_CROSSOVER_N = 64
+
+#: ``k / n`` at/below which a top-k query plans the *windowed* composition
+#: (windowed Sturm + windowed components) instead of the full-spectrum
+#: chain.  Uncalibrated fallback — schema-v3 calibration tables carry the
+#: measured crossover (:func:`resolved_windowed_k_frac`); the windowed
+#: chain does strictly less work, so the measured value normally sits at
+#: the top of the sweep.
+WINDOWED_K_FRAC = 0.5
+
+
+def resolved_windowed_k_frac() -> float:
+    """The measured ``k / n`` windowed-composition crossover for this host.
+
+    Reads the calibration table (see ``repro.engine.autotune``); the static
+    :data:`WINDOWED_K_FRAC` fallback applies when no table resolves or the
+    table predates schema v3 (``windowed_k_frac`` then loads as the same
+    fallback value).
+    """
+    from repro.engine import autotune
+
+    table = autotune.get_table()
+    if table is None:
+        return WINDOWED_K_FRAC
+    return table.windowed_k_frac
 
 
 def resolved_crossovers(backend: Optional[str] = None) -> tuple:
@@ -65,6 +94,7 @@ class SolverPlan:
 
     method: Method = "eei_tridiag"
     backend: BackendName = "jnp"
+    spectrum: Spectrum = "full"
     mesh: Optional[jax.sharding.Mesh] = None
     batch_axis: str = "data"
     minor_axis: Optional[str] = "model"
@@ -77,6 +107,8 @@ class SolverPlan:
             raise ValueError(f"unknown method {self.method!r}")
         if self.backend not in ("reference", "jnp", "pallas", "sharded"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.spectrum not in ("full", "windowed"):
+            raise ValueError(f"unknown spectrum {self.spectrum!r}")
         if self.precision not in (None, "float32", "float64"):
             raise ValueError(f"unknown precision {self.precision!r}")
         if self.backend == "sharded":
@@ -102,6 +134,7 @@ def plan_for(
     mesh: Optional[jax.sharding.Mesh] = None,
     method: Optional[Method] = None,
     backend: Optional[BackendName] = None,
+    spectrum: Optional[Spectrum] = None,
     precision: Optional[str] = None,
     bisect_iters: int = 0,
 ) -> SolverPlan:
@@ -119,6 +152,11 @@ def plan_for(
       (:func:`resolved_crossovers`), else the static fallback constants;
     * small matrices keep dense minors (n eigvalsh calls beat the
       tridiagonalization constant); larger ones take the tridiagonal path;
+    * a known top-k window (``k`` given, below the measured
+      ``windowed_k_frac`` fraction of ``n``) plans the *windowed*
+      composition — top-k programs then compute only the selected extremal
+      rows instead of the full spectrum table
+      (:func:`resolved_windowed_k_frac`; ``spectrum`` overrides);
     * a mesh with >1 device along its batch axis picks the sharded backend
       whenever the stack puts at least one matrix on every device —
       divisibility is *not* required, because both ``SolverEngine._run_chunk``
@@ -154,6 +192,12 @@ def plan_for(
         else:
             method = "eei_tridiag"
 
+    if spectrum is None:
+        spectrum = "full"
+        if (method != "eigh" and k is not None and 0 < k < n
+                and k <= resolved_windowed_k_frac() * n):
+            spectrum = "windowed"
+
     minor_axis = None
     if mesh is not None and "model" in mesh.axis_names:
         minor_axis = "model"
@@ -161,6 +205,7 @@ def plan_for(
     return SolverPlan(
         method=method,
         backend=backend,
+        spectrum=spectrum,
         mesh=mesh,
         batch_axis="data",
         minor_axis=minor_axis,

@@ -1,59 +1,190 @@
-"""Backend registry — the single dispatch point of the EEI pipeline.
+"""Stage-graph registry — the single dispatch point of the EEI pipeline.
 
-A *backend* is a named bundle of stage implementations.  Every stage is
-batched: arrays carry a leading stack axis ``b`` end-to-end.
+The pipeline used to be a closed ``method in {eigh, eei_dense, eei_tridiag}``
+if-ladder in the engine over a fixed ``BackendStages`` struct.  It is now a
+*stage graph* with three pieces:
 
-    tridiagonalize(a, with_q)        (b, n, n) -> d (b, n), e (b, n-1), q|None
-    tridiag_eigenvalues(d, e)        (b, n), (b, n-1) -> lam (b, n)
-    tridiag_minor_spectra(d, e)      (b, n), (b, n-1) -> mu (b, n, n-1)
-    dense_eigenvalues(a)             (b, n, n) -> lam (b, n)
-    dense_spectra(a)                 (b, n, n) -> lam (b, n), mu (b, n, n-1)
-    magnitudes(lam, mu)              -> |v[i, j]|^2 table (b, n, n)
-    tridiag_signs(d, e, lam_s, mag_s)  selected rows -> signed w (b, k, n)
-    dense_signs(a, lam_s, mag_s)       selected rows -> signed v (b, k, n)
+* a **stage library** per backend (:class:`StageLibrary`) — an open, named
+  bundle of batched stage implementations (``registry.get_backend(plan)``
+  resolves ``plan.backend`` to its library);
+* **compositions** (:class:`Composition`) — named stage chains
+  ``reduce -> spectrum -> [minor_spectra] -> components -> recover`` per
+  program kind (``solve`` / ``topk`` / ``eigenvalues``), every stage
+  declaring its dataflow signature (``requires``/``provides`` state keys),
+  validated at registration;
+* the engine's program builders are generic **graph executors**: they walk
+  the resolved chain threading a state dict through the stage functions.
+  Adding a method — or a windowed variant, or a future Lanczos reduce — is
+  a new composition plus library entries, not a new engine branch.
 
-Backends register a *factory* taking the ``SolverPlan`` (the sharded backend
-needs the mesh; stateless backends ignore it).  This replaces the former
-string/flag dispatch scattered over ``identity.VARIANTS``,
-``SpectralEngine(method=..., use_kernels=...)`` and the free functions of
-``core.distributed``.
+Every stage is batched: arrays carry a leading stack axis ``b`` end-to-end.
+The shared state keys (see the default compositions in ``backends.py``):
+
+    a         (b, n, n)    the input stack
+    idx       (k,) int32   selected eigenvalue indices (topk programs)
+    d, e, q   band + Q     from the tridiagonalize reduce stage
+    lam       (b, n)       full spectrum, ascending
+    lam_sel   (b, k)       selected window of the spectrum, ascending
+    mu        (b, n, n-1)  minor spectra
+    mags      (b, n, n)    full |v[i, j]|^2 table (dense basis after recover)
+    mag_sel   (b, k, n)    selected |v|^2 rows (pre-sign basis)
+    v         (b, n, n)    LAPACK eigenvectors (eigh composition only)
+    vecs      (b, k, n)    signed, unit-norm selected eigenvectors
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.engine.plan import SolverPlan
 
+#: Stage roles in pipeline order.  A chain may skip roles (the windowed
+#: tridiagonal composition has no ``minor_spectra`` stage at all — its
+#: components stage evaluates minor determinants directly), but may not
+#: reorder them.
+STAGE_ROLES = ("reduce", "spectrum", "minor_spectra", "components", "recover")
+
+#: Program kinds a composition can serve, with the state each starts from
+#: and the keys its final state must provide.
+PROGRAM_KINDS = ("solve", "topk", "eigenvalues")
+_INITIAL_KEYS = {
+    "solve": frozenset({"a"}),
+    "topk": frozenset({"a", "idx"}),
+    "eigenvalues": frozenset({"a", "idx"}),
+}
+_FINAL_KEYS = {
+    "solve": ({"lam", "mags"},),
+    "topk": ({"lam_sel", "vecs"},),
+    # windowed eigenvalue chains end at the window; full chains at the
+    # spectrum — either terminal is a valid eigenvalues program.
+    "eigenvalues": ({"lam"}, {"lam_sel"}),
+}
+
 
 @dataclasses.dataclass(frozen=True)
-class BackendStages:
-    """Stage implementations one backend provides (all batched)."""
+class StageSig:
+    """One stage of a chain: role + implementation name + dataflow keys."""
+
+    role: str
+    name: str
+    requires: Tuple[str, ...]
+    provides: Tuple[str, ...]
+
+    def __post_init__(self):
+        if self.role not in STAGE_ROLES:
+            raise ValueError(
+                f"unknown stage role {self.role!r}; expected one of "
+                f"{STAGE_ROLES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Composition:
+    """A named, validated stage chain per program kind.
+
+    ``solve`` / ``eigenvalues`` may be ``None``: windowed compositions have
+    no full-table solve (the engine falls back to the method's full
+    composition — a full table needs every row by definition).
+    """
 
     name: str
-    tridiagonalize: Callable
-    tridiag_eigenvalues: Callable
-    tridiag_minor_spectra: Callable
-    dense_eigenvalues: Callable
-    dense_spectra: Callable
-    magnitudes: Callable
-    tridiag_signs: Callable
-    dense_signs: Callable
+    method: str
+    windowed: bool
+    topk: Tuple[StageSig, ...]
+    solve: Optional[Tuple[StageSig, ...]] = None
+    eigenvalues: Optional[Tuple[StageSig, ...]] = None
+
+    def chain(self, kind: str) -> Optional[Tuple[StageSig, ...]]:
+        if kind not in PROGRAM_KINDS:
+            raise ValueError(f"unknown program kind {kind!r}")
+        return getattr(self, kind)
+
+    def validate(self) -> None:
+        """Check every declared chain for role order and dataflow.
+
+        Each stage's ``requires`` must be satisfied by the accumulated
+        ``provides`` of the stages before it (plus the program kind's
+        initial state), and the final state must carry the kind's outputs.
+        This is what the stage-graph unit test asserts for every registered
+        composition — a chain that type-checks here cannot KeyError inside
+        a jitted executor.
+        """
+        for kind in PROGRAM_KINDS:
+            chain = self.chain(kind)
+            if chain is None:
+                continue
+            have = set(_INITIAL_KEYS[kind])
+            last_role = -1
+            for sig in chain:
+                role_i = STAGE_ROLES.index(sig.role)
+                if role_i < last_role:
+                    raise ValueError(
+                        f"composition {self.name!r} ({kind}): stage "
+                        f"{sig.name!r} role {sig.role!r} out of order")
+                last_role = role_i
+                missing = set(sig.requires) - have
+                if missing:
+                    raise ValueError(
+                        f"composition {self.name!r} ({kind}): stage "
+                        f"{sig.name!r} requires {sorted(missing)} not "
+                        f"provided upstream (have {sorted(have)})")
+                have |= set(sig.provides)
+            if not any(alt <= have for alt in _FINAL_KEYS[kind]):
+                raise ValueError(
+                    f"composition {self.name!r} ({kind}): final state "
+                    f"{sorted(have)} provides none of "
+                    f"{[sorted(a) for a in _FINAL_KEYS[kind]]}")
 
 
-BackendFactory = Callable[[SolverPlan], BackendStages]
+class StageLibrary:
+    """Open bundle of batched stage implementations for one backend.
+
+    Replaces the former frozen ``BackendStages`` struct: stages live in a
+    name -> callable mapping, so a backend (or a plugin) can add stage
+    implementations without touching a shared struct definition.  Stage
+    functions are reachable as attributes (``lib.tridiagonalize``) for
+    ergonomic access from stage builders and tests.
+    """
+
+    def __init__(self, name: str, stages: Dict[str, Callable]):
+        self.name = name
+        self._stages = dict(stages)
+
+    def __getattr__(self, key: str) -> Callable:
+        try:
+            return self._stages[key]
+        except KeyError:
+            raise AttributeError(
+                f"backend {self.name!r} has no stage {key!r}; available: "
+                f"{sorted(self._stages)}") from None
+
+    def get(self, key: str) -> Callable:
+        return getattr(self, key)
+
+    def stage_names(self) -> list:
+        return sorted(self._stages)
+
+    def extended(self, **overrides: Callable) -> "StageLibrary":
+        """A copy with stages added/replaced — composition over mutation."""
+        stages = dict(self._stages)
+        stages.update(overrides)
+        return StageLibrary(self.name, stages)
+
+
+BackendFactory = Callable[[SolverPlan], StageLibrary]
 
 _REGISTRY: Dict[str, BackendFactory] = {}
+_COMPOSITIONS: Dict[str, Composition] = {}
+_BY_METHOD: Dict[Tuple[str, bool], str] = {}
 
 
 def register_backend(name: str, factory: BackendFactory) -> None:
-    """Register (or replace) the factory for backend ``name``."""
+    """Register (or replace) the stage-library factory for ``name``."""
     _REGISTRY[name] = factory
 
 
-def get_backend(plan: SolverPlan) -> BackendStages:
-    """Resolve ``plan.backend`` to its stage bundle."""
+def get_backend(plan: SolverPlan) -> StageLibrary:
+    """Resolve ``plan.backend`` to its stage library."""
     try:
         factory = _REGISTRY[plan.backend]
     except KeyError:
@@ -63,5 +194,51 @@ def get_backend(plan: SolverPlan) -> BackendStages:
     return factory(plan)
 
 
-def available_backends() -> list[str]:
+def available_backends() -> list:
     return sorted(_REGISTRY)
+
+
+def register_composition(comp: Composition) -> None:
+    """Validate and register (or replace) a composition."""
+    comp.validate()
+    _COMPOSITIONS[comp.name] = comp
+    # Re-registering a name under a different (method, windowed) pair must
+    # not leave the old reverse-index entry pointing at it.
+    for key in [k for k, name in _BY_METHOD.items() if name == comp.name]:
+        del _BY_METHOD[key]
+    _BY_METHOD[(comp.method, comp.windowed)] = comp.name
+
+
+def get_composition(name: str) -> Composition:
+    try:
+        return _COMPOSITIONS[name]
+    except KeyError:
+        raise KeyError(
+            f"no composition {name!r} registered; available: "
+            f"{sorted(_COMPOSITIONS)}") from None
+
+
+def available_compositions() -> list:
+    return sorted(_COMPOSITIONS)
+
+
+def composition_for(method: str, windowed: bool = False) -> Composition:
+    """The composition serving ``method`` (windowed variant if asked).
+
+    A method with no windowed variant (``eigh`` computes everything in one
+    LAPACK call — there is nothing to window) falls back to its full
+    composition, so a windowed plan is always executable.
+    """
+    name = _BY_METHOD.get((method, windowed))
+    if name is None and windowed:
+        name = _BY_METHOD.get((method, False))
+    if name is None:
+        raise KeyError(
+            f"no composition registered for method {method!r}; "
+            f"available: {sorted(_BY_METHOD)}")
+    return _COMPOSITIONS[name]
+
+
+def has_windowed(method: str) -> bool:
+    """Whether ``method`` registers a dedicated windowed composition."""
+    return (method, True) in _BY_METHOD

@@ -74,6 +74,7 @@ import dataclasses
 import logging
 import threading
 import time
+import weakref
 from collections import OrderedDict, deque
 from concurrent.futures import Future, InvalidStateError
 from typing import NamedTuple, Optional
@@ -382,6 +383,7 @@ class EeiServer:
         self.requests_completed = 0
         self.requests_failed = 0
         self.requests_rejected = 0  # late submits after close()
+        self.requests_cancelled = 0  # caller-cancelled while still pending
         self.stacks_dispatched = 0
         self.latencies_ms: list = []
 
@@ -444,9 +446,46 @@ class EeiServer:
             self.requests_submitted += 1
             req.t_submit = time.monotonic()  # linger clock starts at enqueue
             self._cv.notify_all()
+        # Caller-side cancellation: while the request is still pending
+        # (undispatched) a cancel() pulls it out of its coalesce group, so
+        # an abandoned future never pads a stack.  Attached outside the
+        # lock — an already-cancelled future runs the callback inline.
+        # The callback holds only a weakref: Future never clears its done
+        # callbacks, so a strong capture would pin every request's input
+        # matrix alongside the result for as long as the caller retains
+        # the future.
+        req_ref = weakref.ref(req)
+        req.future.add_done_callback(
+            lambda fut, ref=req_ref: self._on_future_done(ref, fut))
         if not self._threaded:
             self.pump()
         return req.future
+
+    def _on_future_done(self, req_ref, fut: Future) -> None:
+        """Dequeue a request whose caller cancelled it while still pending.
+
+        Runs for every resolved future (the done callback cannot filter),
+        so anything but a cancellation returns immediately.  A cancel that
+        lands after the group was popped is left alone: its row is already
+        part of an assembled stack (the device work is spent either way)
+        and retirement tolerates the pre-resolved future.  A dead weakref
+        means the request already left the pipeline entirely.
+        """
+        if not fut.cancelled():
+            return
+        req = req_ref()
+        if req is None:
+            return
+        with self._cv:
+            q = self._queues.get(self._coalesce_key(req))
+            if q is None or req not in q:
+                return  # already dispatched (or being popped): rides along
+            q.remove(req)
+            if not q:
+                del self._queues[self._coalesce_key(req)]
+            self._pending -= 1
+            self.requests_cancelled += 1
+            self._cv.notify_all()  # backpressure space; linger re-evaluates
 
     def _reject_locked(self, req: _Request) -> Future:
         self.requests_rejected += 1
@@ -859,6 +898,7 @@ class EeiServer:
             self.requests_completed = 0
             self.requests_failed = 0
             self.requests_rejected = 0
+            self.requests_cancelled = 0
             self.stacks_dispatched = 0
             self.latencies_ms = []
             self.dispatch_log = []
@@ -872,6 +912,7 @@ class EeiServer:
                 "requests_completed": self.requests_completed,
                 "requests_failed": self.requests_failed,
                 "requests_rejected": self.requests_rejected,
+                "requests_cancelled": self.requests_cancelled,
                 "requests_pending": self._pending,
                 "stacks_dispatched": self.stacks_dispatched,
             }

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total):
+def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total,
+                  target_base):
     d = d_ref[...]  # (bb, N)
     e = e_ref[...]  # (bb, N)
     e2 = e * e
@@ -36,7 +37,13 @@ def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total
     hi0 = bounds_ref[:, 1:2]
     pivmin = bounds_ref[:, 2:3]
 
-    m0 = pl.program_id(1) * block_m
+    # ``target_base`` windows the eigenvalue-index axis: lane ``m`` of grid
+    # step ``g`` brackets index ``target_base + g * block_m + m``.  The full
+    # spectrum is ``target_base = 0`` with the grid spanning all n indices; a
+    # top-k window starts the grid at ``n - k`` — bisection lanes are
+    # independent, so a windowed lane is bitwise-equal to the same lane of a
+    # full-spectrum run.
+    m0 = target_base + pl.program_id(1) * block_m
     targets = m0 + jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)  # (1, bm)
 
     bb = d.shape[0]
@@ -72,7 +79,9 @@ def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
+    jax.jit,
+    static_argnames=(
+        "n_iter", "block_b", "block_m", "interpret", "m_total", "target_base"),
 )
 def sturm_padded(
     d: jax.Array,  # (B, N)
@@ -83,12 +92,19 @@ def sturm_padded(
     block_b: int = 8,
     block_m: int = 128,
     interpret: bool = False,
+    m_total: int | None = None,
+    target_base: int = 0,
 ):
+    """Tiled bisection over ``m_total`` eigenvalue indices starting at
+    ``target_base`` (defaults: the full spectrum — every band index)."""
     b_total, n_total = d.shape
-    grid = (b_total // block_b, n_total // block_m)
+    if m_total is None:
+        m_total = n_total
+    grid = (b_total // block_b, m_total // block_m)
     return pl.pallas_call(
         functools.partial(
-            _sturm_kernel, n_iter=n_iter, block_m=block_m, n_total=n_total
+            _sturm_kernel, n_iter=n_iter, block_m=block_m, n_total=n_total,
+            target_base=target_base,
         ),
         grid=grid,
         in_specs=[
@@ -97,6 +113,6 @@ def sturm_padded(
             pl.BlockSpec((block_b, 4), lambda b, m: (b, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, block_m), lambda b, m: (b, m)),
-        out_shape=jax.ShapeDtypeStruct((b_total, n_total), d.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_total, m_total), d.dtype),
         interpret=interpret,
     )(d, e, bounds)

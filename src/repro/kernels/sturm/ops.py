@@ -22,7 +22,8 @@ def _default_iters(dtype) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
+    jax.jit,
+    static_argnames=("n_iter", "block_b", "block_m", "interpret", "window"),
 )
 def sturm_eigenvalues(
     d: jax.Array,  # (B, n)
@@ -32,12 +33,20 @@ def sturm_eigenvalues(
     block_b: int = 8,
     block_m: int = 128,
     interpret: bool | None = None,
+    window: tuple | None = None,
 ) -> jax.Array:
     """All eigenvalues of ``B`` symmetric tridiagonal matrices, ``(B, n)``.
 
     Decoupled systems (zero off-diagonal entries, e.g. EEI minors of a
     tridiagonal matrix) need no special handling — the Sturm count is exact
     across decoupling points.
+
+    ``window=(k, largest)`` restricts the eigenvalue-index grid to the ``k``
+    extremal indices (the counting function brackets eigenvalues *by
+    index*, so a partial-spectrum query runs ``k`` bisection lanes instead
+    of ``n``); the returned ``(B, k)`` window is ascending and
+    bitwise-equal to the matching slice of the full-spectrum result
+    (bisection lanes are independent).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -45,6 +54,14 @@ def sturm_eigenvalues(
     dtype = d.dtype
     if n_iter == 0:
         n_iter = _default_iters(dtype)
+    m_targets = n
+    target_base = 0
+    if window is not None:
+        k_w, largest = int(window[0]), bool(window[1])
+        if not 1 <= k_w <= n:
+            raise ValueError(f"window k={k_w} out of range for n={n}")
+        m_targets = k_w
+        target_base = n - k_w if largest else 0
 
     # Per-matrix Gershgorin bounds + pivmin (computed on unpadded bands).
     abs_e = jnp.abs(e)
@@ -69,9 +86,12 @@ def sturm_eigenvalues(
     # Clamp blocks to the padded problem shape: a 128-lane tile on an n=8
     # problem must shrink to 8, not pad the band 16x (align 8 keeps lanes
     # aligned; the batch axis clamps unaligned — padded rows are pure waste).
-    block_m = blocks.clamp_block(block_m, n)
+    # The eigenvalue-index (target) axis and the band axis coincide only for
+    # full-spectrum runs: a window tiles k target lanes over the full band.
+    block_m = blocks.clamp_block(block_m, m_targets)
     block_b = blocks.clamp_block(block_b, b_n, align=1)
-    pad_n = (-n) % block_m
+    pad_m = (-m_targets) % block_m
+    pad_n = (-n) % block_m if window is None else (-n) % 8
     pad_b = (-b_n) % block_b
     # Padded diagonal entries sit above hi (decoupled via zero e), so padded
     # eigenvalue indices converge onto hi and are sliced off below.
@@ -95,8 +115,10 @@ def sturm_eigenvalues(
         block_b=block_b,
         block_m=block_m,
         interpret=interpret,
+        m_total=m_targets + pad_m,
+        target_base=target_base,
     )
-    return out[:b_n, :n]
+    return out[:b_n, :m_targets]
 
 
 @functools.partial(

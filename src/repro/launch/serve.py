@@ -16,7 +16,7 @@ cache -> async double-buffered dispatch):
 
     PYTHONPATH=src python -m repro.launch.serve --eei --batch 8 --n 64 \
         --k 4 --requests 64 [--mixed] [--sync] [--linger-ms 2] \
-        [--gap-ms 1] [--sharded]
+        [--gap-ms 1] [--sharded] [--spectrum auto|full|windowed]
 
 ``--mixed`` samples ``n`` and ``k`` per request (the heterogeneous stream
 the server exists for); ``--sync`` runs the PR-2-style synchronous
@@ -75,7 +75,9 @@ def serve_eei(args):
             "(off-TPU) XLA_FLAGS=--xla_force_host_platform_device_count=N")
     serve_mesh = mesh if mesh.devices.size > 1 else None
     plan = plan_for((args.batch, args.n, args.n), k=args.k, mesh=serve_mesh,
-                    backend="sharded" if args.sharded else None)
+                    backend="sharded" if args.sharded else None,
+                    spectrum=None if args.spectrum == "auto" else
+                    args.spectrum)
     # Crossovers are backend-specific since schema v2 — log the pair the
     # resolved plan's backend actually dispatches on.
     eigh_x, dense_x = resolved_crossovers(plan.backend)
@@ -93,14 +95,16 @@ def serve_eei(args):
                  "n=%d k=%d mode=%s mixed-shapes", args.batch, args.n,
                  args.k, mode)
     else:
-        log.info("eei serve plan: method=%s backend=%s max_batch=%d n=%d "
-                 "k=%d mode=%s", plan.method, plan.backend, args.batch,
-                 args.n, args.k, mode)
+        log.info("eei serve plan: method=%s backend=%s spectrum=%s "
+                 "max_batch=%d n=%d k=%d mode=%s", plan.method, plan.backend,
+                 plan.spectrum, args.batch, args.n, args.k, mode)
 
     # The stream is generated before t0 — only serving is timed.
     stream = make_eei_stream(args.requests, args.n, args.k,
                              seed=args.seed, mixed=args.mixed)
 
+    gap_s = (args.gap_ms or 0.0) / 1e3
+    rng = np.random.default_rng(args.seed)
     if args.sync:
         engine = SolverEngine(plan)
         # Warmup compiles outside the timed region, like the server path.
@@ -111,6 +115,11 @@ def serve_eei(args):
         t0 = time.monotonic()
         out = None
         for a, k_i in stream:
+            if gap_s:
+                # The sync baseline pays the same arrival gaps as the
+                # server path, so --sync vs --linger-ms comparisons at
+                # equal flags stay apples-to-apples.
+                time.sleep(rng.exponential(gap_s))
             out = engine.topk(jnp.asarray(a), k_i)
             jax.block_until_ready(out)
         dt = time.monotonic() - t0
@@ -125,8 +134,6 @@ def serve_eei(args):
                        max_batch=args.batch, max_inflight=args.inflight,
                        linger_ms=args.linger_ms,
                        mesh=serve_mesh if args.mixed else None)
-    gap_s = (args.gap_ms or 0.0) / 1e3
-    rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     futures = []
     for a, k_i in stream:
@@ -169,6 +176,13 @@ def main(argv=None):
     ap.add_argument("--sync", action="store_true",
                     help="EEI: synchronous per-request loop instead of the "
                     "continuous-batching server (baseline)")
+    ap.add_argument("--spectrum", choices=["auto", "full", "windowed"],
+                    default="auto",
+                    help="EEI: pin the stage composition — 'windowed' "
+                    "computes only the k requested extremal rows (the "
+                    "k-windowed Sturm + minor-determinant path), 'full' "
+                    "the whole table; 'auto' lets the calibrated planner "
+                    "pick per bucket (windowed_k_frac crossover)")
     ap.add_argument("--inflight", type=int, default=2,
                     help="EEI server: max in-flight stacks (double "
                     "buffering = 2)")

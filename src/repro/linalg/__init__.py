@@ -11,6 +11,8 @@ from repro.linalg.sturm import (
     sturm_count,
     bisect_eigenvalues,
     bisect_eigenvalues_batched,
+    bisect_eigenvalues_windowed,
+    bisect_eigenvalues_windowed_batched,
 )
 from repro.linalg.interlace import interlacing_holds
 
@@ -21,5 +23,7 @@ __all__ = [
     "sturm_count",
     "bisect_eigenvalues",
     "bisect_eigenvalues_batched",
+    "bisect_eigenvalues_windowed",
+    "bisect_eigenvalues_windowed_batched",
     "interlacing_holds",
 ]

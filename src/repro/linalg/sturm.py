@@ -74,28 +74,11 @@ def bisect_eigenvalues(d: jax.Array, e: jax.Array, n_iter: int = 0) -> jax.Array
 
     Fixed-iteration bisection: eigenvalue ``m`` is bracketed by maintaining
     ``count(lo_m) <= m < count(hi_m)``; every iteration halves every bracket
-    simultaneously (one vectorized Sturm sweep per iteration).
+    simultaneously (one vectorized Sturm sweep per iteration).  The full
+    spectrum is the ``k = n`` window — one bisection body serves both, so
+    the windowed path's bitwise-equality contract cannot drift.
     """
-    n = d.shape[0]
-    if n_iter == 0:
-        # Enough iterations to shrink the Gershgorin span below ~eps*span.
-        n_iter = 64 if d.dtype == jnp.float64 else 32
-    lo0, hi0 = gershgorin_bounds(d, e)
-    targets = jnp.arange(n)
-    lo = jnp.full((n,), lo0, d.dtype)
-    hi = jnp.full((n,), hi0, d.dtype)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        c = sturm_count(d, e, mid)
-        go_right = c <= targets  # fewer than m+1 eigenvalues below mid
-        lo = jnp.where(go_right, mid, lo)
-        hi = jnp.where(go_right, hi, mid)
-        return lo, hi
-
-    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
-    return 0.5 * (lo + hi)
+    return bisect_eigenvalues_windowed(d, e, d.shape[0], n_iter=n_iter)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iter",))
@@ -104,4 +87,55 @@ def bisect_eigenvalues_batched(d: jax.Array, e: jax.Array, n_iter: int = 0):
     from repro.linalg.batching import vmap_leading
 
     fn = lambda dd, ee: bisect_eigenvalues(dd, ee, n_iter=n_iter)
+    return vmap_leading(fn, d.ndim - 1)(d, e)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "n_iter"))
+def bisect_eigenvalues_windowed(
+    d: jax.Array, e: jax.Array, k: int, largest: bool = True, n_iter: int = 0
+) -> jax.Array:
+    """The ``k`` extremal eigenvalues by index-targeted bisection, ascending.
+
+    The Sturm counting function brackets eigenvalues *by index*, so a
+    partial-spectrum query needs only ``k`` bisection lanes instead of ``n``
+    — this is the windowed spectrum stage of the stage graph.  Every lane
+    runs exactly the iterations the full bisection would run for its index
+    (same Gershgorin start bracket, same count function), so the window is
+    **bitwise-equal** to the matching slice of :func:`bisect_eigenvalues`.
+
+    Returns the ``k`` *largest* (indices ``n-k .. n-1``) or *smallest*
+    (indices ``0 .. k-1``) eigenvalues, ascending either way.
+    """
+    n = d.shape[0]
+    if not 1 <= k <= n:
+        raise ValueError(f"window k={k} out of range for n={n}")
+    if n_iter == 0:
+        n_iter = 64 if d.dtype == jnp.float64 else 32
+    lo0, hi0 = gershgorin_bounds(d, e)
+    targets = jnp.arange(n - k, n) if largest else jnp.arange(k)
+    lo = jnp.full((k,), lo0, d.dtype)
+    hi = jnp.full((k,), hi0, d.dtype)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        c = sturm_count(d, e, mid)
+        go_right = c <= targets
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "n_iter"))
+def bisect_eigenvalues_windowed_batched(
+    d: jax.Array, e: jax.Array, k: int, largest: bool = True, n_iter: int = 0
+):
+    """Batched :func:`bisect_eigenvalues_windowed` over leading axes."""
+    from repro.linalg.batching import vmap_leading
+
+    fn = lambda dd, ee: bisect_eigenvalues_windowed(
+        dd, ee, k, largest=largest, n_iter=n_iter)
     return vmap_leading(fn, d.ndim - 1)(d, e)

@@ -1,5 +1,6 @@
-"""Calibration-table schema: v2 round-trip, v1 warn-and-fallback, and the
-backend-specific crossover resolution the planner dispatches on."""
+"""Calibration-table schema: v3 round-trip, v1/v2 warn-once-and-fallback,
+and the backend-specific crossover + windowed-k-frac resolution the planner
+dispatches on."""
 
 import json
 import logging
@@ -9,27 +10,31 @@ import pytest
 
 from repro.engine import autotune
 from repro.engine.autotune import CalibrationTable, load_table
+from repro.engine.plan import WINDOWED_K_FRAC
 
 PR2_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr2.json"
+PR3_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr3.json"
 
 
-def _v2_table() -> CalibrationTable:
+def _v3_table() -> CalibrationTable:
     return CalibrationTable(
         eigh_crossover_n=24, dense_crossover_n=48,
         prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
         prod_diff_block_b=4,
         pallas_eigh_crossover_n=16, pallas_dense_crossover_n=32,
+        windowed_k_frac=0.25,
         host="test", backend="cpu")
 
 
-def test_v2_round_trip(tmp_path):
-    table = _v2_table()
+def test_v3_round_trip(tmp_path):
+    table = _v3_table()
     path = table.save(tmp_path / "cal.json")
     loaded = load_table(path)
     d = json.loads(path.read_text())
-    assert d["schema_version"] == 2
+    assert d["schema_version"] == 3
     assert loaded.prod_diff_block_b == 4
     assert loaded.pallas_eigh_crossover_n == 16
+    assert loaded.windowed_k_frac == 0.25
     assert loaded.crossovers_for("pallas") == (16, 32)
     assert loaded.crossovers_for("jnp") == (24, 48)
     assert loaded.crossovers_for(None) == (24, 48)
@@ -51,8 +56,36 @@ def test_v1_table_loads_with_warning_and_defaults(tmp_path, caplog):
     assert table.eigh_crossover_n == 128
     assert table.prod_diff_block_b == 1  # bb default: PR-2 grid
     assert table.pallas_eigh_crossover_n is None
+    assert table.windowed_k_frac == WINDOWED_K_FRAC
     # pallas falls back to the jnp-measured pair on v1 tables
     assert table.crossovers_for("pallas") == (128, 8)
+
+
+def test_v2_table_loads_with_defaults_and_warns_exactly_once(tmp_path,
+                                                             caplog):
+    """Regression pinning the v2 default behavior: the missing
+    ``windowed_k_frac`` loads as the static planner fallback, and the
+    old-schema warning fires exactly once per (source, version) per
+    process, however many times the table is re-loaded."""
+    v2 = json.loads(PR3_DEFAULT.read_text())
+    assert v2["schema_version"] == 2
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps(v2))
+    autotune._WARNED.discard((f"file:{path}", 2))
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        table = load_table(path)
+        reloaded = load_table(path)  # second load: deduped
+        load_table(path)
+    warnings = [r for r in caplog.records
+                if "schema_version 2" in r.getMessage()]
+    assert len(warnings) == 1, [r.getMessage() for r in warnings]
+    for t in (table, reloaded):
+        assert t.windowed_k_frac == WINDOWED_K_FRAC
+        # v2 fields survive untouched
+        assert t.eigh_crossover_n == v2["eigh_crossover_n"]
+        assert t.prod_diff_block_b == v2["prod_diff_block_b"]
+        assert t.crossovers_for("pallas") == (
+            v2["pallas_eigh_crossover_n"], v2["pallas_dense_crossover_n"])
 
 
 def test_pr2_checked_in_default_still_loads():
@@ -63,11 +96,12 @@ def test_pr2_checked_in_default_still_loads():
     assert table.prod_diff_blocks == (64, 128, 128)
     assert table.prod_diff_block_b == 1
     assert table.crossovers_for("pallas") == table.crossovers_for("jnp")
+    assert table.windowed_k_frac == WINDOWED_K_FRAC
 
 
 def test_newer_schema_still_rejected(tmp_path):
     path = tmp_path / "future.json"
-    d = _v2_table().to_dict()
+    d = _v3_table().to_dict()
     d["schema_version"] = 99
     path.write_text(json.dumps(d))
     with pytest.raises(ValueError, match="newer"):
@@ -76,11 +110,13 @@ def test_newer_schema_still_rejected(tmp_path):
 
 def test_repo_default_is_current_schema():
     """The committed repo default is regenerated at the current schema (the
-    v1 copy lives in tests/data/ purely as the back-compat fixture)."""
+    v1/v2 copies live in tests/data/ purely as back-compat fixtures)."""
     d = json.loads(autotune.REPO_DEFAULT_PATH.read_text())
     assert d["schema_version"] == autotune._SCHEMA_VERSION
     table = load_table(autotune.REPO_DEFAULT_PATH)
     assert table.pallas_eigh_crossover_n is not None
+    assert "windowed_k_frac" in d
+    assert 0.0 <= table.windowed_k_frac <= 1.0
 
 
 def test_planner_uses_backend_specific_crossovers():
@@ -99,3 +135,17 @@ def test_planner_uses_backend_specific_crossovers():
         assert plan_for((14, 14), backend="pallas").method == "eigh"
     finally:
         set_table(None)
+
+
+def test_planner_reads_windowed_k_frac():
+    from repro.engine import plan, set_table
+
+    try:
+        set_table(CalibrationTable(
+            eigh_crossover_n=8, dense_crossover_n=12,
+            prod_diff_blocks=(32, 32, 32), sturm_blocks=(8, 64),
+            windowed_k_frac=0.125))
+        assert plan.resolved_windowed_k_frac() == 0.125
+    finally:
+        set_table(None)
+    assert 0.0 <= plan.resolved_windowed_k_frac() <= 1.0

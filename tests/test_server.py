@@ -813,18 +813,67 @@ def test_sync_close_without_drain_still_retires_inflight():
 
 def test_cancelled_future_does_not_poison_the_stack():
     """A caller cancelling its future must not crash the retire path or
-    lose the other requests riding the same stack."""
+    lose the other requests riding the same stack.  Since PR 5 a cancel on
+    a still-*pending* request also pulls it from its coalesce group, so it
+    never pads a stack."""
     rng = np.random.default_rng(51)
     with EeiServer(PLAN, max_batch=8, linger_ms=60_000,
                    cache=SHARED_CACHE) as server:
         futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
-        assert futs[1].cancel()  # still queued: cancellable
+        assert futs[1].cancel()  # still queued: cancellable + dequeued
         server.flush()
         for f in (futs[0], futs[2]):
             assert f.result(timeout=120).eigenvalues.shape == (2,)
         assert futs[1].cancelled()
     stats = server.stats()
-    assert stats["requests_completed"] == 3  # stack retired whole
+    assert stats["requests_cancelled"] == 1
+    assert stats["requests_completed"] == 2  # the cancelled one never rode
+
+
+def test_cancel_pending_request_never_pads_a_stack():
+    """PR-4 follow-up (cancellation): a cancel() on an undispatched request
+    removes it from its group — the dispatched bucket shrinks to the live
+    requests instead of carrying a dead row."""
+    rng = np.random.default_rng(53)
+    server = EeiServer(PLAN, max_batch=8)
+    futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+    assert futs[1].cancel()
+    server.flush()
+    stats = server.stats()
+    assert stats["requests_cancelled"] == 1
+    assert stats["requests_completed"] == 2
+    # pow2 bucket of the 2 surviving requests — not of the original 3.
+    assert server.cache.buckets()[-1].b == 2
+    for f in (futs[0], futs[2]):
+        assert f.result(timeout=60).eigenvalues.shape == (2,)
+    # A cancel landing *after* dispatch rides the stack: device work is
+    # spent either way, and retirement tolerates the resolved future.
+    futs2 = [server.submit(_sym(rng, 16), 1) for _ in range(8)]
+    assert server.stats()["stacks_dispatched"] == 2  # full stack went out
+    cancelled_late = futs2[0].cancel()
+    server.flush()
+    for f in futs2[1:]:
+        assert f.result(timeout=60).eigenvalues.shape == (1,)
+    stats = server.stats()
+    assert stats["requests_cancelled"] == 1  # late cancel is not a dequeue
+    if cancelled_late:
+        assert futs2[0].cancelled()
+
+
+def test_cancelled_backpressure_slot_is_released():
+    """Cancelling a pending request frees its max_pending slot — a blocked
+    producer must make progress without any dispatch happening."""
+    rng = np.random.default_rng(54)
+    server = EeiServer(PLAN, max_batch=8, max_pending=2,
+                       pending_policy="except")
+    f0 = server.submit(_sym(rng, 12), 1)
+    server.submit(_sym(rng, 12), 1)
+    with pytest.raises(QueueFull):
+        server.submit(_sym(rng, 12), 1)
+    assert f0.cancel()
+    f3 = server.submit(_sym(rng, 12), 1)  # slot released by the cancel
+    server.flush()
+    assert f3.result(timeout=60).eigenvalues.shape == (1,)
 
 
 def test_ready_key_selection_is_fifo_across_keys():

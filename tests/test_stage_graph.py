@@ -1,0 +1,274 @@
+"""Stage graph: composition signature validation, the k-windowed spectrum
+path's conformance contract, and the windowed planner/serving routing.
+
+The windowed contract, per composition (see docs/ARCHITECTURE.md):
+
+* ``eei_dense_windowed`` — the components stage evaluates only the selected
+  rows (prod_diff I-axis = k) with the gap floor and Cauchy denominator
+  taken from the full spectrum exactly as the full path takes them, so
+  windowed ``topk`` is **bitwise-equal** to the full-spectrum result.
+* ``eei_tridiag_windowed`` — the spectrum stage bisects only the k
+  index-targeted brackets (**bitwise-equal** eigenvalues: bisection lanes
+  are independent) and the components stage evaluates minor determinants
+  by the ratio recurrence instead of products over minor spectra — same
+  mathematics, different (and better-conditioned) arithmetic, so vectors
+  agree to tolerance rather than bitwise.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.engine import (
+    Composition,
+    SolverEngine,
+    SolverPlan,
+    StageSig,
+    available_compositions,
+    composition_for,
+    get_backend,
+    get_composition,
+    plan_for,
+)
+
+BACKENDS = ["reference", "jnp", "pallas"]
+
+
+def _stack(seed: int, b: int, n: int, dtype=np.float64) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((b, n, n)).astype(dtype)
+    return jnp.asarray((a + np.swapaxes(a, 1, 2)) / 2)
+
+
+def _plans(method: str, backend: str):
+    full = SolverPlan(method=method, backend=backend, spectrum="full")
+    win = SolverPlan(method=method, backend=backend, spectrum="windowed")
+    return full, win
+
+
+# ---------------------------------------------------------------------------
+# Composition / registry contracts
+# ---------------------------------------------------------------------------
+
+
+def test_every_registered_composition_validates():
+    """Every registered composition must declare compatible stage
+    signatures: each stage's requires satisfied upstream, roles in order,
+    and the chain ending in the program kind's outputs."""
+    names = available_compositions()
+    assert {"eigh", "eei_dense", "eei_dense_windowed", "eei_tridiag",
+            "eei_tridiag_windowed"} <= set(names)
+    for name in names:
+        get_composition(name).validate()  # raises on any signature break
+
+
+def test_composition_validation_rejects_incompatible_signatures():
+    broken = Composition(
+        name="broken", method="eei_tridiag", windowed=False,
+        topk=(
+            # components requires lam/mu that nothing provides
+            StageSig("components", "eei_full", ("lam", "mu"), ("mags",)),
+            StageSig("recover", "tridiag_signs",
+                     ("d", "e", "q", "lam_sel", "mag_sel"), ("vecs",)),
+        ))
+    with pytest.raises(ValueError, match="requires"):
+        broken.validate()
+    out_of_order = Composition(
+        name="disorder", method="eei_tridiag", windowed=False,
+        topk=(
+            StageSig("spectrum", "eigh", ("a",), ("lam", "v")),
+            StageSig("reduce", "householder", ("a",), ("d", "e", "q")),
+            StageSig("recover", "eigh_topk", ("lam", "v", "idx"),
+                     ("lam_sel", "vecs")),
+        ))
+    with pytest.raises(ValueError, match="out of order"):
+        out_of_order.validate()
+    no_output = Composition(
+        name="dangling", method="eei_tridiag", windowed=False,
+        topk=(StageSig("spectrum", "eigh", ("a",), ("lam", "v")),))
+    with pytest.raises(ValueError, match="final state"):
+        no_output.validate()
+
+
+def test_windowed_tridiag_composition_skips_minor_spectra():
+    """The windowed payoff is structural: the chain simply has no
+    minor-spectra stage (its components stage evaluates the minor
+    determinants directly), where the full chain must compute all b*n
+    minor spectra."""
+    full = composition_for("eei_tridiag", False)
+    win = composition_for("eei_tridiag", True)
+    assert any(s.role == "minor_spectra" for s in full.topk)
+    assert not any(s.role == "minor_spectra" for s in win.topk)
+    assert win.solve is None  # full tables always run the full composition
+    # eigh has nothing to window: the windowed lookup falls back.
+    assert composition_for("eigh", True).name == "eigh"
+
+
+def test_stage_library_is_open_and_errors_informatively():
+    lib = get_backend(SolverPlan(backend="jnp"))
+    assert lib.name == "jnp"
+    assert "tridiag_eigenvalues_windowed" in lib.stage_names()
+    with pytest.raises(AttributeError, match="no stage 'nope'"):
+        lib.nope
+    marker = object()
+    extended = lib.extended(custom_stage=lambda: marker)
+    assert extended.custom_stage() is marker
+    assert "custom_stage" not in lib.stage_names()  # original untouched
+
+
+# ---------------------------------------------------------------------------
+# Windowed-vs-full conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("k,largest", [(1, True), (3, False), (4, True)])
+def test_windowed_dense_topk_bitwise_equals_full(backend, k, largest):
+    a = _stack(0, 3, 18)
+    full, win = _plans("eei_dense", backend)
+    tf = SolverEngine(full).topk(a, k, largest)
+    tw = SolverEngine(win).topk(a, k, largest)
+    np.testing.assert_array_equal(np.asarray(tf.eigenvalues),
+                                  np.asarray(tw.eigenvalues))
+    np.testing.assert_array_equal(np.asarray(tf.vectors),
+                                  np.asarray(tw.vectors))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("k,largest", [(1, True), (3, False), (4, True)])
+def test_windowed_tridiag_topk_matches_full(backend, k, largest):
+    """Windowed eigenvalues are bitwise; vectors agree to f64 tolerance
+    (the recurrence components stage is different — better-conditioned —
+    arithmetic for the same products) and satisfy the eigen-residual."""
+    a = _stack(1, 3, 18)
+    full, win = _plans("eei_tridiag", backend)
+    tf = SolverEngine(full).topk(a, k, largest)
+    tw = SolverEngine(win).topk(a, k, largest)
+    np.testing.assert_array_equal(np.asarray(tf.eigenvalues),
+                                  np.asarray(tw.eigenvalues))
+    vf, vw = np.asarray(tf.vectors), np.asarray(tw.vectors)
+    err = np.minimum(np.abs(vw - vf), np.abs(vw + vf)).max()
+    assert err < 1e-7, err
+    res = jnp.einsum("bij,bkj->bki", a, tw.vectors) \
+        - tw.eigenvalues[..., None] * tw.vectors
+    assert float(jnp.abs(res).max()) < 1e-7
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_windowed_eigenvalues_bitwise(backend):
+    """eigenvalues(k=...) runs k index-targeted bisection lanes and must be
+    bitwise-equal to the matching slice of the full spectrum."""
+    a = _stack(2, 3, 17)
+    for method in ("eei_dense", "eei_tridiag"):
+        eng = SolverEngine(SolverPlan(method=method, backend=backend))
+        lam = eng.eigenvalues(a)
+        for k, largest in [(1, True), (2, False), (5, True)]:
+            win = eng.eigenvalues(a, k=k, largest=largest)
+            ref = lam[:, -k:] if largest else lam[:, :k]
+            np.testing.assert_array_equal(np.asarray(win), np.asarray(ref))
+
+
+def test_windowed_sharded_matches_jnp():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    a = _stack(3, 4, 16)
+    plan = SolverPlan(method="eei_tridiag", backend="sharded", mesh=mesh,
+                      spectrum="windowed")
+    t_sh = SolverEngine(plan).topk(a, 2)
+    t_jnp = SolverEngine(SolverPlan(
+        method="eei_tridiag", backend="jnp", spectrum="windowed")).topk(a, 2)
+    np.testing.assert_allclose(np.asarray(t_sh.eigenvalues),
+                               np.asarray(t_jnp.eigenvalues),
+                               rtol=1e-12, atol=1e-12)
+    ev = SolverEngine(plan).eigenvalues(a, k=2)
+    assert ev.shape == (4, 2)
+
+
+# One property case: (n, k_raw, largest, backend index, seed).
+_CASE = st.tuples(st.integers(3, 14), st.integers(0, 3), st.booleans(),
+                  st.integers(0, len(BACKENDS) - 1), st.integers(0, 999))
+
+
+@settings(max_examples=8, deadline=None)
+@given(case=_CASE)
+def test_property_windowed_topk_conforms_to_full_oracle(case):
+    """Hypothesis property over random (n, k, largest) x backend: the
+    windowed composition's topk against the full-spectrum
+    ``SolverEngine.topk`` oracle — eigenvalues bitwise on both methods,
+    dense vectors bitwise, tridiag vectors to f64 tolerance."""
+    n, k_raw, largest, backend_i, seed = case
+    k = 1 + k_raw % n
+    backend = BACKENDS[backend_i]
+    a = _stack(seed, 2, n)
+    for method, bitwise_vecs in (("eei_dense", True), ("eei_tridiag", False)):
+        full, win = _plans(method, backend)
+        tf = SolverEngine(full).topk(a, k, largest)
+        tw = SolverEngine(win).topk(a, k, largest)
+        np.testing.assert_array_equal(np.asarray(tf.eigenvalues),
+                                      np.asarray(tw.eigenvalues))
+        vf, vw = np.asarray(tf.vectors), np.asarray(tw.vectors)
+        if bitwise_vecs:
+            np.testing.assert_array_equal(vf, vw)
+        else:
+            err = np.minimum(np.abs(vw - vf), np.abs(vw + vf)).max()
+            assert err < 1e-6, (n, k, largest, backend, err)
+
+
+# ---------------------------------------------------------------------------
+# Planner + serving routing
+# ---------------------------------------------------------------------------
+
+
+def test_planner_windows_topk_from_calibrated_k_frac():
+    from repro.engine import CalibrationTable, set_table
+
+    try:
+        set_table(CalibrationTable(
+            eigh_crossover_n=4, dense_crossover_n=8,
+            prod_diff_blocks=(32, 32, 32), sturm_blocks=(8, 64),
+            windowed_k_frac=0.25))
+        # k/n <= 0.25 -> windowed; above -> full; no k -> full.
+        assert plan_for((32, 32), k=8).spectrum == "windowed"
+        assert plan_for((32, 32), k=9).spectrum == "full"
+        assert plan_for((32, 32)).spectrum == "full"
+        # k >= n routes to eigh, which has nothing to window.
+        assert plan_for((32, 32), k=32).method == "eigh"
+        assert plan_for((32, 32), k=32).spectrum == "full"
+        # explicit override wins over the crossover
+        assert plan_for((32, 32), k=16,
+                        spectrum="windowed").spectrum == "windowed"
+    finally:
+        set_table(None)
+
+
+def test_server_stream_through_windowed_plan_is_conformant():
+    """The acceptance stream: top-k requests served through the windowed
+    composition must be bitwise-equal to the same-plan SolverEngine oracle
+    replayed on every recorded dispatch, and (at k=1) carry bitwise the
+    same eigenvalues as the full-spectrum plan's serving path."""
+    from repro.engine import EeiServer
+
+    rng = np.random.default_rng(7)
+    stream = [((lambda x: ((x + x.T) / 2).astype(np.float32))(
+        rng.standard_normal((12, 12))), 1) for _ in range(6)]
+    results = {}
+    for spectrum in ("full", "windowed"):
+        plan = SolverPlan(method="eei_tridiag", backend="jnp",
+                          spectrum=spectrum)
+        server = EeiServer(plan, max_batch=4, record_dispatches=True)
+        futs = [server.submit(a, k) for a, k in stream]
+        server.flush()
+        results[spectrum] = [f.result() for f in futs]
+        for rec in server.dispatch_log:  # same-plan oracle, bitwise
+            ref = SolverEngine(rec.plan).topk(
+                jnp.asarray(rec.stack), rec.bucket.k, rec.bucket.largest)
+            lam = np.asarray(ref.eigenvalues)
+            for row, req in enumerate(rec.requests):
+                np.testing.assert_array_equal(
+                    req.future.result().eigenvalues, lam[row, -req.k:])
+    for rf, rw in zip(results["full"], results["windowed"]):
+        np.testing.assert_array_equal(rf.eigenvalues, rw.eigenvalues)
