@@ -106,6 +106,17 @@ def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
                 dd, ee, k, largest),
             (2, 2), 2)(d, e)
 
+    def krylov_reduce(a, k, largest):
+        # Batch-parallel like every other stage: each device runs the
+        # Lanczos loop on its slice of the stack (k/largest static).
+        return shard(lambda x: inner.krylov_reduce(x, k, largest),
+                     (3,), (2, 2, 3))(a)
+
+    def krylov_shift_invert_reduce(a, k, largest):
+        return shard(
+            lambda x: inner.krylov_shift_invert_reduce(x, k, largest),
+            (3,), (2, 2, 3, 1))(a)
+
     return StageLibrary("sharded", {
         "tridiagonalize": tridiagonalize,
         "tridiag_eigenvalues": shard(inner.tridiag_eigenvalues, (2, 2), 2),
@@ -121,6 +132,8 @@ def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
             inner.minor_det_components, (2, 2, 2), 3),
         "tridiag_signs": shard(inner.tridiag_signs, (2, 2, 2, 3), 3),
         "dense_signs": shard(inner.dense_signs, (3, 2, 3), 3),
+        "krylov_reduce": krylov_reduce,
+        "krylov_shift_invert_reduce": krylov_shift_invert_reduce,
     })
 
 

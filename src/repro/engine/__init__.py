@@ -25,6 +25,7 @@ from repro.engine.plan import (  # noqa: F401
     Spectrum,
     plan_for,
     resolved_crossovers,
+    resolved_krylov_n_min,
     resolved_windowed_k_frac,
 )
 from repro.engine.registry import (  # noqa: F401

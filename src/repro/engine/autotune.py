@@ -49,11 +49,14 @@ REPO_DEFAULT_PATH = Path(__file__).with_name("calibration_default.json")
 #: v2 (PR 3) adds the batch tile ``prod_diff_block_b`` and pallas-backend
 #: crossover measurements.  v3 (PR 5) adds ``windowed_k_frac`` — the
 #: measured ``k / n`` fraction at/below which the planner routes top-k
-#: queries through the windowed stage composition.  Older tables still load
-#: (warn once per process + defaults for the missing fields): a v2 table
-#: plans windows from the static ``plan.WINDOWED_K_FRAC`` fallback exactly
-#: like an uncalibrated host.
-_SCHEMA_VERSION = 3
+#: queries through the windowed stage composition.  v4 (PR 6) adds
+#: ``krylov_n_min`` — the measured ``n`` at/above which the Lanczos partial
+#: reduce beats the dense Householder reduce for narrow top-k windows.
+#: Older tables still load (warn once per process + defaults for the
+#: missing fields): a v2 table plans windows from the static
+#: ``plan.WINDOWED_K_FRAC`` fallback exactly like an uncalibrated host, a
+#: v3 table routes Krylov from the static ``plan.KRYLOV_N_MIN``.
+_SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +71,8 @@ class CalibrationTable:
     pallas_eigh_crossover_n: Optional[int] = None  # None -> use jnp value
     pallas_dense_crossover_n: Optional[int] = None  # None -> use jnp value
     windowed_k_frac: float = WINDOWED_K_FRAC  # k/n below which windowed wins
+    krylov_n_min: Optional[int] = None  # n at which krylov reduce wins;
+    # None -> the static plan.KRYLOV_N_MIN fallback (pre-v4 tables)
     host: str = ""  # host class the numbers were measured on
     backend: str = ""  # jax backend (cpu | tpu | gpu) at measurement
     measured_at: str = ""  # ISO timestamp, empty for hand-written tables
@@ -127,6 +132,7 @@ class CalibrationTable:
             pallas_dense_crossover_n=_opt_int("pallas_dense_crossover_n"),
             windowed_k_frac=float(
                 d.get("windowed_k_frac", WINDOWED_K_FRAC)),
+            krylov_n_min=_opt_int("krylov_n_min"),
             host=str(d.get("host", "")),
             backend=str(d.get("backend", "")),
             measured_at=str(d.get("measured_at", "")),
@@ -193,7 +199,19 @@ def load_table(path: Optional[os.PathLike] = None) -> Optional[CalibrationTable]
             raise ValueError(f"malformed calibration table {cand}: {exc}")
         if (not explicit and table.backend
                 and table.backend != jax.default_backend()):
-            continue  # measured on a different host class
+            # Measured on a different host class — skipping is correct
+            # (a CPU-measured table must not govern TPU planning), but a
+            # silent skip reads as "calibrated" when the planner is in
+            # fact running on static fallbacks.  Say so, once per source.
+            _warn_once(
+                (source, "backend-mismatch", table.backend),
+                "calibration table %s was measured on backend %r but this "
+                "process runs %r; skipping it (planning falls back to the "
+                "next candidate or the static constants) — re-run "
+                "`python -m repro.engine.autotune` on this host to "
+                "calibrate it",
+                source, table.backend, jax.default_backend())
+            continue
         return table
     return None
 
@@ -360,6 +378,43 @@ def _measure_windowed_crossover(
     return frac
 
 
+#: ``krylov_n_min`` recorded when the Krylov reduce never won the sweep —
+#: far above any real n, so the planner never routes through it (mirrors
+#: the sizes[-1] convention of the method-crossover sweep, which cannot be
+#: reused verbatim here because the krylov sweep stops at CI-sized n while
+#: the true crossover may sit well past it).
+KRYLOV_NEVER = 1 << 30
+
+
+def _measure_krylov_crossover(
+    sizes: Sequence[int], k: int, batch: int, backend: str = "jnp"
+) -> int:
+    """Smallest swept ``n`` where the Krylov reduce beats dense Householder
+    on a windowed batched topk, or :data:`KRYLOV_NEVER` if it never does.
+
+    The Lanczos band is O(n^2 m) against the dense reduce's O(n^3), so the
+    win is monotone in n for fixed k — the first winning size is the
+    crossover.  The sweep keeps ``k`` fixed (the planner additionally
+    requires ``k <= n/16``, which bounds the band width relative to n).
+    """
+    from repro.engine.engine import SolverEngine
+    from repro.engine.plan import SolverPlan
+
+    for n in sizes:
+        if not 0 < k < n:
+            continue
+        a = _sym_stack(batch, n)
+        dense = SolverEngine(SolverPlan(
+            method="eei_tridiag", backend=backend, spectrum="windowed"))
+        krylov = SolverEngine(SolverPlan(method="eei_krylov",
+                                         backend=backend))
+        t_dense = _time(lambda eng=dense, a=a: eng.topk(a, k))
+        t_krylov = _time(lambda eng=krylov, a=a: eng.topk(a, k))
+        if t_krylov < t_dense:
+            return n
+    return KRYLOV_NEVER
+
+
 def calibrate(
     *,
     smoke: bool = False,
@@ -377,6 +432,7 @@ def calibrate(
         st_candidates = [(8, 64), (8, 128)]
         bench_b, bench_n = 8, 32
         win_n, win_ks = 32, (1, 4, 16, 32)
+        krylov_sizes, krylov_k, krylov_b = [64, 128], 4, 2
     else:
         sizes = [8, 16, 24, 32, 48, 64, 96, 128]
         win_n, win_ks = 64, (1, 2, 4, 8, 16, 32, 64)
@@ -390,6 +446,7 @@ def calibrate(
         ]
         st_candidates = [(4, 128), (8, 64), (8, 128), (16, 128), (8, 256)]
         bench_b, bench_n = 64, 64
+        krylov_sizes, krylov_k, krylov_b = [256, 512, 1024], 8, 2
     eigh_x, dense_x = _measure_crossovers(sizes, k=k, batch=batch,
                                           backend="jnp")
     # The planner's accelerator default is the pallas backend — time its
@@ -399,6 +456,8 @@ def calibrate(
     pd_blocks = _sweep_prod_diff_blocks(bench_b, bench_n, pd_candidates)
     st_blocks = _sweep_sturm_blocks(bench_b * bench_n, bench_n, st_candidates)
     windowed_frac = _measure_windowed_crossover(win_n, batch, win_ks)
+    krylov_n_min = _measure_krylov_crossover(
+        krylov_sizes, k=krylov_k, batch=krylov_b)
     return CalibrationTable(
         eigh_crossover_n=int(eigh_x),
         dense_crossover_n=int(dense_x),
@@ -408,6 +467,7 @@ def calibrate(
         pallas_eigh_crossover_n=int(pallas_eigh_x),
         pallas_dense_crossover_n=int(pallas_dense_x),
         windowed_k_frac=float(windowed_frac),
+        krylov_n_min=int(krylov_n_min),
         host=host_key(),
         backend=jax.default_backend(),
         measured_at=time.strftime("%Y-%m-%dT%H:%M:%S"),

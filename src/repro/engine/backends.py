@@ -33,6 +33,14 @@ the engine's graph executors run:
                           brackets) -> minor-determinant components (ratio
                           recurrence, O(n k): no minor-spectra stage at
                           all) -> recurrence signs
+    eei_krylov            Lanczos partial band (m ~ 16k << n) -> the same
+                          windowed Sturm / minor-det / signs chain on the
+                          m-band; components return to the dense basis
+                          through the partial Q (topk / eigenvalues only —
+                          a partial basis has no full-table solve)
+    eei_krylov_si         as eei_krylov on (A - sigma I)^{-1} via one
+                          batched LU; a final map stage undoes
+                          theta = 1/(lambda - sigma)
 """
 
 from __future__ import annotations
@@ -95,6 +103,31 @@ def _minor_det_components(d, e, lam_sel):
     return identity.tridiag_windowed_magnitudes_batched(d, e, lam_sel)
 
 
+def _make_krylov_stages(plan: SolverPlan):
+    """The two Krylov reduce stages, closing over the plan's band override.
+
+    Shared verbatim by the reference / jnp / pallas libraries: the Lanczos
+    loop is a sequential ``while_loop`` of dense matvecs — XLA already fuses
+    it well, and there is no tile-level parallelism for a kernel to exploit
+    (the same rationale as the minor-determinant recurrence below).
+    """
+    from repro.linalg import lanczos
+
+    m = plan.krylov_m
+
+    def krylov_reduce(a, k, largest):
+        return lanczos.krylov_reduce_batched(a, int(k), bool(largest), m)
+
+    def krylov_shift_invert_reduce(a, k, largest):
+        return lanczos.krylov_shift_invert_reduce_batched(
+            a, int(k), bool(largest), m)
+
+    return {
+        "krylov_reduce": krylov_reduce,
+        "krylov_shift_invert_reduce": krylov_shift_invert_reduce,
+    }
+
+
 # ---------------------------------------------------------------------------
 # reference / jnp
 # ---------------------------------------------------------------------------
@@ -135,6 +168,7 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
         "tridiag_signs": _tridiag_signs,
         "dense_signs": (
             _dense_signs_reference if name == "reference" else _dense_signs),
+        **_make_krylov_stages(plan),
     })
 
 
@@ -206,6 +240,7 @@ def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
         "minor_det_components": _minor_det_components,
         "tridiag_signs": _tridiag_signs,
         "dense_signs": _dense_signs,
+        **_make_krylov_stages(plan),
     })
 
 
@@ -250,6 +285,27 @@ _REC_TRI_SOLVE = StageSig(
     "recover", "tridiag_solve", ("d", "e", "q", "lam", "mags"), ("mags",))
 _REC_DENSE = StageSig(
     "recover", "dense_signs", ("a", "lam_sel", "mag_sel"), ("vecs",))
+# Krylov reduce: a Lanczos band (d (b, m), e (b, m-1)) plus the partial
+# orthonormal basis q (b, n, m).  Every downstream tridiagonal stage is
+# band-size agnostic, so the windowed Sturm / minor-determinant / sign
+# chain runs on the m-band unchanged and the same back-transform through q
+# lifts band eigenvectors to the dense basis (q columns are the basis —
+# exactly Householder's convention with m = n).
+_REDUCE_KRYLOV = StageSig("reduce", "krylov", ("a",), ("d", "e", "q"))
+_REDUCE_KRYLOV_NOQ = StageSig("reduce", "krylov", ("a",), ("d", "e"))
+# Shift-and-invert: the band lives in theta = 1/(lambda - sigma) space and
+# the recover chain ends with a map stage undoing the transform.
+_REDUCE_SI = StageSig(
+    "reduce", "krylov_shift_invert", ("a",), ("d", "e", "q", "sigma"))
+_REDUCE_SI_NOQ = StageSig(
+    "reduce", "krylov_shift_invert", ("a",), ("d", "e", "sigma"))
+_SPEC_SI_WIN = StageSig(
+    "spectrum", "tridiag_windowed_si", ("d", "e"), ("lam_sel",))
+_MAP_SI = StageSig(
+    "recover", "shift_invert_map", ("sigma", "lam_sel", "vecs"),
+    ("lam_sel", "vecs"))
+_MAP_SI_EIG = StageSig(
+    "recover", "shift_invert_map", ("sigma", "lam_sel"), ("lam_sel",))
 
 
 def register_default_compositions() -> None:
@@ -286,6 +342,22 @@ def register_default_compositions() -> None:
         name="eei_tridiag_windowed", method="eei_tridiag", windowed=True,
         topk=(_REDUCE, _SPEC_TRI_WIN, _COMP_DET, _REC_TRI),
         eigenvalues=(_REDUCE_NOQ, _SPEC_TRI_WIN),
+    ))
+    # Krylov: the Lanczos partial band replaces Householder; everything
+    # after the reduce is the *same* windowed chain (the stages are
+    # band-size agnostic and the back-transform through q is shared).
+    # There is no full-table solve — a partial basis cannot produce every
+    # row by construction, so SolverEngine.solve on a krylov plan raises
+    # the registry's "declares no 'solve' chain" error.
+    register_composition(Composition(
+        name="eei_krylov", method="eei_krylov", windowed=False,
+        topk=(_REDUCE_KRYLOV, _SPEC_TRI_WIN, _COMP_DET, _REC_TRI),
+        eigenvalues=(_REDUCE_KRYLOV_NOQ, _SPEC_TRI_WIN),
+    ))
+    register_composition(Composition(
+        name="eei_krylov_si", method="eei_krylov_si", windowed=False,
+        topk=(_REDUCE_SI, _SPEC_SI_WIN, _COMP_DET, _REC_TRI, _MAP_SI),
+        eigenvalues=(_REDUCE_SI_NOQ, _SPEC_SI_WIN, _MAP_SI_EIG),
     ))
 
 

@@ -27,6 +27,13 @@ Compositions currently registered (see ``backends.py``):
                           (ratio recurrence, no minor-spectra stage) ->
                           recurrence signs.  O(n^2 k + n^3-tridiagonalize)
                           instead of the full path's O(n^3 * iters).
+    eei_krylov[_si]       Lanczos partial band (m ~ 16k) -> the same
+                          windowed chain on the m-band -> back-transform
+                          through the partial Q.  O(n^2 m) reduce — the
+                          large-n top-k path.  The _si variant iterates on
+                          (A - sigma I)^{-1} and a final map stage undoes
+                          theta = 1/(lambda - sigma).  topk / eigenvalues
+                          only: a partial basis has no full-table solve.
 
 Jitted programs are cached per ``(plan, kind, k)``; the sharded backend's
 stack is padded up to a multiple of the mesh batch axis and sliced back.
@@ -135,8 +142,59 @@ def _b_tridiag_windowed(lib, plan, spec):
     k, largest = spec.k, spec.largest
 
     def fn(st):
+        # spec.k == 0 (full-eigenvalues program on a windowed chain) means
+        # "the whole band" — which on a Krylov reduce is the band size m,
+        # not n, so the width comes from the band itself.
         return {"lam_sel": lib.tridiag_eigenvalues_windowed(
-            st["d"], st["e"], k, largest)}
+            st["d"], st["e"], k or st["d"].shape[-1], largest)}
+
+    return fn
+
+
+def _b_krylov(lib, plan, spec):
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        d, e, q = lib.krylov_reduce(st["a"], k or st["a"].shape[-1], largest)
+        return {"d": d, "e": e, "q": q}
+
+    return fn
+
+
+def _b_krylov_si(lib, plan, spec):
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        d, e, q, sigma = lib.krylov_shift_invert_reduce(
+            st["a"], k or st["a"].shape[-1], largest)
+        return {"d": d, "e": e, "q": q, "sigma": sigma}
+
+    return fn
+
+
+def _b_tridiag_windowed_si(lib, plan, spec):
+    # The shift-and-invert band lives in theta = 1/(lambda - sigma) space,
+    # where the requested extreme of lambda is the *opposite* extreme of
+    # theta (sigma sits outside the spectrum on the requested side, so the
+    # map is order-reversing there) — hence `not largest`.
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        return {"lam_sel": lib.tridiag_eigenvalues_windowed(
+            st["d"], st["e"], k or st["d"].shape[-1], not largest)}
+
+    return fn
+
+
+def _b_shift_invert_map(lib, plan, spec):
+    def fn(st):
+        # theta ascending maps to lambda *descending* (1/x is decreasing on
+        # a sign-definite interval), so flip to restore ascending order.
+        lam = st["sigma"][..., None] + 1.0 / st["lam_sel"]
+        out = {"lam_sel": lam[..., ::-1]}
+        if "vecs" in st:
+            out["vecs"] = st["vecs"][..., ::-1, :]
+        return out
 
     return fn
 
@@ -210,10 +268,13 @@ def _b_dense_signs(lib, plan, spec):
 
 _STAGE_BUILDERS = {
     ("reduce", "householder"): _b_householder,
+    ("reduce", "krylov"): _b_krylov,
+    ("reduce", "krylov_shift_invert"): _b_krylov_si,
     ("spectrum", "eigh"): _b_eigh,
     ("spectrum", "dense_eigenvalues"): _b_dense_eigenvalues,
     ("spectrum", "tridiag_full"): _b_tridiag_full,
     ("spectrum", "tridiag_windowed"): _b_tridiag_windowed,
+    ("spectrum", "tridiag_windowed_si"): _b_tridiag_windowed_si,
     ("minor_spectra", "dense_minors"): _b_dense_minors,
     ("minor_spectra", "tridiag_minors"): _b_tridiag_minors,
     ("components", "eei_full"): _b_eei_full,
@@ -225,6 +286,7 @@ _STAGE_BUILDERS = {
     ("recover", "tridiag_signs"): _b_tridiag_signs,
     ("recover", "tridiag_solve"): _b_tridiag_solve,
     ("recover", "dense_signs"): _b_dense_signs,
+    ("recover", "shift_invert_map"): _b_shift_invert_map,
 }
 
 

@@ -29,7 +29,8 @@ from typing import Literal, Optional
 
 import jax
 
-Method = Literal["eigh", "eei_dense", "eei_tridiag"]
+Method = Literal[
+    "eigh", "eei_dense", "eei_tridiag", "eei_krylov", "eei_krylov_si"]
 BackendName = Literal["reference", "jnp", "pallas", "sharded"]
 Spectrum = Literal["full", "windowed"]
 
@@ -51,6 +52,34 @@ DENSE_CROSSOVER_N = 64
 #: chain does strictly less work, so the measured value normally sits at
 #: the top of the sweep.
 WINDOWED_K_FRAC = 0.5
+
+#: ``n`` at/above which a top-k query plans the Krylov (Lanczos partial
+#: tridiagonalization) reduce stage instead of the dense Householder reduce.
+#: Uncalibrated fallback — schema-v4 calibration tables carry the measured
+#: crossover (:func:`resolved_krylov_n_min`).  The Krylov band costs
+#: O(n^2 m) for m ~ 16k versus O(n^3) dense, so the crossover sits where
+#: m << n, i.e. large n with a narrow window.
+KRYLOV_N_MIN = 1024
+
+#: ``k / n`` at/below which the Krylov band (m ~ 16k) is meaningfully
+#: narrower than the matrix and the partial reduce can win.  Above this the
+#: band approaches n and dense Householder is strictly better.
+KRYLOV_K_FRAC = 1.0 / 16.0
+
+
+def resolved_krylov_n_min() -> int:
+    """The measured ``n`` at which the Krylov reduce starts winning here.
+
+    Reads the calibration table (see ``repro.engine.autotune``); the static
+    :data:`KRYLOV_N_MIN` fallback applies when no table resolves or the
+    table predates schema v4.
+    """
+    from repro.engine import autotune
+
+    table = autotune.get_table()
+    if table is None or table.krylov_n_min is None:
+        return KRYLOV_N_MIN
+    return table.krylov_n_min
 
 
 def resolved_windowed_k_frac() -> float:
@@ -101,9 +130,12 @@ class SolverPlan:
     precision: Optional[str] = None  # None -> keep input dtype
     bisect_iters: int = 0  # 0 -> dtype default
     max_batch: int = 0  # 0 -> solve the whole stack in one program
+    krylov_m: int = 0  # Krylov band size; 0 -> default_m(n, k) at trace time
 
     def __post_init__(self):
-        if self.method not in ("eigh", "eei_dense", "eei_tridiag"):
+        if self.method not in (
+                "eigh", "eei_dense", "eei_tridiag", "eei_krylov",
+                "eei_krylov_si"):
             raise ValueError(f"unknown method {self.method!r}")
         if self.backend not in ("reference", "jnp", "pallas", "sharded"):
             raise ValueError(f"unknown backend {self.backend!r}")
@@ -157,6 +189,10 @@ def plan_for(
       composition — top-k programs then compute only the selected extremal
       rows instead of the full spectrum table
       (:func:`resolved_windowed_k_frac`; ``spectrum`` overrides);
+    * a *narrow* window on a *large* matrix (``k <= n/16`` and ``n`` past
+      the measured :func:`resolved_krylov_n_min` crossover) swaps the dense
+      Householder reduce for the Krylov (Lanczos) partial band — the whole
+      downstream chain is band-size agnostic, so only the reduce changes;
     * a mesh with >1 device along its batch axis picks the sharded backend
       whenever the stack puts at least one matrix on every device —
       divisibility is *not* required, because both ``SolverEngine._run_chunk``
@@ -191,6 +227,15 @@ def plan_for(
             method = "eei_dense"
         else:
             method = "eei_tridiag"
+        # Narrow top-k window on a large matrix: replace the dense O(n^3)
+        # Householder reduce with the Lanczos partial band (O(n^2 m),
+        # m ~ 16k).  Only for genuinely narrow windows — the band must be
+        # much smaller than n — and past the measured size crossover.
+        # Shift-and-invert ("eei_krylov_si") is never planned implicitly;
+        # it is an explicit choice for clustered-spectrum matrices.
+        if (method == "eei_tridiag" and k is not None and 0 < k < n
+                and k <= KRYLOV_K_FRAC * n and n >= resolved_krylov_n_min()):
+            method = "eei_krylov"
 
     if spectrum is None:
         spectrum = "full"

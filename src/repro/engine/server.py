@@ -385,6 +385,14 @@ class EeiServer:
         self.requests_rejected = 0  # late submits after close()
         self.requests_cancelled = 0  # caller-cancelled while still pending
         self.stacks_dispatched = 0
+        # Pad-waste accounting: every dispatched grid cell (b * n^2 per
+        # stack) versus the cells carrying real request data (sum of the
+        # group's n_i^2).  The complement is what guard diagonals and
+        # batch-repeat padding burn — the measurement the ROADMAP's
+        # "packed ragged dispatch" item needs before it can claim a win.
+        self.grid_cells_total = 0
+        self.grid_cells_real = 0
+        self._pad_cells_by_bucket: dict = {}  # bucket -> [real, total]
         self.latencies_ms: list = []
 
         # Snapshot the mode: _threaded must not flip if a caller mutates
@@ -576,6 +584,13 @@ class EeiServer:
         with self._cv:
             self._inflight.append(_InflightStack(result, list(group), bucket))
             self.stacks_dispatched += 1
+            total = bucket.b * bucket.n * bucket.n
+            real = sum(req.n * req.n for req in group)
+            self.grid_cells_total += total
+            self.grid_cells_real += real
+            cells = self._pad_cells_by_bucket.setdefault(bucket, [0, 0])
+            cells[0] += real
+            cells[1] += total
             if self.record_dispatches:
                 self.dispatch_log.append(DispatchRecord(
                     bucket=bucket, plan=plan, stack=stack,
@@ -900,6 +915,9 @@ class EeiServer:
             self.requests_rejected = 0
             self.requests_cancelled = 0
             self.stacks_dispatched = 0
+            self.grid_cells_total = 0
+            self.grid_cells_real = 0
+            self._pad_cells_by_bucket = {}
             self.latencies_ms = []
             self.dispatch_log = []
         self.cache.reset_counters()
@@ -915,6 +933,16 @@ class EeiServer:
                 "requests_cancelled": self.requests_cancelled,
                 "requests_pending": self._pending,
                 "stacks_dispatched": self.stacks_dispatched,
+                "grid_cells_total": self.grid_cells_total,
+                "grid_cells_real": self.grid_cells_real,
+                "pad_waste_frac": (
+                    1.0 - self.grid_cells_real / self.grid_cells_total
+                    if self.grid_cells_total else 0.0),
+                "pad_waste_by_bucket": {
+                    f"b{bk.b}n{bk.n}k{bk.k}" + ("L" if bk.largest else "S"):
+                        round(1.0 - real / total, 6) if total else 0.0
+                    for bk, (real, total)
+                    in sorted(self._pad_cells_by_bucket.items())},
             }
 
         def pct(p):

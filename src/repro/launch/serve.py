@@ -158,6 +158,13 @@ def serve_eei(args):
              stats["p50_latency_ms"], stats["p99_latency_ms"],
              stats["stacks_dispatched"], stats["program_compiles"],
              stats["distinct_buckets"], stats["program_hits"])
+    per_bucket = ", ".join(
+        f"{name}={frac:.3f}"
+        for name, frac in sorted(stats["pad_waste_by_bucket"].items()))
+    log.info("pad waste %.3f (%d of %d grid cells padding) | per bucket: %s",
+             stats["pad_waste_frac"],
+             stats["grid_cells_total"] - stats["grid_cells_real"],
+             stats["grid_cells_total"], per_bucket or "none")
     return futures[-1].result()
 
 

@@ -14,7 +14,18 @@ from repro.linalg.sturm import (
     bisect_eigenvalues_windowed,
     bisect_eigenvalues_windowed_batched,
 )
-from repro.linalg.interlace import interlacing_holds
+from repro.linalg.interlace import interlacing_holds, ritz_interlacing_holds
+from repro.linalg.lanczos import (
+    LanczosResult,
+    default_m,
+    default_si_m,
+    lanczos_partial,
+    krylov_reduce,
+    krylov_reduce_batched,
+    krylov_shift_invert_reduce,
+    krylov_shift_invert_reduce_batched,
+    shift_invert_sigma,
+)
 
 __all__ = [
     "tridiagonalize",
@@ -26,4 +37,14 @@ __all__ = [
     "bisect_eigenvalues_windowed",
     "bisect_eigenvalues_windowed_batched",
     "interlacing_holds",
+    "ritz_interlacing_holds",
+    "LanczosResult",
+    "default_m",
+    "default_si_m",
+    "lanczos_partial",
+    "krylov_reduce",
+    "krylov_reduce_batched",
+    "krylov_shift_invert_reduce",
+    "krylov_shift_invert_reduce_batched",
+    "shift_invert_sigma",
 ]

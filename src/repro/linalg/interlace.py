@@ -26,3 +26,25 @@ def interlacing_holds(lam, mu, rtol: float = 1e-6) -> jnp.ndarray:
 def interlacing_brackets(lam):
     """Per-index bisection brackets ``(lo, hi)`` for a minor's spectrum."""
     return lam[:-1], lam[1:]
+
+
+def ritz_interlacing_holds(lam, theta, rtol: float = 1e-6) -> jnp.ndarray:
+    """Boolean scalar: do the Ritz values ``theta`` (size m) satisfy the
+    Poincare separation bounds against the full spectrum ``lam`` (size n)?
+
+    For any orthonormal ``Q (n, m)`` the eigenvalues of ``Q^T A Q`` obey
+    ``lam[i] <= theta[i] <= lam[i + n - m]`` — the rank-(n-m) generalization
+    of the principal-minor Cauchy interlacing above (which is the m = n-1
+    case).  Lanczos bands must satisfy this exactly (up to roundoff) when
+    the basis stays orthonormal; ghost Ritz values from lost orthogonality
+    violate it.
+    """
+    lam = jnp.sort(lam)
+    theta = jnp.sort(theta)
+    n = lam.shape[-1]
+    m = theta.shape[-1]
+    scale = jnp.maximum(jnp.abs(lam[-1]), jnp.abs(lam[0])) + 1e-30
+    tol = rtol * scale
+    lower_ok = jnp.all(theta >= lam[:m] - tol)
+    upper_ok = jnp.all(theta <= lam[n - m:] + tol)
+    return jnp.logical_and(lower_ok, upper_ok)

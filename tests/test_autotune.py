@@ -1,6 +1,6 @@
-"""Calibration-table schema: v3 round-trip, v1/v2 warn-once-and-fallback,
-and the backend-specific crossover + windowed-k-frac resolution the planner
-dispatches on."""
+"""Calibration-table schema: v4 round-trip, v1/v2/v3 warn-once-and-fallback,
+the backend-mismatch skip warning, and the backend-specific crossover +
+windowed-k-frac + krylov-n-min resolution the planner dispatches on."""
 
 import json
 import logging
@@ -14,9 +14,10 @@ from repro.engine.plan import WINDOWED_K_FRAC
 
 PR2_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr2.json"
 PR3_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr3.json"
+PR5_DEFAULT = Path(__file__).parent / "data" / "calibration_default_pr5.json"
 
 
-def _v3_table() -> CalibrationTable:
+def _full_table() -> CalibrationTable:
     return CalibrationTable(
         eigh_crossover_n=24, dense_crossover_n=48,
         prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
@@ -26,12 +27,12 @@ def _v3_table() -> CalibrationTable:
         host="test", backend="cpu")
 
 
-def test_v3_round_trip(tmp_path):
-    table = _v3_table()
+def test_current_schema_round_trip(tmp_path):
+    table = _full_table()
     path = table.save(tmp_path / "cal.json")
     loaded = load_table(path)
     d = json.loads(path.read_text())
-    assert d["schema_version"] == 3
+    assert d["schema_version"] == autotune._SCHEMA_VERSION
     assert loaded.prod_diff_block_b == 4
     assert loaded.pallas_eigh_crossover_n == 16
     assert loaded.windowed_k_frac == 0.25
@@ -99,9 +100,66 @@ def test_pr2_checked_in_default_still_loads():
     assert table.windowed_k_frac == WINDOWED_K_FRAC
 
 
+def test_v4_round_trip_carries_krylov_n_min(tmp_path):
+    table = CalibrationTable(
+        eigh_crossover_n=24, dense_crossover_n=48,
+        prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
+        windowed_k_frac=0.5, krylov_n_min=512,
+        host="test", backend="cpu")
+    path = table.save(tmp_path / "cal.json")
+    d = json.loads(path.read_text())
+    assert d["schema_version"] == 4
+    assert d["krylov_n_min"] == 512
+    assert load_table(path).krylov_n_min == 512
+
+
+def test_v3_table_loads_without_krylov_n_min_and_warns(tmp_path, caplog):
+    """A v3 (PR-5) table predates ``krylov_n_min``: it must load with the
+    field as None (planner then uses the static ``plan.KRYLOV_N_MIN``
+    fallback) and warn once about the stale schema."""
+    v3 = json.loads(PR5_DEFAULT.read_text())
+    assert v3["schema_version"] == 3
+    assert "krylov_n_min" not in v3
+    path = tmp_path / "v3.json"
+    path.write_text(json.dumps(v3))
+    autotune._WARNED.discard((f"file:{path}", 3))
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        table = load_table(path)
+    assert "schema_version 3" in caplog.text
+    assert table.krylov_n_min is None
+    assert table.windowed_k_frac == v3["windowed_k_frac"]
+
+
+def test_chain_candidate_with_mismatched_backend_warns_not_silent(
+        tmp_path, caplog, monkeypatch):
+    """A user-cache/repo-default table measured on another backend is
+    (correctly) skipped — but the skip must announce itself once, not leave
+    the planner silently running on static fallbacks."""
+    other = "tpu" if autotune.jax.default_backend() != "tpu" else "cpu"
+    stale = CalibrationTable(
+        eigh_crossover_n=24, dense_crossover_n=48,
+        prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
+        host="elsewhere", backend=other)
+    cache = tmp_path / "calibration.json"
+    stale.save(cache)
+    monkeypatch.delenv(autotune.CALIBRATION_ENV, raising=False)
+    monkeypatch.setattr(autotune, "CACHE_PATH", cache)
+    monkeypatch.setattr(autotune, "REPO_DEFAULT_PATH",
+                        tmp_path / "missing.json")
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        assert load_table() is None  # skipped, nothing else resolves
+        load_table()  # second resolution: warning already emitted
+    skips = [r for r in caplog.records
+             if "measured on backend" in r.getMessage()]
+    assert len(skips) == 1, [r.getMessage() for r in skips]
+    assert f"backend {other!r}" in skips[0].getMessage()
+    # An *explicit* path is trusted verbatim — no skip, no warning.
+    assert load_table(cache).backend == other
+
+
 def test_newer_schema_still_rejected(tmp_path):
     path = tmp_path / "future.json"
-    d = _v3_table().to_dict()
+    d = _full_table().to_dict()
     d["schema_version"] = 99
     path.write_text(json.dumps(d))
     with pytest.raises(ValueError, match="newer"):
@@ -117,6 +175,7 @@ def test_repo_default_is_current_schema():
     assert table.pallas_eigh_crossover_n is not None
     assert "windowed_k_frac" in d
     assert 0.0 <= table.windowed_k_frac <= 1.0
+    assert table.krylov_n_min is not None and table.krylov_n_min >= 1
 
 
 def test_planner_uses_backend_specific_crossovers():

@@ -245,6 +245,36 @@ def test_program_cache_counters():
     assert cache.compiles == 2 and len(cache) == 2
 
 
+def test_pad_waste_accounting_exact():
+    """``pad_waste_frac`` counts exactly the grid cells the bucket padded
+    on top of the requests' own ``n*n`` work, cumulatively and per bucket:
+    an aligned full group wastes 0, an unaligned partial group wastes the
+    batch-fill rows plus the n-guard ring."""
+    rng = np.random.default_rng(7)
+    server = EeiServer(PLAN, max_batch=4)
+    futs = [server.submit(_sym(rng, 16), 2) for _ in range(4)]  # exact fit
+    futs += [server.submit(_sym(rng, 17), 2) for _ in range(3)]  # pads both
+    server.flush()
+    [f.result() for f in futs]
+    stats = server.stats()
+    # bucket 1: b=4, n=16 — zero padding.  bucket 2: 3 requests of n=17
+    # round to b=4, n=24 — one full batch-fill matrix + guard ring.
+    real = 4 * 16 * 16 + 3 * 17 * 17
+    total = 4 * 16 * 16 + 4 * 24 * 24
+    assert stats["grid_cells_real"] == real
+    assert stats["grid_cells_total"] == total
+    assert stats["pad_waste_frac"] == pytest.approx(1.0 - real / total)
+    per = stats["pad_waste_by_bucket"]
+    assert per["b4n16k2L"] == 0.0
+    assert per["b4n24k2L"] == pytest.approx(
+        1.0 - (3 * 17 * 17) / (4 * 24 * 24), abs=1e-6)
+    server.reset_stats()
+    stats = server.stats()
+    assert stats["grid_cells_total"] == 0
+    assert stats["pad_waste_frac"] == 0.0
+    assert stats["pad_waste_by_bucket"] == {}
+
+
 def test_bucket_rounds_up_to_mesh_batch_axis(monkeypatch):
     """A sharded plan needs stacks divisible by the mesh batch axis; a
     partial group's pow2 bucket must round up to it (the engine pads its
