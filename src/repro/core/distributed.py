@@ -134,6 +134,10 @@ def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
         "dense_signs": shard(inner.dense_signs, (3, 2, 3), 3),
         "krylov_reduce": krylov_reduce,
         "krylov_shift_invert_reduce": krylov_shift_invert_reduce,
+        # Verification is element-wise over the batch axis with no
+        # cross-shard dataflow — plain jnp under the enclosing jit lets
+        # GSPMD partition it; no shard_map wrapper needed.
+        "verify_topk": inner.verify_topk,
     })
 
 

@@ -23,6 +23,7 @@ from repro.engine.plan import (  # noqa: F401
     Method,
     SolverPlan,
     Spectrum,
+    fallback_chain,
     plan_for,
     resolved_crossovers,
     resolved_krylov_n_min,
@@ -46,11 +47,18 @@ from repro.engine.engine import (  # noqa: F401
     SolverEngine,
     TopkResult,
 )
+from repro.engine.verify import (  # noqa: F401
+    VerifyFlags,
+    verify_topk,
+    verify_topk_host,
+)
 from repro.engine.server import (  # noqa: F401
+    DegradedResult,
     DispatchRecord,
     EeiServer,
     ProgramCache,
     QueueFull,
     ServerClosed,
     ShapeBucket,
+    VerifyFailed,
 )

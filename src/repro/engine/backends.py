@@ -62,6 +62,7 @@ from repro.engine.registry import (
     register_backend,
     register_composition,
 )
+from repro.engine.verify import verify_topk as _verify_topk
 from repro.linalg import householder, sturm
 
 # ---------------------------------------------------------------------------
@@ -168,6 +169,7 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
         "tridiag_signs": _tridiag_signs,
         "dense_signs": (
             _dense_signs_reference if name == "reference" else _dense_signs),
+        "verify_topk": _verify_topk,
         **_make_krylov_stages(plan),
     })
 
@@ -240,6 +242,7 @@ def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
         "minor_det_components": _minor_det_components,
         "tridiag_signs": _tridiag_signs,
         "dense_signs": _dense_signs,
+        "verify_topk": _verify_topk,
         **_make_krylov_stages(plan),
     })
 

@@ -68,13 +68,22 @@ class TopkResult(NamedTuple):
     eigenvalues: jax.Array
     vectors: jax.Array
 
+    # Class-level marker so callers can test `result.degraded` uniformly;
+    # the server's ``DegradedResult`` subclass overrides it per instance.
+    degraded = False
+
 
 class ProgramSpec(NamedTuple):
-    """Static description of one jitted program: kind + window."""
+    """Static description of one jitted program: kind + window + verify.
+
+    ``verify=True`` appends the backend's ``verify`` stage to the chain:
+    the program then returns ``(TopkResult, VerifyFlags)`` instead of the
+    bare result (topk programs only)."""
 
     kind: str  # solve | topk | eigenvalues
     k: int = 0  # 0 -> no window (full spectrum)
     largest: bool = True
+    verify: bool = False
 
 
 def _renormalize(vecs: jax.Array) -> jax.Array:
@@ -266,6 +275,21 @@ def _b_dense_signs(lib, plan, spec):
     return fn
 
 
+def _b_verify_topk(lib, plan, spec):
+    def fn(st):
+        return {"flags": lib.verify_topk(st["a"], st["lam_sel"], st["vecs"])}
+
+    return fn
+
+
+#: The verify stage appended to a topk chain when ``spec.verify`` is set.
+#: Not part of any registered composition — the engine appends it, so every
+#: method/backend pair gets verification without N new compositions.
+_VERIFY_SIG = registry.StageSig(
+    role="verify", name="verify_topk",
+    requires=("a", "lam_sel", "vecs"), provides=("flags",))
+
+
 _STAGE_BUILDERS = {
     ("reduce", "householder"): _b_householder,
     ("reduce", "krylov"): _b_krylov,
@@ -287,6 +311,7 @@ _STAGE_BUILDERS = {
     ("recover", "tridiag_solve"): _b_tridiag_solve,
     ("recover", "dense_signs"): _b_dense_signs,
     ("recover", "shift_invert_map"): _b_shift_invert_map,
+    ("verify", "verify_topk"): _b_verify_topk,
 }
 
 
@@ -337,6 +362,10 @@ def _build_program(plan: SolverPlan, spec: ProgramSpec):
     """Jitted graph executor for one ``(plan, spec)``."""
     lib = registry.get_backend(plan)
     _, chain = _resolve_chain(plan, spec)
+    if spec.verify:
+        if spec.kind != "topk":
+            raise ValueError("verify is only supported for topk programs")
+        chain = chain + (_VERIFY_SIG,)
     fns = [_STAGE_BUILDERS[(sig.role, sig.name)](lib, plan, spec)
            for sig in chain]
 
@@ -352,7 +381,8 @@ def _build_program(plan: SolverPlan, spec: ProgramSpec):
         for f in fns:
             state.update(f(state))
         if spec.kind == "topk":
-            return TopkResult(state["lam_sel"], state["vecs"])
+            result = TopkResult(state["lam_sel"], state["vecs"])
+            return (result, state["flags"]) if spec.verify else result
         if spec.kind == "solve":
             return SolveResult(state["lam"], state["mags"])
         if "lam_sel" in state:  # windowed eigenvalue chain
@@ -371,15 +401,21 @@ def _solve_program(plan: SolverPlan):
 
 
 @functools.lru_cache(maxsize=None)
-def topk_program(plan: SolverPlan, k: int, largest: bool):
+def topk_program(plan: SolverPlan, k: int, largest: bool,
+                 verify: bool = False):
     """The jitted batched top-k program for one ``(plan, k, largest)``.
 
     Public because the serving runtime's ``ProgramCache`` AOT-compiles it
     per shape bucket, and the stream-conformance tests replay it as the
     synchronous oracle a dispatched stack must match bitwise.  The
     ``lru_cache`` is thread-safe; the returned jitted callable is too.
+
+    With ``verify=True`` the program appends the backend's ``verify`` stage
+    and returns ``(TopkResult, VerifyFlags)`` — the serving path's default,
+    so no unverified vector reaches a caller.
     """
-    return _build_program(plan, ProgramSpec("topk", int(k), bool(largest)))
+    return _build_program(
+        plan, ProgramSpec("topk", int(k), bool(largest), bool(verify)))
 
 
 @functools.lru_cache(maxsize=None)

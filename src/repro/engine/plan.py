@@ -117,6 +117,38 @@ def resolved_crossovers(backend: Optional[str] = None) -> tuple:
     return table.crossovers_for(backend)
 
 
+def fallback_chain() -> tuple:
+    """``((name, SolverPlan), ...)`` — the per-request escalation chain.
+
+    The serving runtime walks this after a request is isolated (a
+    single-request stack that still fails, or a stack row failing
+    verification), re-solving the *unpadded* matrix under each plan in turn
+    and host-verifying the result before it may resolve the future.
+    Ordered cheap-to-certain:
+
+    1. the windowed EEI path (the request's own fast path minus the
+       co-batch — isolates co-batch/padding interactions);
+    2. the full-spectrum EEI chain (index-targeted Sturm windows are the
+       first casualty of clustered spectra; the full bisection is sturdier);
+    3. shift-and-invert Krylov — the proven escape hatch for clustered
+       *extremal* groups (the regime where the EEI denominators collapse);
+    4. the LAPACK eigh oracle.
+
+    A terminal pure-numpy ``eigh`` link (no XLA at all) is appended by the
+    server itself, so even a wedged device path cannot strand a caller.
+    Built lazily (not a module constant) so it is cheap to import and easy
+    to monkeypatch in tests.
+    """
+    return (
+        ("eei_windowed", SolverPlan(
+            method="eei_tridiag", backend="jnp", spectrum="windowed")),
+        ("eei_full", SolverPlan(method="eei_tridiag", backend="jnp")),
+        ("eei_krylov_si", SolverPlan(
+            method="eei_krylov_si", backend="jnp", spectrum="windowed")),
+        ("eigh", SolverPlan(method="eigh", backend="jnp")),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class SolverPlan:
     """Immutable, hashable description of one way to run the EEI pipeline."""

@@ -42,8 +42,11 @@ from repro.engine.plan import SolverPlan
 #: Stage roles in pipeline order.  A chain may skip roles (the windowed
 #: tridiagonal composition has no ``minor_spectra`` stage at all — its
 #: components stage evaluates minor determinants directly), but may not
-#: reorder them.
-STAGE_ROLES = ("reduce", "spectrum", "minor_spectra", "components", "recover")
+#: reorder them.  ``verify`` is a post-solve checking role appended to a
+#: chain by the engine when the caller asks for verified output; it
+#: consumes the final state and provides per-row ``VerifyFlags``.
+STAGE_ROLES = (
+    "reduce", "spectrum", "minor_spectra", "components", "recover", "verify")
 
 #: Program kinds a composition can serve, with the state each starts from
 #: and the keys its final state must provide.

@@ -84,8 +84,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import engine as engine_mod
-from repro.engine.plan import SolverPlan, plan_for
+from repro.engine.plan import SolverPlan, fallback_chain, plan_for
+from repro.engine.verify import verify_topk_host
 from repro.kernels import blocks
+from repro.runtime.chaos import ChaosError, ChaosFailure, ChaosMonkey
 
 log = logging.getLogger("repro.engine.server")
 
@@ -104,6 +106,58 @@ class ServerClosed(RuntimeError):
 class QueueFull(RuntimeError):
     """``max_pending`` backpressure bound hit under ``pending_policy
     ='except'``."""
+
+
+class VerifyFailed(RuntimeError):
+    """A served result failed post-solve verification (non-finite entries,
+    residual above tolerance, broken norm or bracket order).  Never reaches
+    a caller while the fallback chain is enabled — it is the *cause* that
+    routes a request down the chain; it only resolves a future when every
+    fallback (including the eigh oracle) also failed."""
+
+
+class DegradedResult(engine_mod.TopkResult):
+    """A :class:`~repro.engine.engine.TopkResult` served by the fallback
+    chain instead of the request's primary bucket program.
+
+    Still a 2-tuple (``eigenvalues, vectors`` unpack as usual) so existing
+    callers are oblivious; ``degraded`` is ``True`` (the base class carries
+    ``False``) and ``fallback`` names the chain link that produced it
+    (e.g. ``"eigh_oracle"``).  Quality is verified before resolution, so a
+    degraded result is a *correct* result that took the slow path.
+    """
+
+    degraded = True
+
+    def __new__(cls, eigenvalues, vectors, fallback: str = ""):
+        self = super().__new__(cls, eigenvalues, vectors)
+        self.fallback = fallback
+        return self
+
+
+def _is_transient(exc: BaseException) -> bool:
+    """Whether a dispatch failure is worth retrying in place.
+
+    Injected :class:`ChaosFailure` models the class: transient compile /
+    launch / allocation errors.  Anything carrying a truthy ``transient``
+    attribute opts in; everything else goes straight to split/fallback
+    (retrying a deterministic error just burns the backoff budget).
+    """
+    return isinstance(exc, ChaosFailure) or bool(
+        getattr(exc, "transient", False))
+
+
+def _eigh_oracle(a: np.ndarray, k: int, largest: bool):
+    """Terminal fallback: pure-numpy float64 LAPACK eigh on the host.
+
+    No XLA, no device, no compile — the one link that cannot share a
+    failure mode with the serving path.  Returns ``(lam (k,), vecs (k, n))``
+    ascending at the requested extreme, rows as eigenvectors.
+    """
+    lam, v = np.linalg.eigh(np.asarray(a, dtype=np.float64))
+    if largest:
+        return lam[-k:], v[:, -k:].T
+    return lam[:k], v[:, :k].T
 
 
 def _bucket_n(n: int, align: int) -> int:
@@ -215,8 +269,9 @@ class ProgramCache:
             self.hits = 0
             self.misses = 0
 
-    def get(self, bucket: ShapeBucket, plan: SolverPlan, dtype) -> object:
-        key = (bucket, plan, jnp.dtype(dtype).name)
+    def get(self, bucket: ShapeBucket, plan: SolverPlan, dtype, *,
+            verify: bool = False) -> object:
+        key = (bucket, plan, jnp.dtype(dtype).name, bool(verify))
         with self._lock:
             found = self._programs.get(key)
             if found is None:
@@ -234,7 +289,8 @@ class ProgramCache:
                 raise found.error
             return found.program
         try:
-            fn = engine_mod.topk_program(plan, bucket.k, bucket.largest)
+            fn = engine_mod.topk_program(
+                plan, bucket.k, bucket.largest, bool(verify))
             sds = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.n),
                                        jnp.dtype(dtype))
             prog = fn.lower(sds).compile()
@@ -314,6 +370,21 @@ class EeiServer:
     pipeline — and, when a ``mesh`` with a multi-device data axis is given,
     large stacks route to the ``sharded`` backend (pow2 stack buckets round
     up to the mesh batch axis).
+
+    **Fault tolerance** (on by default): ``verify=True`` appends the
+    engine's ``verify`` stage to every bucket program, so each stack row is
+    checked (finiteness, residual, norm, bracket order) before its future
+    resolves.  A dispatch failure retries transients up to ``max_retries``
+    with exponential backoff, then bisection-splits the stack to isolate
+    the poisoned request(s); an isolated failing request (and any row
+    failing verification) escalates through the per-request fallback chain
+    (``plan.fallback_chain()`` + a pure-numpy eigh oracle) and resolves as
+    a :class:`DegradedResult` — garbage never reaches a caller, and no
+    future is ever stranded.  ``fallback=False`` restores fail-fast
+    semantics (the group's futures get the error).  ``chaos`` arms
+    deterministic fault injection (:class:`~repro.runtime.chaos
+    .ChaosMonkey`) for the conformance suite and ``serve.py --chaos`` soak
+    runs.
     """
 
     def __init__(
@@ -330,6 +401,11 @@ class EeiServer:
         mesh: Optional[jax.sharding.Mesh] = None,
         cache: Optional[ProgramCache] = None,
         record_dispatches: bool = False,
+        verify: bool = True,
+        fallback: bool = True,
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.005,
+        chaos: Optional[ChaosMonkey] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -355,9 +431,16 @@ class EeiServer:
         self.linger_ms = linger_ms
         self.max_pending = max_pending
         self.pending_policy = pending_policy
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.cache = cache if cache is not None else ProgramCache()
         self.record_dispatches = record_dispatches
         self.dispatch_log: "list[DispatchRecord]" = []
+        self.verify = bool(verify)
+        self.fallback = bool(fallback)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.chaos = chaos
 
         # One re-entrant lock guards queues, in-flight state and counters;
         # one condition variable carries every wakeup (new work, linger
@@ -394,6 +477,15 @@ class EeiServer:
         self.grid_cells_real = 0
         self._pad_cells_by_bucket: dict = {}  # bucket -> [real, total]
         self.latencies_ms: list = []
+        # Robustness counters (see stats()): verification failures routed
+        # to the fallback chain, transient retries, bisection splits of
+        # failed stacks, requests resolved degraded, and which fallback
+        # link resolved them.
+        self.verify_failed = 0
+        self.retries = 0
+        self.stack_splits = 0
+        self.requests_degraded = 0
+        self.fallbacks_by_plan: dict = {}  # chain link name -> resolutions
 
         # Snapshot the mode: _threaded must not flip if a caller mutates
         # linger_ms later (the linger *value* is re-read each admission
@@ -568,18 +660,44 @@ class EeiServer:
             bucket = bucket._replace(b=bucket.b + (-bucket.b) % mult)
         return bucket, plan
 
+    def _launch(self, bucket: ShapeBucket, plan: SolverPlan,
+                stack: np.ndarray):
+        """Fetch the bucket program and launch the stack, retrying
+        *transient* failures (see :func:`_is_transient`) up to
+        ``max_retries`` with exponential backoff.  Chaos compile/launch
+        injection points live here — upstream of the retry logic, exactly
+        like the real failures they model."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self.chaos is not None:
+                    self.chaos.on_compile()
+                program = self.cache.get(
+                    bucket, plan, self.dtype, verify=self.verify)
+                if self.chaos is not None:
+                    self.chaos.on_launch()
+                return program(jnp.asarray(stack))  # async: returns at once
+            except Exception as exc:
+                if attempt >= self.max_retries or not _is_transient(exc):
+                    raise
+                with self._cv:
+                    self.retries += 1
+                    self._cv.notify_all()
+                log.warning("EEI dispatch retry %d/%d after transient: %s",
+                            attempt + 1, self.max_retries, exc)
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+
     def _dispatch(self, group: list) -> None:
         """Assemble, fetch the program, launch.  Never raises: any failure
-        (planning, assembly, compile, launch) resolves the group's futures
-        with the error instead of stranding callers or killing a server
-        thread.  Appends to ``_inflight`` under the lock."""
+        (planning, assembly, compile, launch) is retried / split / escalated
+        down the fallback chain (``fallback=True``) or resolves the group's
+        futures with the error — never stranding callers or killing a
+        server thread.  Appends to ``_inflight`` under the lock."""
         try:
             bucket, plan = self._plan_bucket(group)
             stack = self._assemble(group, bucket)
-            program = self.cache.get(bucket, plan, self.dtype)
-            result = program(jnp.asarray(stack))  # async: returns at once
-        except Exception as exc:  # compile/launch failure: fail the group,
-            self._fail(group, exc)  # not the whole serving process
+            result = self._launch(bucket, plan, stack)
+        except Exception as exc:  # compile/launch failure after retries:
+            self._handle_group_failure(group, exc)  # split / fallback / fail
             return
         with self._cv:
             self._inflight.append(_InflightStack(result, list(group), bucket))
@@ -623,20 +741,113 @@ class EeiServer:
         for req in requests:
             self._set(req.future, error=exc)
 
+    def _handle_group_failure(self, group: list, exc: Exception) -> None:
+        """A stack failed (dispatch error after retries, or a device-side
+        error at retire).  With the fallback chain enabled, bisection-split
+        multi-request groups to isolate the poisoned request(s) — each half
+        re-dispatches through the normal path, so healthy halves ride a
+        fresh stack — and escalate isolated requests down the per-request
+        chain.  With ``fallback=False``, fail-fast as before."""
+        if not self.fallback:
+            self._fail(group, exc)
+            return
+        if len(group) > 1:
+            log.warning("EEI stack of %d failed (%s); bisecting",
+                        len(group), exc)
+            with self._cv:
+                self.stack_splits += 1
+                self._cv.notify_all()
+            mid = len(group) // 2
+            self._dispatch(group[:mid])
+            self._dispatch(group[mid:])
+            return
+        self._fallback_request(group[0], exc)
+
+    def _fallback_request(self, req: _Request, cause: Exception) -> None:
+        """Escalate one isolated request down the fallback chain.
+
+        Each link re-solves the request's *unpadded* matrix and is
+        host-verified before it may resolve the future; the terminal link
+        is the pure-numpy eigh oracle.  Resolves the future with a
+        :class:`DegradedResult` on the first verified link, or with the
+        original cause if every link fails (non-finite input, say)."""
+        a = req.a
+        for name, plan in fallback_chain():
+            try:
+                res = engine_mod.SolverEngine(plan).topk(
+                    jnp.asarray(a), req.k, req.largest)
+                lam = np.asarray(res.eigenvalues)
+                vec = np.asarray(res.vectors)
+            except Exception as exc:
+                log.debug("fallback %s raised for n=%d k=%d: %s",
+                          name, req.n, req.k, exc)
+                continue
+            if not bool(verify_topk_host(a, lam, vec).ok):
+                log.debug("fallback %s failed verification (n=%d k=%d)",
+                          name, req.n, req.k)
+                continue
+            self._resolve_degraded(req, lam, vec, name, cause)
+            return
+        try:
+            lam, vec = _eigh_oracle(a, req.k, req.largest)
+        except Exception as exc:
+            self._fail([req], exc)
+            return
+        if not bool(verify_topk_host(a, lam, vec).ok):
+            # Even LAPACK could not produce a verifiable answer — the input
+            # itself is poisoned (non-finite, say).  Surface the original
+            # cause, not garbage.
+            self._fail([req], cause)
+            return
+        self._resolve_degraded(req, lam, vec, "eigh_oracle", cause)
+
+    def _resolve_degraded(self, req: _Request, lam: np.ndarray,
+                          vec: np.ndarray, name: str,
+                          cause: Exception) -> None:
+        log.info("EEI request (n=%d, k=%d) resolved degraded via %s "
+                 "(cause: %s)", req.n, req.k, name, cause)
+        t_done = time.monotonic()
+        with self._cv:
+            self.requests_degraded += 1
+            self.requests_completed += 1
+            self.fallbacks_by_plan[name] = \
+                self.fallbacks_by_plan.get(name, 0) + 1
+            self.latencies_ms.append((t_done - req.t_submit) * 1e3)
+            self._cv.notify_all()
+        self._set(req.future, result=DegradedResult(
+            lam.astype(self.dtype), vec.astype(self.dtype), fallback=name))
+
     def _retire(self, inflight: _InflightStack) -> None:
-        """Block on one stack and resolve its requests' futures.
+        """Block on one stack, verify, and resolve its requests' futures.
 
         Called with the lock held in caller-driven mode (the device sync is
         the caller's own flush) and without it from the retire thread (the
-        sync must not block producers)."""
+        sync must not block producers).
+
+        With ``verify`` on, the program returned ``(TopkResult,
+        VerifyFlags)``: rows whose flags fail — or whose host slices carry
+        non-finite values (the chaos NaN injection lands on the host copy,
+        exactly like a corrupted transfer would) — escalate down the
+        per-request fallback chain instead of resolving with garbage.  A
+        device-side failure at the sync point re-enters the split/fallback
+        path like a dispatch failure."""
+        result = inflight.result
+        flags_ok = None
         try:
-            lam = np.asarray(inflight.result.eigenvalues)  # sync point
-            vec = np.asarray(inflight.result.vectors)
+            if self.verify:
+                result, flags = result
+                flags_ok = np.asarray(flags.ok)  # sync point
+            lam = np.asarray(result.eigenvalues)  # sync point (verify off)
+            vec = np.asarray(result.vectors)
         except Exception as exc:  # device-side failure surfaces here
-            self._fail(inflight.requests, exc)
+            self._handle_group_failure(inflight.requests, exc)
             return
+        if self.chaos is not None:
+            vec = self.chaos.on_result(vec)
+            self.chaos.on_retire_sleep()
         t_done = time.monotonic()
         results = []
+        escalate = []
         for row, req in enumerate(inflight.requests):
             # The program returns `bucket.k` ascending pairs at the requested
             # extreme.  Guards were placed on the far side of the spectrum,
@@ -648,6 +859,12 @@ class EeiServer:
             else:
                 lam_r = lam[row, : req.k]
                 vec_r = vec[row, : req.k, : req.n]
+            if flags_ok is not None and not (
+                    bool(flags_ok[row])
+                    and np.all(np.isfinite(lam_r))
+                    and np.all(np.isfinite(vec_r))):
+                escalate.append(req)
+                continue
             results.append((req, engine_mod.TopkResult(lam_r, vec_r)))
         # Counters update BEFORE futures resolve: a caller woken by
         # future.result() may read stats() immediately and must see this
@@ -656,9 +873,17 @@ class EeiServer:
             self.latencies_ms.extend(
                 (t_done - req.t_submit) * 1e3 for req, _ in results)
             self.requests_completed += len(results)
+            self.verify_failed += len(escalate)
             self._cv.notify_all()
         for req, res in results:
             self._set(req.future, result=res)
+        for req in escalate:
+            cause = VerifyFailed(
+                f"result for (n={req.n}, k={req.k}) failed verification")
+            if self.fallback:
+                self._fallback_request(req, cause)
+            else:
+                self._fail([req], cause)
 
     def _make_room_locked(self) -> None:
         """Caller-driven mode: retire the oldest stack(s) until a launch
@@ -696,6 +921,11 @@ class EeiServer:
 
     def _admission_loop(self) -> None:
         while True:
+            if self.chaos is not None:
+                # Injected at the loop top, before any group is held, so a
+                # chaos crash kills the thread between stacks — the restart
+                # wrapper in _admission_main resumes with nothing stranded.
+                self.chaos.on_thread("admission")
             with self._cv:
                 while True:
                     key, deadline = self._ready_key_locked(time.monotonic())
@@ -743,7 +973,17 @@ class EeiServer:
 
     def _admission_main(self) -> None:
         try:
-            self._admission_loop()
+            while True:
+                try:
+                    self._admission_loop()
+                    return
+                except ChaosError:
+                    # Injected crash, fired between stacks: nothing is
+                    # held, so restart in place.  Bounded by the injection
+                    # schedule itself (deterministic, finite in tests) —
+                    # real crashes below keep their fail-everything path.
+                    log.warning(
+                        "EEI admission thread: injected crash; restarting")
         except BaseException as exc:  # never die silently: fail the queue
             log.exception("EEI admission thread crashed")
             with self._cv:
@@ -761,6 +1001,10 @@ class EeiServer:
 
     def _retire_loop(self) -> None:
         while True:
+            if self.chaos is not None:
+                # Before any stack is popped: a chaos crash here exercises
+                # the bounded-restart machinery with nothing stranded.
+                self.chaos.on_thread("retire")
             with self._cv:
                 while not self._inflight:
                     if self._admission_done and not self._dispatching:
@@ -788,11 +1032,18 @@ class EeiServer:
         # then keeps retiring whatever the admission thread still launches,
         # so one bad stack never strands later ones.  Persistent crashing
         # gives up after the bounded retries (close() joins regardless).
-        for _ in range(8):
+        # Injected ChaosError crashes fire between stacks (nothing held),
+        # so they restart in place without closing the server or burning
+        # the real-crash budget — the schedule is deterministic and finite.
+        crashes = 0
+        while crashes < 8:
             try:
                 self._retire_loop()
                 return
+            except ChaosError:
+                log.warning("EEI retire thread: injected crash; restarting")
             except BaseException as exc:
+                crashes += 1
                 log.exception("EEI retire thread crashed")
                 with self._cv:
                     self._closed = True  # stop admitting: retirement is sick
@@ -920,6 +1171,11 @@ class EeiServer:
             self._pad_cells_by_bucket = {}
             self.latencies_ms = []
             self.dispatch_log = []
+            self.verify_failed = 0
+            self.retries = 0
+            self.stack_splits = 0
+            self.requests_degraded = 0
+            self.fallbacks_by_plan = {}
         self.cache.reset_counters()
 
     def stats(self) -> dict:
@@ -943,6 +1199,13 @@ class EeiServer:
                         round(1.0 - real / total, 6) if total else 0.0
                     for bk, (real, total)
                     in sorted(self._pad_cells_by_bucket.items())},
+                "verify_failed": self.verify_failed,
+                "retries": self.retries,
+                "stack_splits": self.stack_splits,
+                "requests_degraded": self.requests_degraded,
+                "fallbacks_by_plan": dict(self.fallbacks_by_plan),
+                "chaos_injected": (
+                    self.chaos.counts() if self.chaos is not None else {}),
             }
 
         def pct(p):

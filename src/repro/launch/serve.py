@@ -16,7 +16,8 @@ cache -> async double-buffered dispatch):
 
     PYTHONPATH=src python -m repro.launch.serve --eei --batch 8 --n 64 \
         --k 4 --requests 64 [--mixed] [--sync] [--linger-ms 2] \
-        [--gap-ms 1] [--sharded] [--spectrum auto|full|windowed]
+        [--gap-ms 1] [--sharded] [--spectrum auto|full|windowed] \
+        [--chaos SEED] [--chaos-rate 0.05]
 
 ``--mixed`` samples ``n`` and ``k`` per request (the heterogeneous stream
 the server exists for); ``--sync`` runs the PR-2-style synchronous
@@ -29,6 +30,11 @@ the linger thread exists for.  ``--sharded`` serves through the multi-device
 mesh from ``--mesh`` (the server rounds pow2 stack buckets up to the mesh
 batch axis); force host devices off-TPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+``--chaos SEED`` runs a soak: deterministic fault injection (compile and
+launch failures, NaN-poisoned results, slow retires, thread crashes) at
+``--chaos-rate`` per injection point — the stream must still complete, with
+the robustness counters (verify failures, retries, stack splits, degraded
+resolutions, per-plan fallbacks, injections) logged at the end.
 The request stream is generated *before* the timed region either way.
 """
 
@@ -128,12 +134,22 @@ def serve_eei(args):
                  len(stream) / max(dt, 1e-9), len(stream) / max(dt, 1e-9))
         return out
 
+    chaos = None
+    if args.chaos is not None:
+        from repro.runtime import ChaosConfig, ChaosMonkey
+
+        chaos = ChaosMonkey(ChaosConfig(seed=args.chaos,
+                                        rate=args.chaos_rate))
+        log.info("chaos soak: seed=%d rate=%.3f (deterministic injection "
+                 "at compile/launch/result/retire/thread points)",
+                 args.chaos, args.chaos_rate)
     # --mixed uses per-bucket planning (plan=None + the serve mesh); a
     # fixed nominal shape pins the one plan computed above.
     server = EeiServer(plan if args.mixed is False else None,
                        max_batch=args.batch, max_inflight=args.inflight,
                        linger_ms=args.linger_ms,
-                       mesh=serve_mesh if args.mixed else None)
+                       mesh=serve_mesh if args.mixed else None,
+                       chaos=chaos)
     t0 = time.monotonic()
     futures = []
     for a, k_i in stream:
@@ -165,6 +181,17 @@ def serve_eei(args):
              stats["pad_waste_frac"],
              stats["grid_cells_total"] - stats["grid_cells_real"],
              stats["grid_cells_total"], per_bucket or "none")
+    by_plan = ", ".join(f"{name}={count}" for name, count in
+                        sorted(stats["fallbacks_by_plan"].items()))
+    log.info("robustness: %d verify failures, %d retries, %d stack splits, "
+             "%d degraded | fallbacks: %s",
+             stats["verify_failed"], stats["retries"], stats["stack_splits"],
+             stats["requests_degraded"], by_plan or "none")
+    if chaos is not None:
+        injected = ", ".join(f"{point}={count}" for point, count in
+                             sorted(stats["chaos_injected"].items()))
+        log.info("chaos injected: %s | requests_failed=%d",
+                 injected or "none", stats["requests_failed"])
     return futures[-1].result()
 
 
@@ -203,6 +230,14 @@ def main(argv=None):
     ap.add_argument("--sharded", action="store_true",
                     help="EEI: serve through the sharded backend on the "
                     "--mesh data axis (stack buckets round up to it)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="EEI: soak mode — deterministically inject faults "
+                    "(compile/launch failures, NaN-poisoned results, slow "
+                    "retires, thread crashes) from this seed and log the "
+                    "robustness counters; the stream must still complete")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="EEI: per-injection-point chaos probability "
+                    "(default 0.05; only with --chaos)")
     ap.add_argument("--calibration", default=None,
                     help="path to an autotune calibration table (JSON); "
                     "default: env/cache/repo-default resolution chain")

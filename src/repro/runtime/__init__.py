@@ -1,3 +1,4 @@
 from repro.runtime.fault_tolerance import Preempted, Supervisor, SupervisorConfig  # noqa: F401
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
 from repro.runtime.elastic import best_grid, make_elastic_mesh, reshard_state  # noqa: F401
+from repro.runtime.chaos import ChaosConfig, ChaosError, ChaosFailure, ChaosMonkey  # noqa: F401

@@ -67,6 +67,16 @@ class Supervisor:
         """Run to ``n_steps`` with retry/rollback. Returns final state."""
         retries = 0
         step = int(np.asarray(_get_step(state)))
+        if self.manager.latest_step() is None:
+            # Seed a step-0 checkpoint before the loop: without one, a
+            # failure before the first periodic checkpoint found nothing to
+            # restore and replayed the same failing step against the
+            # *unmodified* state until max_retries — no rollback, and a
+            # NaN quarantine that never skipped the offending window.
+            # Blocking: it must be restorable before the first step runs.
+            self.manager.save(step, state,
+                              extra={"data_step": data_iter.state()["step"]},
+                              blocking=True)
         while step < n_steps:
             if self._preempt:
                 self.manager.save(step, state,

@@ -1,0 +1,195 @@
+"""Degenerate-spectrum fixtures and conformance.
+
+Clustered eigenvalues are the EEI identity's known failure mode: the
+product-difference denominators collapse and the clamped kernels emit NaN
+or finite garbage.  These tests pin the guarded-serving contract around
+that regime, on every backend:
+
+* the verifier never *passes* garbage (a row flagged ok is a genuine
+  eigenpair, checked against the eigh oracle);
+* the verifier never *rejects* a correct degenerate solution (repeated
+  eigenvalues are legal — only wrong answers fail);
+* the serving fallback chain resolves a degenerate request at oracle
+  quality, marked ``degraded``, without perturbing co-batched neighbors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import (
+    DegradedResult,
+    EeiServer,
+    SolverPlan,
+    verify_topk_host,
+)
+from repro.engine import engine as engine_mod
+from repro.engine.verify import DEFAULT_TOL
+
+K = 4
+
+
+def _host_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _plan(backend: str) -> SolverPlan:
+    mesh = _host_mesh() if backend == "sharded" else None
+    return SolverPlan(method="eei_tridiag", backend=backend, mesh=mesh)
+
+
+BACKENDS = ["reference", "jnp", "pallas", "sharded"]
+
+
+# -- fixtures -----------------------------------------------------------------
+
+
+def degenerate_matrix(seed: int, n: int, eps: float = 0.0,
+                      dtype=np.float32) -> np.ndarray:
+    """Symmetric ``(n, n)`` whose top ``K`` eigenvalues are exactly
+    repeated (``eps=0``) or ``eps``-separated, embedded in an otherwise
+    well-separated spectrum via ``Q diag(lam) Q^T`` with orthogonal Q."""
+    rng = np.random.default_rng(seed)
+    lam = np.linspace(-1.0, 0.5, n)
+    lam[-K:] = 1.5 + np.arange(K) * eps
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    return np.asarray((q * lam) @ q.T, dtype)
+
+
+def two_cluster_matrix(seed: int, n: int, dtype=np.float32) -> np.ndarray:
+    """Symmetric ``(n, n)`` with the whole spectrum in two exactly-repeated
+    clusters (``n//2`` eigenvalues at 1.0, the rest at 2.0) — maximal
+    multiplicity, so the product-difference denominators collapse across
+    the entire table.  float32 rounding of ``Q diag(lam) Q^T`` splits the
+    clusters by ~1e-7 * ||A||, right at the kernel's clamp boundary, so
+    whether a given draw emits NaN, large-residual garbage, or a passable
+    basis is seed- and shape-dependent — deterministic per compiled
+    program, but not predictable a priori (see the probing in the serving
+    test below)."""
+    rng = np.random.default_rng(seed)
+    lam = np.where(np.arange(n) < n // 2, 1.0, 2.0)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    return np.asarray((q * lam) @ q.T, dtype)
+
+
+def healthy_matrix(seed: int, n: int, dtype=np.float32) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(dtype)
+    return (a + a.T) / 2
+
+
+def _oracle_topk(a: np.ndarray, k: int):
+    lam, v = np.linalg.eigh(np.asarray(a, np.float64))
+    return lam[-k:], v[:, -k:].T
+
+
+# -- verifier conformance -----------------------------------------------------
+
+
+@pytest.mark.parametrize("eps", [0.0, 1e-7])
+def test_verifier_accepts_oracle_on_degenerate(eps):
+    """Repeated eigenvalues are legal: the verifier must pass a *correct*
+    degenerate solution (no false rejection that would send every
+    clustered request down the fallback chain twice)."""
+    for seed in (0, 1):
+        a = degenerate_matrix(seed, 24, eps=eps)
+        lam, vecs = _oracle_topk(a, K)
+        flags = verify_topk_host(a, lam.astype(np.float32),
+                                 vecs.astype(np.float32))
+        assert bool(flags.ok), (
+            f"verifier rejected an oracle solution (eps={eps}): {flags}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fixture", ["repeated", "eps", "clusters"])
+def test_no_unflagged_garbage_on_degenerate(backend, fixture):
+    """The safety contract on every backend: a stack mixing healthy and
+    degenerate matrices through the verify-enabled program never yields a
+    row that is flagged ok but numerically wrong — and the healthy
+    co-batched row always passes (no false positive)."""
+    n = 24
+    mk = {
+        "repeated": lambda s: degenerate_matrix(s, n, eps=0.0),
+        "eps": lambda s: degenerate_matrix(s, n, eps=1e-7),
+        "clusters": lambda s: two_cluster_matrix(s, n),
+    }[fixture]
+    a = np.stack([healthy_matrix(0, n), mk(1), mk(2)])
+    plan = _plan(backend)
+    program = engine_mod.topk_program(plan, K, True, True)
+    (lam, vecs), flags = program(jnp.asarray(a))
+    lam, vecs = np.asarray(lam), np.asarray(vecs)
+    ok = np.asarray(flags.ok)
+
+    assert bool(ok[0]), "healthy co-batched row failed verification"
+    # Device verdict agrees with the host twin (same math, same tolerance;
+    # measured margins are ~10x either side of DEFAULT_TOL).
+    host = verify_topk_host(a, lam, vecs)
+    np.testing.assert_array_equal(ok, np.asarray(host.ok))
+
+    for row in range(a.shape[0]):
+        if not ok[row]:
+            continue
+        # Flagged ok => genuine eigenpairs: residual within tolerance and
+        # eigenvalues matching the float64 oracle.
+        lam_o, _ = _oracle_topk(a[row], K)
+        np.testing.assert_allclose(lam[row], lam_o, atol=1e-3)
+        r = verify_topk_host(a[row], lam[row], vecs[row])
+        assert float(r.residual) <= DEFAULT_TOL
+
+
+# -- serving-path conformance -------------------------------------------------
+
+
+def test_degenerate_request_degrades_without_failing_neighbors():
+    """A degenerate request co-batched with healthy neighbors resolves at
+    eigh-oracle quality through the fallback chain, marked ``degraded``;
+    the neighbors resolve normally, unmarked and unperturbed.
+
+    Whether a given clustered draw fails the primary path is deterministic
+    per compiled program but not predictable a priori (float32 rounding
+    lands the cluster splits at the clamp boundary), so probe the *exact*
+    bucket program the server will run for a seed the verifier rejects —
+    the server must then escalate exactly that row.  Two-cluster draws
+    fail at a measured ~2/3 rate, so 12 seeds never come up empty."""
+    n = 24
+    good = [healthy_matrix(s, n) for s in (10, 11, 12)]
+    plan = SolverPlan(method="eei_tridiag", backend="jnp")
+    program = engine_mod.topk_program(plan, K, True, True)
+    bad = None
+    for seed in range(12):
+        cand = two_cluster_matrix(seed, n)
+        stack = np.stack([good[0], cand, good[1], good[2]])
+        _, flags = program(jnp.asarray(stack))
+        if not bool(np.asarray(flags.ok)[1]):
+            bad = cand
+            break
+    assert bad is not None, "no probed draw failed the primary path"
+    srv = EeiServer(plan, max_batch=4, linger_ms=0.0)
+    try:
+        futs = [srv.submit(a, K) for a in (good[0], bad, good[1], good[2])]
+        srv.flush()
+        results = [f.result(timeout=120) for f in futs]
+    finally:
+        srv.close()
+
+    rb = results[1]
+    assert isinstance(rb, DegradedResult) and rb.degraded
+    assert rb.fallback  # which chain link resolved it, for observability
+    lam_o, _ = _oracle_topk(bad, K)
+    np.testing.assert_allclose(np.asarray(rb.eigenvalues), lam_o, atol=1e-4)
+    assert bool(verify_topk_host(bad, np.asarray(rb.eigenvalues),
+                                 np.asarray(rb.vectors)).ok)
+
+    for res, a in zip((results[0], results[2], results[3]),
+                      (good[0], good[1], good[2])):
+        assert not res.degraded
+        lam_o, _ = _oracle_topk(a, K)
+        np.testing.assert_allclose(np.asarray(res.eigenvalues), lam_o,
+                                   atol=1e-4)
+
+    stats = srv.stats()
+    assert stats["requests_failed"] == 0
+    assert stats["requests_degraded"] == 1
+    assert stats["verify_failed"] == 1
+    assert sum(stats["fallbacks_by_plan"].values()) == 1

@@ -114,6 +114,51 @@ def test_supervisor_recovers_from_transient_failure():
     assert not boom["armed"], "failure was injected and survived"
 
 
+def test_supervisor_rolls_back_before_first_periodic_checkpoint():
+    """Regression: a failure *before* the first periodic checkpoint used to
+    find ``latest_step() is None`` and retry without rolling anything back —
+    the failing step replayed against unmodified state while the data
+    iterator silently advanced, skewing the step<->batch correspondence.
+    The step-0 seed checkpoint makes the retry an exact replay."""
+    cfg = reduced_config(get_config("xlstm-125m"))
+    model = LanguageModel(cfg)
+    opt = AdamW(lr=1e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    step_fn_inner = jax.jit(make_train_step(model, opt,
+                                            compute_dtype=jnp.float32))
+    shape = ShapeConfig("t", 16, 2, "train")
+    source = make_synthetic(cfg, shape)
+    data = PrefetchIterator(source)
+    boom = {"armed": True}
+    seen = []  # (step, batch fingerprint) for every *successful* step
+
+    def step_fn(state, batch):
+        s = int(np.asarray(state.step))
+        # Fail at step 1: checkpoint_every=2 means no periodic checkpoint
+        # exists yet — only the seeded step-0 one can roll this back.
+        if s == 1 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected failure before first checkpoint")
+        seen.append((s, int(np.asarray(batch["tokens"]).sum())))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return step_fn_inner(state, batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        sup = Supervisor(CheckpointManager(d),
+                         SupervisorConfig(checkpoint_every=2))
+        final = sup.run(state, data, step_fn, n_steps=4)
+    data.close()
+    assert int(np.asarray(final.step)) == 4
+    assert not boom["armed"], "failure was injected and survived"
+    # Exact replay: the last execution of step s consumed batch s — the
+    # deterministic pipeline's batch for that step, not a skewed one.
+    expected = [int(source.shard_at(s, 0, 1)["tokens"].sum())
+                for s in range(4)]
+    last_by_step = dict(seen)  # later entries overwrite earlier replays
+    assert last_by_step == {s: expected[s] for s in range(4)}
+
+
 def test_straggler_watchdog_flags_slow_steps():
     wd = StragglerWatchdog(window=20, threshold=2.0)
     for i in range(15):
