@@ -62,3 +62,10 @@ from repro.engine.server import (  # noqa: F401
     ShapeBucket,
     VerifyFailed,
 )
+from repro.engine.fleet import (  # noqa: F401
+    EeiFleet,
+    FleetClosed,
+    InProcessReplica,
+    ReplicaDied,
+    SubprocessReplica,
+)

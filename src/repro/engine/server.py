@@ -88,6 +88,7 @@ from repro.engine.plan import SolverPlan, fallback_chain, plan_for
 from repro.engine.verify import verify_topk_host
 from repro.kernels import blocks
 from repro.runtime.chaos import ChaosError, ChaosFailure, ChaosMonkey
+from repro.runtime.fault_tolerance import decorrelated_jitter
 
 log = logging.getLogger("repro.engine.server")
 
@@ -405,6 +406,8 @@ class EeiServer:
         fallback: bool = True,
         max_retries: int = 2,
         retry_backoff_s: float = 0.005,
+        retry_backoff_cap_s: float = 1.0,
+        retry_jitter_seed: Optional[int] = None,
         chaos: Optional[ChaosMonkey] = None,
     ):
         if max_batch < 1:
@@ -440,6 +443,15 @@ class EeiServer:
         self.fallback = bool(fallback)
         self.max_retries = int(max_retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        # Decorrelated-jitter retry schedule: deterministic exponential
+        # backoff makes stacks that failed *together* (same transient device
+        # hiccup) retry together and re-collide every attempt.  The jitter
+        # generator is seedable so tests can replay a schedule; draws are
+        # serialized under the server lock (numpy Generators are not
+        # thread-safe) and recorded in ``retry_delays_s`` for inspection.
+        self._retry_rng = np.random.default_rng(retry_jitter_seed)
+        self.retry_delays_s: list = []
         self.chaos = chaos
 
         # One re-entrant lock guards queues, in-flight state and counters;
@@ -456,6 +468,12 @@ class EeiServer:
         # instead of a full-queue scan.
         self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
         self._inflight: "deque[_InflightStack]" = deque()
+        # Every admitted-but-unresolved caller future -> its submit time.
+        # Maintained by the universal done-callback, so it is correct
+        # across every resolution path (retire, fallback, fail, cancel).
+        # ``close(timeout=...)`` returns its keys when a drain wedges, and
+        # the fleet's health probe reads the oldest age for its deadline.
+        self._unresolved: "dict[Future, float]" = {}
         self._pending = 0  # queued, not yet popped for dispatch
         self._dispatching = 0  # groups popped but not yet in-flight/failed
         self._retiring = 0  # stacks popped by the retire thread, syncing
@@ -545,6 +563,7 @@ class EeiServer:
             self._pending += 1
             self.requests_submitted += 1
             req.t_submit = time.monotonic()  # linger clock starts at enqueue
+            self._unresolved[req.future] = req.t_submit
             self._cv.notify_all()
         # Caller-side cancellation: while the request is still pending
         # (undispatched) a cancel() pulls it out of its coalesce group, so
@@ -564,13 +583,17 @@ class EeiServer:
     def _on_future_done(self, req_ref, fut: Future) -> None:
         """Dequeue a request whose caller cancelled it while still pending.
 
-        Runs for every resolved future (the done callback cannot filter),
-        so anything but a cancellation returns immediately.  A cancel that
-        lands after the group was popped is left alone: its row is already
-        part of an assembled stack (the device work is spent either way)
-        and retirement tolerates the pre-resolved future.  A dead weakref
-        means the request already left the pipeline entirely.
+        Runs for every resolved future (the done callback cannot filter):
+        every resolution retires the future from the ``_unresolved`` map
+        (the fleet's liveness probe and ``close(timeout=...)``'s return
+        value read it); anything but a cancellation then returns.  A cancel
+        that lands after the group was popped is left alone: its row is
+        already part of an assembled stack (the device work is spent either
+        way) and retirement tolerates the pre-resolved future.  A dead
+        weakref means the request already left the pipeline entirely.
         """
+        with self._cv:
+            self._unresolved.pop(fut, None)
         if not fut.cancelled():
             return
         req = req_ref()
@@ -664,9 +687,10 @@ class EeiServer:
                 stack: np.ndarray):
         """Fetch the bucket program and launch the stack, retrying
         *transient* failures (see :func:`_is_transient`) up to
-        ``max_retries`` with exponential backoff.  Chaos compile/launch
-        injection points live here — upstream of the retry logic, exactly
-        like the real failures they model."""
+        ``max_retries`` with decorrelated-jitter backoff.  Chaos
+        compile/launch injection points live here — upstream of the retry
+        logic, exactly like the real failures they model."""
+        prev_delay = self.retry_backoff_s
         for attempt in range(self.max_retries + 1):
             try:
                 if self.chaos is not None:
@@ -681,10 +705,14 @@ class EeiServer:
                     raise
                 with self._cv:
                     self.retries += 1
+                    prev_delay = decorrelated_jitter(
+                        self._retry_rng, self.retry_backoff_s, prev_delay,
+                        self.retry_backoff_cap_s)
+                    self.retry_delays_s.append(prev_delay)
                     self._cv.notify_all()
                 log.warning("EEI dispatch retry %d/%d after transient: %s",
                             attempt + 1, self.max_retries, exc)
-                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                time.sleep(prev_delay)  # outside the lock
 
     def _dispatch(self, group: list) -> None:
         """Assemble, fetch the program, launch.  Never raises: any failure
@@ -1109,17 +1137,25 @@ class EeiServer:
                 self._retire(self._inflight.popleft())
 
     def close(self, drain: bool = True, timeout: Optional[float] = None
-              ) -> None:
-        """Shut the server down.  Idempotent.
+              ) -> list:
+        """Shut the server down.  Idempotent.  Returns the list of caller
+        futures still unresolved when it returns — **empty on a clean
+        drain**.
 
         ``drain=True`` (default) dispatches everything still queued and
         blocks until every future has resolved; ``drain=False`` resolves
         queued requests' futures with :class:`ServerClosed` instead (all
         futures still resolve — never stranded), but always retires stacks
         already on device.  After ``close()``, ``submit()`` returns futures
-        with :class:`ServerClosed` already set.  In threaded mode both
-        background threads are joined (``timeout`` bounds the join; raises
-        ``RuntimeError`` if they fail to drain in time).
+        with :class:`ServerClosed` already set.
+
+        In threaded mode ``timeout`` bounds the *whole* call: the two
+        thread joins share one deadline, and if the drain is wedged (a
+        stuck device sync, a straggler-injected retire) ``close`` returns
+        the still-unresolved futures instead of hanging or raising — the
+        caller (a fleet failing over, an operator shutting down) decides
+        whether to redispatch or abandon them.  The background threads are
+        daemons; a later resolution still flows to the futures normally.
         """
         with self._cv:
             first = not self._closed
@@ -1130,13 +1166,20 @@ class EeiServer:
             self._fail(group, ServerClosed(
                 "EeiServer closed before this request was dispatched"))
         if self._threaded:
-            self._admission_thread.join(timeout)
-            self._retire_thread.join(timeout)
+            deadline = None if timeout is None else \
+                time.monotonic() + timeout
+            for thread in (self._admission_thread, self._retire_thread):
+                left = None if deadline is None else \
+                    max(deadline - time.monotonic(), 0.0)
+                thread.join(left)
             if (self._admission_thread.is_alive()
                     or self._retire_thread.is_alive()):
-                raise RuntimeError(
-                    f"EeiServer.close(): threads failed to drain within "
-                    f"{timeout}s")
+                with self._cv:
+                    stranded = list(self._unresolved)
+                log.error(
+                    "EeiServer.close(): drain did not finish within %ss; "
+                    "%d future(s) still unresolved", timeout, len(stranded))
+                return stranded
         elif first:
             if drain:
                 self.flush()
@@ -1146,12 +1189,67 @@ class EeiServer:
                 with self._cv:
                     while self._inflight:
                         self._retire(self._inflight.popleft())
+        return []
 
     def __enter__(self) -> "EeiServer":
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
+
+    # -- replica introspection (read by EeiFleet) --------------------------
+
+    def alive(self) -> bool:
+        """Whether this server can still make progress on admitted work.
+        A closed server, or a threaded server whose service threads died
+        (bounded restarts exhausted), is not alive."""
+        with self._cv:
+            if self._closed:
+                return False
+        if self._threaded:
+            return (self._admission_thread.is_alive()
+                    and self._retire_thread.is_alive())
+        return True
+
+    def unresolved_futures(self) -> list:
+        """Snapshot of every admitted caller future not yet resolved, in
+        submit order.  The fleet walks this on replica death to redispatch
+        exactly the work the replica still owed."""
+        with self._cv:
+            return sorted(self._unresolved, key=self._unresolved.get)
+
+    def oldest_unresolved_age_s(self, now: Optional[float] = None
+                                ) -> Optional[float]:
+        """Age of the oldest admitted-but-unresolved request (None when
+        idle) — the fleet's deadline probe: a hung replica accepts work
+        and never answers, so *only* this age keeps growing."""
+        with self._cv:
+            if not self._unresolved:
+                return None
+            oldest = min(self._unresolved.values())
+        return (time.monotonic() if now is None else now) - oldest
+
+    def pending_manifest(self) -> list:
+        """Queued-but-undispatched requests: ``[{n, k, largest, age_s}]``."""
+        now = time.monotonic()
+        with self._cv:
+            return [
+                {"n": r.n, "k": r.k, "largest": r.largest,
+                 "age_s": now - r.t_submit}
+                for q in self._queues.values() for r in q
+            ]
+
+    def inflight_manifest(self) -> list:
+        """Dispatched-but-unretired stacks: ``[{bucket, rows, oldest_age_s}]``."""
+        now = time.monotonic()
+        with self._cv:
+            return [
+                {"bucket": f"b{s.bucket.b}n{s.bucket.n}k{s.bucket.k}"
+                           + ("L" if s.bucket.largest else "S"),
+                 "rows": len(s.requests),
+                 "oldest_age_s": now - min(r.t_submit for r in s.requests)}
+                for s in self._inflight
+            ]
 
     # -- observability -----------------------------------------------------
 
@@ -1173,6 +1271,7 @@ class EeiServer:
             self.dispatch_log = []
             self.verify_failed = 0
             self.retries = 0
+            self.retry_delays_s = []
             self.stack_splits = 0
             self.requests_degraded = 0
             self.fallbacks_by_plan = {}
@@ -1188,6 +1287,7 @@ class EeiServer:
                 "requests_rejected": self.requests_rejected,
                 "requests_cancelled": self.requests_cancelled,
                 "requests_pending": self._pending,
+                "requests_unresolved": len(self._unresolved),
                 "stacks_dispatched": self.stacks_dispatched,
                 "grid_cells_total": self.grid_cells_total,
                 "grid_cells_real": self.grid_cells_real,

@@ -17,7 +17,8 @@ cache -> async double-buffered dispatch):
     PYTHONPATH=src python -m repro.launch.serve --eei --batch 8 --n 64 \
         --k 4 --requests 64 [--mixed] [--sync] [--linger-ms 2] \
         [--gap-ms 1] [--sharded] [--spectrum auto|full|windowed] \
-        [--chaos SEED] [--chaos-rate 0.05]
+        [--chaos SEED] [--chaos-rate 0.05] \
+        [--replicas 3 [--replica-mode subprocess] [--chaos-replicas]]
 
 ``--mixed`` samples ``n`` and ``k`` per request (the heterogeneous stream
 the server exists for); ``--sync`` runs the PR-2-style synchronous
@@ -35,6 +36,11 @@ launch failures, NaN-poisoned results, slow retires, thread crashes) at
 ``--chaos-rate`` per injection point — the stream must still complete, with
 the robustness counters (verify failures, retries, stack splits, degraded
 resolutions, per-plan fallbacks, injections) logged at the end.
+``--replicas N`` serves through an ``EeiFleet`` of N replica servers
+(rendezvous-hashed routing, health probes, failover redispatch, restart);
+``--replica-mode subprocess`` isolates each replica in its own process,
+and ``--chaos-replicas`` arms the replica-level kill/hang/slow points so
+replicas die mid-stream while every request must still resolve.
 The request stream is generated *before* the timed region either way.
 """
 
@@ -134,6 +140,9 @@ def serve_eei(args):
                  len(stream) / max(dt, 1e-9), len(stream) / max(dt, 1e-9))
         return out
 
+    if args.replicas > 1:
+        return _serve_eei_fleet(args, stream, gap_s, rng)
+
     chaos = None
     if args.chaos is not None:
         from repro.runtime import ChaosConfig, ChaosMonkey
@@ -195,6 +204,70 @@ def serve_eei(args):
     return futures[-1].result()
 
 
+def _serve_eei_fleet(args, stream, gap_s, rng):
+    """Serve the stream through an ``EeiFleet`` of ``--replicas`` servers.
+
+    ``--chaos-replicas`` arms the replica-level injection points
+    (kill / hang / slow, each at ``--chaos-rate``, seeded by ``--chaos``)
+    — replicas die *while serving* and the stream must still complete,
+    with the failover counters logged at the end.
+    """
+    from repro.engine import EeiFleet
+
+    chaos = None
+    if args.chaos_replicas:
+        from repro.runtime import ChaosConfig, ChaosMonkey
+
+        seed = args.chaos if args.chaos is not None else 0
+        chaos = ChaosMonkey(ChaosConfig(
+            seed=seed, rate=0.0, replica_kill_rate=args.chaos_rate,
+            replica_hang_rate=args.chaos_rate / 2,
+            replica_slow_rate=args.chaos_rate))
+        log.info("replica chaos soak: seed=%d kill/slow rate=%.3f "
+                 "hang rate=%.3f", seed, args.chaos_rate,
+                 args.chaos_rate / 2)
+    fleet = EeiFleet(
+        args.replicas,
+        replica_mode=args.replica_mode,
+        server_kwargs=dict(
+            max_batch=args.batch, max_inflight=args.inflight,
+            linger_ms=args.linger_ms if args.linger_ms is not None else 2.0),
+        chaos=chaos,
+        restart_policy_kwargs=dict(max_restarts=1000),
+    )
+    log.info("eei fleet: %d %s replicas, max_batch=%d", args.replicas,
+             args.replica_mode, args.batch)
+    t0 = time.monotonic()
+    futures = []
+    for a, k_i in stream:
+        if gap_s:
+            time.sleep(rng.exponential(gap_s))
+        futures.append(fleet.submit(a, k_i))
+    for f in futures:
+        f.result(timeout=600)
+    dt = time.monotonic() - t0
+    stranded = fleet.close(timeout=120)
+    stats = fleet.stats()
+    log.info("fleet served %d requests in %.3fs (%.1f requests/s) | "
+             "%d unresolved at close", len(stream), dt,
+             len(stream) / max(dt, 1e-9), len(stranded))
+    log.info("fleet latency p50=%.1fms p99=%.1fms | states=%s",
+             stats["p50_latency_ms"], stats["p99_latency_ms"],
+             stats["replica_states"])
+    log.info("failover: %d redispatches, %d hedges (%d wasted), "
+             "%d kills, %d restarts, %d deadline deaths",
+             stats["redispatches"], stats["hedges"], stats["hedge_wasted"],
+             stats["replicas_killed"], stats["replicas_restarted"],
+             stats["deadline_deaths"])
+    if chaos is not None:
+        injected = ", ".join(f"{point}={count}" for point, count in
+                             sorted(stats["chaos_injected"].items())
+                             if count)
+        log.info("chaos injected: %s | requests_failed=%d",
+                 injected or "none", stats["requests_failed"])
+    return futures[-1].result()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS))
@@ -238,6 +311,20 @@ def main(argv=None):
     ap.add_argument("--chaos-rate", type=float, default=0.05,
                     help="EEI: per-injection-point chaos probability "
                     "(default 0.05; only with --chaos)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="EEI: serve through an EeiFleet of this many "
+                    "replica servers (health-probed routing, failover "
+                    "redispatch, restart); 1 = single server")
+    ap.add_argument("--replica-mode", choices=["inprocess", "subprocess"],
+                    default="inprocess",
+                    help="EEI fleet: replica driver — in-process servers "
+                    "sharing one program cache, or one worker process per "
+                    "replica (true process isolation and parallelism)")
+    ap.add_argument("--chaos-replicas", action="store_true",
+                    help="EEI fleet: arm replica-level chaos (kill/hang/"
+                    "slow at --chaos-rate, seeded by --chaos) — replicas "
+                    "die mid-stream and the fleet must still answer "
+                    "every request")
     ap.add_argument("--calibration", default=None,
                     help="path to an autotune calibration table (JSON); "
                     "default: env/cache/repo-default resolution chain")

@@ -1,4 +1,9 @@
-from repro.runtime.fault_tolerance import Preempted, Supervisor, SupervisorConfig  # noqa: F401
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    Preempted, RestartPolicy, Supervisor, SupervisorConfig,
+    decorrelated_jitter,
+)
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401
-from repro.runtime.elastic import best_grid, make_elastic_mesh, reshard_state  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    best_grid, make_elastic_mesh, reshard_state, route_key,
+)
 from repro.runtime.chaos import ChaosConfig, ChaosError, ChaosFailure, ChaosMonkey  # noqa: F401

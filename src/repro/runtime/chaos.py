@@ -24,6 +24,17 @@ Injection points (all off unless the config enables them):
                   (models a crashed service thread; exercises the server's
                   bounded restart machinery).
 
+Replica-level points (fired by ``EeiFleet`` per routed dispatch, not by
+the server — a fleet is required for them to mean anything):
+
+    replica_kill  kill the replica the request just routed to (process
+                  death / OOM-kill); the fleet must redispatch its
+                  unresolved work and restart it.
+    replica_hang  wedge the replica (accepts work, never answers) — only
+                  the deadline probe can catch this one.
+    replica_slow  slow the replica by ``replica_slow_s`` per request —
+                  the health watchdog should classify it slow and hedge.
+
 ``ChaosFailure`` subclasses ``RuntimeError`` and is marked *transient* —
 the server's retry/backoff path treats it like a recoverable device error.
 ``ChaosError`` is *not* retried as transient: it models a genuine thread
@@ -66,8 +77,19 @@ class ChaosConfig:
     nan_rate: Optional[float] = None
     slow_retire_rate: Optional[float] = None
     thread_rate: Optional[float] = None
+    #: Replica-level points default OFF even when ``rate`` is set: a chaos
+    #: monkey armed on a single server must not try to kill replicas that
+    #: do not exist.  ``EeiFleet`` chaos configs set them explicitly.
+    replica_kill_rate: float = 0.0
+    replica_hang_rate: float = 0.0
+    replica_slow_rate: float = 0.0
     #: Sleep injected by a ``slow_retire`` firing, seconds.
     slow_s: float = 0.05
+    #: Per-request delay while a ``replica_slow`` action is active, seconds.
+    replica_slow_s: float = 0.05
+    #: How long a ``replica_hang`` wedges the replica, seconds (bounded so
+    #: soaks terminate; the deadline probe should fire well before this).
+    replica_hang_s: float = 2.0
 
     def rate_for(self, point: str) -> float:
         override = getattr(self, f"{point}_rate", None)
@@ -93,7 +115,8 @@ class ChaosMonkey:
         self._lock = threading.Lock()
         self.injected = {
             "compile": 0, "launch": 0, "nan": 0, "slow_retire": 0,
-            "thread": 0,
+            "thread": 0, "replica_kill": 0, "replica_hang": 0,
+            "replica_slow": 0,
         }
 
     def _fire(self, point: str) -> bool:
@@ -144,3 +167,19 @@ class ChaosMonkey:
         — the loop's bounded-restart machinery must absorb it."""
         if self._fire("thread"):
             raise ChaosError(f"chaos: injected {which} thread crash")
+
+    def on_replica(self, rid) -> Optional[str]:
+        """Per fleet-routed dispatch, for replica ``rid``.  Draws the three
+        replica points independently and returns the most severe hit
+        (``"kill"`` > ``"hang"`` > ``"slow"``) or ``None``.  The *fleet*
+        executes the action (outside its lock) — the monkey only decides,
+        so the schedule stays a pure function of the seed and the dispatch
+        sequence regardless of which replica driver is in use."""
+        action = None
+        if self._fire("replica_slow"):
+            action = "slow"
+        if self._fire("replica_hang"):
+            action = "hang"
+        if self._fire("replica_kill"):
+            action = "kill"
+        return action

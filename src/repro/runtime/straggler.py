@@ -25,6 +25,9 @@ class StragglerWatchdog:
     threshold: float = 2.0
     deadline_s: float | None = None
     on_straggler: Callable | None = None
+    #: Observations required before the median is trusted; below this the
+    #: watchdog never flags (a cold replica must not look like a straggler).
+    min_samples: int = 10
 
     def __post_init__(self):
         self._times = collections.deque(maxlen=self.window)
@@ -33,7 +36,7 @@ class StragglerWatchdog:
     def observe(self, step: int, dt: float) -> bool:
         """Record a step time; returns True if flagged as straggler."""
         flagged = False
-        if len(self._times) >= 10:
+        if len(self._times) >= self.min_samples:
             med = statistics.median(self._times)
             if dt > self.threshold * med:
                 self.events += 1
@@ -45,6 +48,24 @@ class StragglerWatchdog:
                 f"step {step} exceeded deadline {self.deadline_s}s ({dt:.1f}s)")
         self._times.append(dt)
         return flagged
+
+    def classify(self, dt: float) -> str:
+        """Non-mutating probe: would ``dt`` flag against the current
+        distribution?  Returns ``"slow"`` / ``"healthy"`` (``"healthy"``
+        while under ``min_samples`` — no baseline yet)."""
+        if len(self._times) >= self.min_samples:
+            if dt > self.threshold * statistics.median(self._times):
+                return "slow"
+        return "healthy"
+
+    def reset(self) -> None:
+        """Drop history (e.g. after a replica restart: the post-warm-up
+        latency distribution is a different population)."""
+        self._times.clear()
+
+    @property
+    def samples(self) -> int:
+        return len(self._times)
 
     @property
     def median(self) -> float:
