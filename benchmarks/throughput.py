@@ -166,11 +166,31 @@ FLEET_SCALING_FLOOR = 2.0
 FLEET_CHAOS_KILL_RATE = 0.08
 FLEET_CHAOS_REQUESTS = 40
 
+#: Packed ragged dispatch benchmark (PR 9): a previously-unseen ragged
+#: small-n stream (the pad-heavy regime packing exists for) served through
+#: pack="never" vs pack="always" with a cold ProgramCache each, arriving in
+#: bursts (flush-paced waves, so partial groups form without sleep-dominated
+#: timing).  The timed window deliberately INCLUDES program compiles: on
+#: ragged traffic the bucketed path compiles one program per distinct
+#: (b, n, k, largest) footprint while packing collapses every small n into
+#: a couple of fixed-row-shape programs, and that compile collapse — plus
+#: ~5x fewer launches — is where the serving win lives.
+#: ``(requests, n_lo, n_hi, burst, max_batch)`` per mode.
+PACKED_SMOKE = (96, 8, 48, 24, 8)
+PACKED_FULL = (192, 8, 56, 24, 8)
+PACKED_ROW_N = 64
+#: Hard floor on the packed/bucketed cold-stream requests/s ratio (ISSUE 9
+#: acceptance: >= 1.3x on the mixed small-n stream).  Measured 2.3-4.7x on
+#: the reference container (the spread depends on how much of the bucketed
+#: footprint space earlier lanes in the same process already compiled).
+PACKED_SPEEDUP_FLOOR = 1.3
+
 BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
 SERVE_BASELINE_PATH = Path(__file__).parent / "baselines" / "serve_smoke.json"
 KRYLOV_BASELINE_PATH = Path(__file__).parent / "baselines" / "krylov.json"
 FLEET_BASELINE_PATH = Path(__file__).parent / "baselines" / "fleet_smoke.json"
 ROBUST_BASELINE_PATH = Path(__file__).parent / "baselines" / "robust_smoke.json"
+PACKED_BASELINE_PATH = Path(__file__).parent / "baselines" / "packed_smoke.json"
 
 #: Allowed relative regression against the committed baseline metrics.
 REGRESSION_TOLERANCE = 0.20
@@ -475,6 +495,90 @@ def linger_serve_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
             f"p99_ms={stats['p99_latency_ms']:.1f} (no flush; "
             f"admission thread dispatches partial stacks)"),
     ]
+
+
+def packed_serve_comparison(metrics: dict, smoke: bool = False) -> list[Row]:
+    """Packed ragged dispatch vs shape-bucketed dispatch on cold ragged
+    traffic.
+
+    Both modes serve the *same* pre-generated ragged small-n stream
+    (uniform n, mixed k and largest — the fragmented regime that splinters
+    the bucketed path across many coalesce keys) through servers with
+    *cold* ProgramCaches, arriving in flush-paced bursts.  The timed
+    window includes compiles on purpose: a previously-unseen ragged
+    stream is exactly where bucketing pays one compile per footprint and
+    packing pays a couple total, and that — plus the launch-count
+    collapse — is the packed serving win.  Gated metrics:
+
+    - ``packed_vs_bucketed_cold_ratio`` >= :data:`PACKED_SPEEDUP_FLOOR`
+      (plus the committed-baseline regression gate),
+    - ``packed_program_compiles`` strictly below the bucketed count,
+    - ``packed_oracle_failures`` == 0 (every packed eigenvalue set is
+      checked against ``np.linalg.eigvalsh`` on the unpadded matrix).
+
+    Pad-waste fractions are recorded, not cross-gated: the packed cell
+    fraction sits *above* the bucketed one by construction (a
+    block-diagonal row is charged quadratically for its structural
+    off-block zeros) — see ``EeiServer.stats()``.
+    """
+    import time as _time
+
+    from repro.engine import EeiServer
+    from repro.engine.server import ProgramCache
+
+    requests, n_lo, n_hi, burst, max_batch = (
+        PACKED_SMOKE if smoke else PACKED_FULL)
+    rng = np.random.default_rng(9)
+    stream = []
+    for _ in range(requests):
+        n_i = int(rng.integers(n_lo, n_hi + 1))
+        a = rng.standard_normal((n_i, n_i)).astype(np.float32)
+        k_i = int(rng.integers(1, min(4, n_i) + 1))
+        stream.append(((a + a.T) / 2, k_i, bool(rng.integers(0, 2))))
+
+    rows, rps, oracle_failures = [], {}, 0
+    for mode in ("never", "always"):
+        server = EeiServer(max_batch=max_batch, pack=mode,
+                           pack_row_n=PACKED_ROW_N, cache=ProgramCache())
+        t0 = _time.perf_counter()
+        futs = []
+        for i in range(0, len(stream), burst):
+            for a, k_i, lg in stream[i:i + burst]:
+                futs.append(server.submit(a, k_i, largest=lg))
+            server.flush()
+        dt = _time.perf_counter() - t0
+        assert all(f.done() for f in futs)
+        stats = server.stats()
+        server.close()
+        if mode == "always":
+            for (a, k_i, lg), f in zip(stream, futs):
+                lam = np.sort(np.asarray(f.result().eigenvalues,
+                                         np.float64))
+                w = np.linalg.eigvalsh(np.asarray(a, np.float64))
+                ref = np.sort(w[-k_i:] if lg else w[:k_i])
+                scale = max(1.0, float(np.max(np.abs(w))))
+                if np.max(np.abs(lam - ref)) > 5e-4 * scale:
+                    oracle_failures += 1
+        label = "packed" if mode == "always" else "bucketed"
+        rps[label] = requests / dt
+        metrics[f"{label}_cold_requests_per_s"] = requests / dt
+        metrics[f"{label}_program_compiles"] = stats["program_compiles"]
+        metrics[f"{label}_stacks_dispatched"] = stats["stacks_dispatched"]
+        metrics[f"{label}_pad_waste_frac"] = stats["pad_waste_frac"]
+        metrics[f"{label}_failed_requests"] = stats["requests_failed"]
+        rows.append(Row(
+            f"serve/ragged_{label}/r={requests},n={n_lo}..{n_hi}", dt * 1e6,
+            f"requests_per_s={requests / dt:.1f} "
+            f"compiles={stats['program_compiles']} "
+            f"buckets={stats['distinct_buckets']} "
+            f"stacks={stats['stacks_dispatched']} "
+            f"pad_waste={stats['pad_waste_frac']:.2f} (cold cache; "
+            f"burst={burst})"))
+    ratio = rps["packed"] / rps["bucketed"]
+    metrics["packed_vs_bucketed_cold_ratio"] = ratio
+    metrics["packed_oracle_failures"] = oracle_failures
+    rows[-1].derived += f" speedup_vs_bucketed={ratio:.2f}x"
+    return rows
 
 
 def krylov_benchmark(metrics: dict, smoke: bool = False) -> list[Row]:
@@ -944,6 +1048,7 @@ def main() -> None:
     serve_metrics: dict = {}
     serve_rows = serve_mode_comparison(serve_metrics, smoke=args.smoke)
     serve_rows += linger_serve_comparison(serve_metrics, smoke=args.smoke)
+    serve_rows += packed_serve_comparison(serve_metrics, smoke=args.smoke)
     topk_metrics: dict = {}
     topk_rows = topk_sweep_comparison(topk_metrics, smoke=args.smoke)
     robust_metrics: dict = {}
@@ -988,6 +1093,33 @@ def main() -> None:
             f"{serve_metrics['linger_unresolved_futures']} futures did not "
             "resolve in the flushless sparse-stream pass (linger admission "
             "must complete the stream without an explicit flush)")
+    packed_ratio = serve_metrics.get("packed_vs_bucketed_cold_ratio", 0.0)
+    if packed_ratio < PACKED_SPEEDUP_FLOOR:
+        failures.append(
+            f"packed_vs_bucketed_cold_ratio: {packed_ratio:.2f} < "
+            f"{PACKED_SPEEDUP_FLOOR} (packed dispatch must beat bucketed "
+            "requests/s on the cold ragged small-n stream)")
+    failures += check_regression(
+        serve_metrics, PACKED_BASELINE_PATH,
+        ("packed_vs_bucketed_cold_ratio",))
+    if serve_metrics.get("packed_program_compiles", 0) >= \
+            serve_metrics.get("bucketed_program_compiles", 1):
+        failures.append(
+            "packed_program_compiles: "
+            f"{serve_metrics.get('packed_program_compiles')} >= "
+            f"{serve_metrics.get('bucketed_program_compiles')} (packing "
+            "must collapse the ragged stream into fewer compiled "
+            "programs than shape bucketing)")
+    if serve_metrics.get("packed_oracle_failures", 0):
+        failures.append(
+            "packed_oracle_failures: "
+            f"{serve_metrics['packed_oracle_failures']} packed results "
+            "outside the eigvalsh oracle tolerance")
+    for key in ("packed_failed_requests", "bucketed_failed_requests"):
+        if serve_metrics.get(key, 0):
+            failures.append(
+                f"{key}: {serve_metrics[key]} requests resolved with an "
+                "error on the ragged stream")
     if serve_metrics.get("linger_failed_requests", 0):
         failures.append(
             "linger_failed_requests: "

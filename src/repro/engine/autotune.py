@@ -52,11 +52,17 @@ REPO_DEFAULT_PATH = Path(__file__).with_name("calibration_default.json")
 #: queries through the windowed stage composition.  v4 (PR 6) adds
 #: ``krylov_n_min`` — the measured ``n`` at/above which the Lanczos partial
 #: reduce beats the dense Householder reduce for narrow top-k windows.
+#: v5 (PR 9) adds the packed-dispatch pair: ``pack_n_max`` — the largest
+#: bucketed ``n`` whose requests are worth coalescing into segment-packed
+#: rows — and ``packed_eigh_n_max`` — the packed *row width* at/below which
+#: the packed chain pins the LAPACK eigh composition (above it the
+#: segmented-Sturm tridiagonal chain wins).
 #: Older tables still load (warn once per process + defaults for the
 #: missing fields): a v2 table plans windows from the static
 #: ``plan.WINDOWED_K_FRAC`` fallback exactly like an uncalibrated host, a
-#: v3 table routes Krylov from the static ``plan.KRYLOV_N_MIN``.
-_SCHEMA_VERSION = 4
+#: v3 table routes Krylov from the static ``plan.KRYLOV_N_MIN``, a v4
+#: table packs from the static ``plan.PACK_N_MAX`` / ``PACKED_EIGH_N_MAX``.
+_SCHEMA_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +79,10 @@ class CalibrationTable:
     windowed_k_frac: float = WINDOWED_K_FRAC  # k/n below which windowed wins
     krylov_n_min: Optional[int] = None  # n at which krylov reduce wins;
     # None -> the static plan.KRYLOV_N_MIN fallback (pre-v4 tables)
+    pack_n_max: Optional[int] = None  # largest bucketed n worth packing;
+    # None -> the static plan.PACK_N_MAX fallback (pre-v5 tables)
+    packed_eigh_n_max: Optional[int] = None  # packed row width at/below
+    # which the packed chain pins eigh; None -> plan.PACKED_EIGH_N_MAX
     host: str = ""  # host class the numbers were measured on
     backend: str = ""  # jax backend (cpu | tpu | gpu) at measurement
     measured_at: str = ""  # ISO timestamp, empty for hand-written tables
@@ -133,6 +143,8 @@ class CalibrationTable:
             windowed_k_frac=float(
                 d.get("windowed_k_frac", WINDOWED_K_FRAC)),
             krylov_n_min=_opt_int("krylov_n_min"),
+            pack_n_max=_opt_int("pack_n_max"),
+            packed_eigh_n_max=_opt_int("packed_eigh_n_max"),
             host=str(d.get("host", "")),
             backend=str(d.get("backend", "")),
             measured_at=str(d.get("measured_at", "")),
@@ -415,6 +427,83 @@ def _measure_krylov_crossover(
     return KRYLOV_NEVER
 
 
+def _packed_uniform_layout(batch: int, row_n: int, seg_n: int):
+    """A uniform packed stack: ``row_n // seg_n`` segments per row."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    slots = row_n // seg_n
+    a = np.asarray(_sym_stack(batch * slots, seg_n))
+    rows = np.zeros((batch, row_n, row_n), np.float32)
+    off = np.zeros((batch, slots), np.int32)
+    length = np.full((batch, slots), seg_n, np.int32)
+    for b in range(batch):
+        for s in range(slots):
+            o = s * seg_n
+            rows[b, o:o + seg_n, o:o + seg_n] = a[b * slots + s]
+            off[b, s] = o
+    return jnp.asarray(a), jnp.asarray(rows), jnp.asarray(off), \
+        jnp.asarray(length)
+
+
+def _measure_pack_crossovers(
+    row_ns: Sequence[int], seg_ns: Sequence[int], batch: int, k: int,
+    backend: str = "jnp",
+) -> tuple:
+    """``(pack_n_max, packed_eigh_n_max)`` measured on uniform packed rows.
+
+    ``pack_n_max``: largest segment ``n`` where one packed launch of
+    ``(batch, row)`` beats the *fragmented* bucketed service of the same
+    requests — ``slots`` separate ``(batch, n)`` launches, one per
+    distinct segment size.  That is the stream condition the packer
+    replaces: a mixed small-n stream spreads across one coalesce queue
+    per distinct ``n``, so the bucketed path pays a launch (and a
+    compiled program) per ``n`` while the packed path coalesces them all
+    into one row queue.  0 when packing never wins even against the
+    fragmented baseline, which keeps the planner's ``"auto"`` gate shut.
+
+    ``packed_eigh_n_max``: largest swept row width where the packed eigh
+    chain still beats the packed segmented-tridiagonal chain (mirrors the
+    bucketed eigh crossover, which moves again for packed rows because
+    eigh pays the full O(row^3) while the segmented chain's Sturm lanes
+    pay per-segment brackets).
+    """
+    from repro.engine.engine import packed_topk_program, topk_program
+    from repro.engine.plan import SolverPlan
+
+    eigh_plan = SolverPlan(method="eigh", backend=backend)
+    row0 = row_ns[0]
+    pack_n_max = 0
+    for seg_n in seg_ns:
+        if seg_n * 2 > row0:
+            break
+        a, rows, off, length = _packed_uniform_layout(batch, row0, seg_n)
+        slots = row0 // seg_n
+        chunks = [a[s * batch:(s + 1) * batch] for s in range(slots)]
+        bucketed = topk_program(eigh_plan, k, True)
+        packed = packed_topk_program(eigh_plan, k, True)
+        t_b = _time(lambda: [bucketed(c) for c in chunks])
+        t_p = _time(lambda: packed(rows, off, length))
+        if t_p < t_b:
+            pack_n_max = seg_n
+    seg_n = max(seg_ns[0], 8)
+    packed_eigh_n_max = row_ns[-1]
+    prev = max(row_ns[0] // 2, seg_n * 2)
+    tri_plan = SolverPlan(
+        method="eei_tridiag", backend=backend, spectrum="windowed")
+    for row_n in row_ns:
+        _, rows, off, length = _packed_uniform_layout(batch, row_n, seg_n)
+        t_eigh = _time(lambda: packed_topk_program(
+            eigh_plan, k, True)(rows, off, length))
+        t_tri = _time(lambda: packed_topk_program(
+            tri_plan, k, True)(rows, off, length))
+        if t_tri < t_eigh:
+            packed_eigh_n_max = prev  # last width where eigh still won
+            break
+        prev = row_n
+    return pack_n_max, packed_eigh_n_max
+
+
 def calibrate(
     *,
     smoke: bool = False,
@@ -433,6 +522,7 @@ def calibrate(
         bench_b, bench_n = 8, 32
         win_n, win_ks = 32, (1, 4, 16, 32)
         krylov_sizes, krylov_k, krylov_b = [64, 128], 4, 2
+        pack_rows, pack_segs, pack_b = [32, 64], (8, 16), 2
     else:
         sizes = [8, 16, 24, 32, 48, 64, 96, 128]
         win_n, win_ks = 64, (1, 2, 4, 8, 16, 32, 64)
@@ -447,6 +537,7 @@ def calibrate(
         st_candidates = [(4, 128), (8, 64), (8, 128), (16, 128), (8, 256)]
         bench_b, bench_n = 64, 64
         krylov_sizes, krylov_k, krylov_b = [256, 512, 1024], 8, 2
+        pack_rows, pack_segs, pack_b = [64, 128, 256], (8, 16, 32), 4
     eigh_x, dense_x = _measure_crossovers(sizes, k=k, batch=batch,
                                           backend="jnp")
     # The planner's accelerator default is the pallas backend — time its
@@ -458,6 +549,8 @@ def calibrate(
     windowed_frac = _measure_windowed_crossover(win_n, batch, win_ks)
     krylov_n_min = _measure_krylov_crossover(
         krylov_sizes, k=krylov_k, batch=krylov_b)
+    pack_n_max, packed_eigh_n_max = _measure_pack_crossovers(
+        pack_rows, pack_segs, batch=pack_b, k=k)
     return CalibrationTable(
         eigh_crossover_n=int(eigh_x),
         dense_crossover_n=int(dense_x),
@@ -468,6 +561,8 @@ def calibrate(
         pallas_dense_crossover_n=int(pallas_dense_x),
         windowed_k_frac=float(windowed_frac),
         krylov_n_min=int(krylov_n_min),
+        pack_n_max=int(pack_n_max),
+        packed_eigh_n_max=int(packed_eigh_n_max),
         host=host_key(),
         backend=jax.default_backend(),
         measured_at=time.strftime("%Y-%m-%dT%H:%M:%S"),

@@ -63,6 +63,7 @@ from repro.engine.registry import (
     register_composition,
 )
 from repro.engine.verify import verify_topk as _verify_topk
+from repro.engine.verify import verify_topk_packed as _verify_topk_packed
 from repro.linalg import householder, sturm
 
 # ---------------------------------------------------------------------------
@@ -129,6 +130,28 @@ def _make_krylov_stages(plan: SolverPlan):
     }
 
 
+def _make_segmented_sturm_stage(iters: int, block_b=None, block_m=None):
+    """Per-segment windowed Sturm on a packed band.
+
+    The segmented bracket/target layout is lane bookkeeping around the same
+    bisection loop, and the kernels module owns that layout — so every
+    backend shares the one implementation (interpret mode keeps it portable
+    off-TPU; the import stays lazy per the lazy-kernel convention).
+    """
+
+    def tridiag_eigenvalues_segmented(d, e, seg_off, seg_len, k, largest):
+        from repro.kernels.sturm import ops as sturm_ops
+
+        kwargs = {}
+        if block_b is not None:
+            kwargs = {"block_b": block_b, "block_m": block_m}
+        return sturm_ops.sturm_eigenvalues_segmented(
+            d, e, seg_off, seg_len, k=int(k), largest=bool(largest),
+            n_iter=iters, **kwargs)
+
+    return tridiag_eigenvalues_segmented
+
+
 # ---------------------------------------------------------------------------
 # reference / jnp
 # ---------------------------------------------------------------------------
@@ -169,7 +192,9 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
         "tridiag_signs": _tridiag_signs,
         "dense_signs": (
             _dense_signs_reference if name == "reference" else _dense_signs),
+        "tridiag_eigenvalues_segmented": _make_segmented_sturm_stage(iters),
         "verify_topk": _verify_topk,
+        "verify_topk_packed": _verify_topk_packed,
         **_make_krylov_stages(plan),
     })
 
@@ -242,7 +267,10 @@ def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
         "minor_det_components": _minor_det_components,
         "tridiag_signs": _tridiag_signs,
         "dense_signs": _dense_signs,
+        "tridiag_eigenvalues_segmented": _make_segmented_sturm_stage(
+            iters, st_bb, st_bm),
         "verify_topk": _verify_topk,
+        "verify_topk_packed": _verify_topk_packed,
         **_make_krylov_stages(plan),
     })
 
@@ -309,6 +337,23 @@ _MAP_SI = StageSig(
     ("lam_sel", "vecs"))
 _MAP_SI_EIG = StageSig(
     "recover", "shift_invert_map", ("sigma", "lam_sel"), ("lam_sel",))
+# Packed (segment-stacked) chains: the input row is block-diagonal, so the
+# full-chain stages apply to the packed matrix itself — the packed eigh
+# chain gates LAPACK's columns per segment by mass, and the packed tridiag
+# chain swaps the windowed Sturm for its segmented twin (per-lane
+# bracket/target state) while the minor-det and sign-recurrence stages run
+# unchanged on the flattened (b, S*k) window (a segment eigenvalue has ~0
+# minor-det mass outside its block, and the sign recurrence restarts at
+# every e ~= 0 junction by construction).
+_SPEC_TRI_SEG = StageSig(
+    "spectrum", "tridiag_segmented", ("d", "e", "seg_off", "seg_len"),
+    ("lam_sel",))
+_REC_PACKED_SELECT = StageSig(
+    "recover", "packed_select", ("lam", "v", "seg_off", "seg_len"),
+    ("lam_seg", "vecs_seg"))
+_REC_PACKED_RESHAPE = StageSig(
+    "recover", "packed_reshape", ("lam_sel", "vecs", "seg_off", "seg_len"),
+    ("lam_seg", "vecs_seg"))
 
 
 def register_default_compositions() -> None:
@@ -324,6 +369,10 @@ def register_default_compositions() -> None:
             StageSig("recover", "eigh_solve", ("lam", "v"), ("mags",)),
         ),
         eigenvalues=(_SPEC_DENSE,),
+        packed_topk=(
+            StageSig("spectrum", "eigh", ("a",), ("lam", "v")),
+            _REC_PACKED_SELECT,
+        ),
     ))
     register_composition(Composition(
         name="eei_dense", method="eei_dense", windowed=False,
@@ -345,6 +394,9 @@ def register_default_compositions() -> None:
         name="eei_tridiag_windowed", method="eei_tridiag", windowed=True,
         topk=(_REDUCE, _SPEC_TRI_WIN, _COMP_DET, _REC_TRI),
         eigenvalues=(_REDUCE_NOQ, _SPEC_TRI_WIN),
+        packed_topk=(
+            _REDUCE, _SPEC_TRI_SEG, _COMP_DET, _REC_TRI,
+            _REC_PACKED_RESHAPE),
     ))
     # Krylov: the Lanczos partial band replaces Householder; everything
     # after the reduce is the *same* windowed chain (the stages are

@@ -73,14 +73,27 @@ class TopkResult(NamedTuple):
     degraded = False
 
 
+class PackedTopkResult(NamedTuple):
+    """Per-slot windows of a segment-packed stack: ``eigenvalues
+    (b, S, k)`` ascending per slot and ``vectors (b, S, k, n)`` over the
+    full packed-row width (each segment's columns live at its offset; the
+    server slices them out on retire).  Slots with fewer than ``k`` real
+    eigenvalues carry finite sentinel values *outside* the slice a
+    ``k' <= seg_len`` request reads — at the front for ``largest`` windows,
+    at the back for smallest — mirroring the bucketed guard convention."""
+
+    eigenvalues: jax.Array
+    vectors: jax.Array
+
+
 class ProgramSpec(NamedTuple):
     """Static description of one jitted program: kind + window + verify.
 
     ``verify=True`` appends the backend's ``verify`` stage to the chain:
     the program then returns ``(TopkResult, VerifyFlags)`` instead of the
-    bare result (topk programs only)."""
+    bare result (topk / packed_topk programs only)."""
 
-    kind: str  # solve | topk | eigenvalues
+    kind: str  # solve | topk | eigenvalues | packed_topk
     k: int = 0  # 0 -> no window (full spectrum)
     largest: bool = True
     verify: bool = False
@@ -282,12 +295,106 @@ def _b_verify_topk(lib, plan, spec):
     return fn
 
 
+# -- packed (segment-stacked) stages ----------------------------------------
+
+
+def _b_packed_select(lib, plan, spec):
+    """Per-slot window selection from a full eigh of the packed row.
+
+    A packed row is block-diagonal, so eigh's eigenvectors are each
+    supported on exactly one segment (or on guard slack) — in-segment mass
+    is the ownership test.  Guard eigenpairs have zero mass in every slot
+    and near-degenerate *cross-segment* pairs can mix (mass ~ 0.5 each);
+    both fail the > 0.5 gate, leaving finite sentinels the per-segment
+    verify stage flags, which escalates the affected requests through the
+    server's fallback chain instead of returning mixed vectors.
+    """
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        lam, v = st["lam"], st["v"]  # (b, N) asc, (b, N, N) columns = vecs
+        seg_off, seg_len = st["seg_off"], st["seg_len"]  # (b, S) int32
+        b, n = lam.shape
+        col = jnp.arange(n, dtype=jnp.int32)
+        in_seg = ((seg_off[:, :, None] <= col[None, None, :])
+                  & (col[None, None, :] <
+                     (seg_off + seg_len)[:, :, None]))  # (b, S, N_pos)
+        mass = jnp.einsum(
+            "bsp,bpj->bsj", in_seg.astype(lam.dtype), v * v)  # (b, S, N_vec)
+        owned = mass > 0.5
+        big = jnp.asarray(jnp.finfo(lam.dtype).max, lam.dtype) / 8
+        if largest:
+            vals = jnp.where(owned, lam[:, None, :], -big)
+            top, idx = jax.lax.top_k(vals, k)  # descending; sentinels last
+            lam_seg = top[..., ::-1]  # ascending per slot, sentinels first
+            idx = idx[..., ::-1]
+        else:
+            vals = jnp.where(owned, -lam[:, None, :], -big)
+            top, idx = jax.lax.top_k(vals, k)  # -lam desc = lam ascending
+            lam_seg = -top  # ascending per slot, sentinels (+big) last
+        vt = jnp.swapaxes(v, -1, -2)  # (b, N_vec, N_pos), rows = vecs
+        vecs_seg = vt[jnp.arange(b)[:, None, None], idx, :]  # (b, S, k, N)
+        return {"lam_seg": lam_seg, "vecs_seg": vecs_seg}
+
+    return fn
+
+
+def _b_tridiag_segmented(lib, plan, spec):
+    """Per-segment windowed Sturm on the packed band (segmented kernel).
+
+    Provides the flattened ``(b, S*k)`` window as ``lam_sel`` so the
+    existing minor-determinant components stage and sign-recurrence recover
+    stage run on it unchanged — both treat window lanes independently, and
+    on a block-diagonal band the minor-determinant row of an eigenvalue in
+    segment ``s`` normalizes to that segment's magnitudes with ~0 mass
+    elsewhere (the EEI identity applied to the packed matrix itself).
+    """
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        lam_seg = lib.tridiag_eigenvalues_segmented(
+            st["d"], st["e"], st["seg_off"], st["seg_len"], k, largest)
+        b, s, _ = lam_seg.shape
+        return {"lam_sel": lam_seg.reshape(b, s * k)}
+
+    return fn
+
+
+def _b_packed_reshape(lib, plan, spec):
+    k = spec.k
+
+    def fn(st):
+        lam_sel, vecs = st["lam_sel"], st["vecs"]  # (b, S*k), (b, S*k, N)
+        b = lam_sel.shape[0]
+        s = st["seg_off"].shape[1]
+        return {"lam_seg": lam_sel.reshape(b, s, k),
+                "vecs_seg": vecs.reshape(b, s, k, vecs.shape[-1])}
+
+    return fn
+
+
+def _b_verify_topk_packed(lib, plan, spec):
+    def fn(st):
+        return {"flags": lib.verify_topk_packed(
+            st["a"], st["seg_off"], st["seg_len"], st["lam_seg"],
+            st["vecs_seg"], spec.largest)}
+
+    return fn
+
+
 #: The verify stage appended to a topk chain when ``spec.verify`` is set.
 #: Not part of any registered composition — the engine appends it, so every
 #: method/backend pair gets verification without N new compositions.
 _VERIFY_SIG = registry.StageSig(
     role="verify", name="verify_topk",
     requires=("a", "lam_sel", "vecs"), provides=("flags",))
+
+#: Packed twin: per-slot flags ``(b, S)`` so one bad segment degrades one
+#: request, not the whole packed row (the PR-7 guarantee held per request).
+_PACKED_VERIFY_SIG = registry.StageSig(
+    role="verify", name="verify_topk_packed",
+    requires=("a", "seg_off", "seg_len", "lam_seg", "vecs_seg"),
+    provides=("flags",))
 
 
 _STAGE_BUILDERS = {
@@ -311,7 +418,11 @@ _STAGE_BUILDERS = {
     ("recover", "tridiag_solve"): _b_tridiag_solve,
     ("recover", "dense_signs"): _b_dense_signs,
     ("recover", "shift_invert_map"): _b_shift_invert_map,
+    ("spectrum", "tridiag_segmented"): _b_tridiag_segmented,
+    ("recover", "packed_select"): _b_packed_select,
+    ("recover", "packed_reshape"): _b_packed_reshape,
     ("verify", "verify_topk"): _b_verify_topk,
+    ("verify", "verify_topk_packed"): _b_verify_topk_packed,
 }
 
 
@@ -337,7 +448,7 @@ def _resolve_chain(plan: SolverPlan, spec: ProgramSpec):
       without one run the full chain and the executor slices the window
       (bitwise-identical, since bisection lanes are index-independent).
     """
-    if spec.kind == "topk":
+    if spec.kind in ("topk", "packed_topk"):
         windowed = plan.spectrum == "windowed"
     elif spec.kind == "eigenvalues":
         windowed = spec.k > 0
@@ -422,6 +533,50 @@ def topk_program(plan: SolverPlan, k: int, largest: bool,
 def _eigenvalues_program(plan: SolverPlan, k: int = 0, largest: bool = True):
     return _build_program(
         plan, ProgramSpec("eigenvalues", int(k), bool(largest)))
+
+
+def _build_packed_program(plan: SolverPlan, spec: ProgramSpec):
+    """Jitted executor for a segment-packed stack.
+
+    Same graph walk as :func:`_build_program`, but the program takes the
+    segment layout as traced operands — ``fn(a, seg_off, seg_len)`` — and
+    the final state carries per-slot windows.  The slot count ``S`` is a
+    property of the operand shapes, not the cache key: lowering at a
+    different ``(b, N, S)`` retraces the same python callable.
+    """
+    lib = registry.get_backend(plan)
+    _, chain = _resolve_chain(plan, spec)
+    if spec.verify:
+        chain = chain + (_PACKED_VERIFY_SIG,)
+    fns = [_STAGE_BUILDERS[(sig.role, sig.name)](lib, plan, spec)
+           for sig in chain]
+
+    def fn(a, seg_off, seg_len):
+        state = {"a": a, "seg_off": seg_off.astype(jnp.int32),
+                 "seg_len": seg_len.astype(jnp.int32)}
+        for f in fns:
+            state.update(f(state))
+        result = PackedTopkResult(state["lam_seg"], state["vecs_seg"])
+        return (result, state["flags"]) if spec.verify else result
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def packed_topk_program(plan: SolverPlan, k: int, largest: bool,
+                        verify: bool = False):
+    """The jitted per-slot top-k program for one segment-packed layout.
+
+    ``k`` is the *slot window* (the packer's fixed per-slot lane count —
+    every packed request's ``k`` is <= it); the serving runtime slices each
+    request's ``k' <= k`` window out per slot on retire, exactly as the
+    bucketed path slices its pow2-k window.  With ``verify=True`` the
+    program returns ``(PackedTopkResult, flags (b, S))`` — per-slot flags,
+    so one poisoned segment degrades one request, not its whole row.
+    """
+    return _build_packed_program(
+        plan, ProgramSpec("packed_topk", int(k), bool(largest),
+                          bool(verify)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -66,6 +66,21 @@ KRYLOV_N_MIN = 1024
 #: band approaches n and dense Householder is strictly better.
 KRYLOV_K_FRAC = 1.0 / 16.0
 
+#: Largest *bucketed* ``n`` whose requests the serving packer coalesces
+#: into segment-packed rows under ``pack="auto"``.  Uncalibrated fallback —
+#: schema-v5 calibration tables carry the measured value
+#: (:func:`resolved_pack_n_max`).  Packing wins where per-launch overhead
+#: and pad waste dominate the solve, i.e. well below the eigh crossover.
+PACK_N_MAX = 32
+
+#: Packed *row width* at/below which the packed composition pins the LAPACK
+#: eigh chain; wider rows take the segmented-Sturm tridiagonal chain.
+#: Mirrors the bucketed eigh crossover (the packed row is one matrix as far
+#: as LAPACK is concerned), measured separately because the segmented chain
+#: pays per-segment bracket work, not per-row.  Uncalibrated fallback — see
+#: :func:`resolved_packed_eigh_n_max`.
+PACKED_EIGH_N_MAX = 128
+
 
 def resolved_krylov_n_min() -> int:
     """The measured ``n`` at which the Krylov reduce starts winning here.
@@ -96,6 +111,57 @@ def resolved_windowed_k_frac() -> float:
     if table is None:
         return WINDOWED_K_FRAC
     return table.windowed_k_frac
+
+
+def resolved_pack_n_max() -> int:
+    """The measured largest bucketed ``n`` worth segment-packing here.
+
+    Reads the calibration table (see ``repro.engine.autotune``); the static
+    :data:`PACK_N_MAX` fallback applies when no table resolves or the table
+    predates schema v5.
+    """
+    from repro.engine import autotune
+
+    table = autotune.get_table()
+    if table is None or table.pack_n_max is None:
+        return PACK_N_MAX
+    return table.pack_n_max
+
+
+def resolved_packed_eigh_n_max() -> int:
+    """The measured packed row width at/below which eigh wins the packed
+    chain (static :data:`PACKED_EIGH_N_MAX` fallback for pre-v5 tables)."""
+    from repro.engine import autotune
+
+    table = autotune.get_table()
+    if table is None or table.packed_eigh_n_max is None:
+        return PACKED_EIGH_N_MAX
+    return table.packed_eigh_n_max
+
+
+def packed_plan_for(
+    row_n: int,
+    *,
+    backend: Optional[BackendName] = None,
+    precision: Optional[str] = None,
+) -> SolverPlan:
+    """Pick the plan a segment-packed row stack executes.
+
+    The packed row is block-diagonal, so both packed compositions apply to
+    it directly; the choice is the packed twin of the bucketed eigh/EEI
+    crossover, keyed on the *row width* (what LAPACK sees) rather than any
+    single request's ``n``: at/below :func:`resolved_packed_eigh_n_max`
+    the eigh chain (one LAPACK call + mass-gated per-slot selection) wins;
+    above it the segmented-Sturm windowed tridiagonal chain takes over.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if row_n <= resolved_packed_eigh_n_max():
+        return SolverPlan(
+            method="eigh", backend=backend, precision=precision)
+    return SolverPlan(
+        method="eei_tridiag", backend=backend, spectrum="windowed",
+        precision=precision)
 
 
 def resolved_crossovers(backend: Optional[str] = None) -> tuple:

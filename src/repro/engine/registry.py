@@ -30,6 +30,11 @@ The shared state keys (see the default compositions in ``backends.py``):
     mag_sel   (b, k, n)    selected |v|^2 rows (pre-sign basis)
     v         (b, n, n)    LAPACK eigenvectors (eigh composition only)
     vecs      (b, k, n)    signed, unit-norm selected eigenvectors
+    seg_off   (b, S) int32 segment start columns (packed_topk programs)
+    seg_len   (b, S) int32 segment lengths, 0 = empty slot (packed_topk)
+    lam_seg   (b, S, k)    per-slot eigenvalue windows, ascending per slot
+    vecs_seg  (b, S, k, n) per-slot eigenvectors (full packed-row width;
+                           the server slices each segment's columns out)
 """
 
 from __future__ import annotations
@@ -49,12 +54,17 @@ STAGE_ROLES = (
     "reduce", "spectrum", "minor_spectra", "components", "recover", "verify")
 
 #: Program kinds a composition can serve, with the state each starts from
-#: and the keys its final state must provide.
-PROGRAM_KINDS = ("solve", "topk", "eigenvalues")
+#: and the keys its final state must provide.  ``packed_topk`` is the
+#: segment-packed serving kind: the input stack is a batch of block-diagonal
+#: rows, each carrying up to ``S`` independent request matrices (segments)
+#: described by ``seg_off``/``seg_len`` ``(b, S)`` int32 operands, and the
+#: program returns per-slot windows instead of per-row windows.
+PROGRAM_KINDS = ("solve", "topk", "eigenvalues", "packed_topk")
 _INITIAL_KEYS = {
     "solve": frozenset({"a"}),
     "topk": frozenset({"a", "idx"}),
     "eigenvalues": frozenset({"a", "idx"}),
+    "packed_topk": frozenset({"a", "seg_off", "seg_len"}),
 }
 _FINAL_KEYS = {
     "solve": ({"lam", "mags"},),
@@ -62,6 +72,7 @@ _FINAL_KEYS = {
     # windowed eigenvalue chains end at the window; full chains at the
     # spectrum — either terminal is a valid eigenvalues program.
     "eigenvalues": ({"lam"}, {"lam_sel"}),
+    "packed_topk": ({"lam_seg", "vecs_seg"},),
 }
 
 
@@ -96,6 +107,7 @@ class Composition:
     topk: Tuple[StageSig, ...]
     solve: Optional[Tuple[StageSig, ...]] = None
     eigenvalues: Optional[Tuple[StageSig, ...]] = None
+    packed_topk: Optional[Tuple[StageSig, ...]] = None
 
     def chain(self, kind: str) -> Optional[Tuple[StageSig, ...]]:
         if kind not in PROGRAM_KINDS:

@@ -84,7 +84,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import engine as engine_mod
-from repro.engine.plan import SolverPlan, fallback_chain, plan_for
+from repro.engine import registry
+from repro.engine.plan import (
+    SolverPlan,
+    fallback_chain,
+    packed_plan_for,
+    plan_for,
+    resolved_pack_n_max,
+)
 from repro.engine.verify import verify_topk_host
 from repro.kernels import blocks
 from repro.runtime.chaos import ChaosError, ChaosFailure, ChaosMonkey
@@ -207,6 +214,32 @@ class ShapeBucket(NamedTuple):
         )
 
 
+class PackedBucket(NamedTuple):
+    """One segment-packed program shape: ``b`` block-diagonal rows of width
+    ``n``, each carrying up to ``s`` request segments, solved through the
+    engine's ``packed_topk`` program kind (``k`` lanes per slot).
+
+    A distinct class from :class:`ShapeBucket` on purpose: the two are
+    tuples of different arity, so a packed key can never collide with a
+    bucketed key in the :class:`ProgramCache` and ``isinstance`` routes the
+    lowering (the packed program takes three operands, not one).
+    """
+
+    b: int  # stack size (power of two)
+    n: int  # packed row width (block-grid aligned)
+    s: int  # slot lanes per row (power of two)
+    k: int  # per-slot window (power of two, >= every rider's k)
+    largest: bool
+
+
+def _bucket_label(bucket) -> str:
+    """Human-readable stats key for either bucket type."""
+    tail = "L" if bucket.largest else "S"
+    if isinstance(bucket, PackedBucket):
+        return f"pack:b{bucket.b}n{bucket.n}s{bucket.s}k{bucket.k}{tail}"
+    return f"b{bucket.b}n{bucket.n}k{bucket.k}{tail}"
+
+
 class _PendingProgram:
     """In-flight compile: later same-bucket getters wait on the event."""
 
@@ -270,7 +303,7 @@ class ProgramCache:
             self.hits = 0
             self.misses = 0
 
-    def get(self, bucket: ShapeBucket, plan: SolverPlan, dtype, *,
+    def get(self, bucket, plan: SolverPlan, dtype, *,
             verify: bool = False) -> object:
         key = (bucket, plan, jnp.dtype(dtype).name, bool(verify))
         with self._lock:
@@ -290,11 +323,18 @@ class ProgramCache:
                 raise found.error
             return found.program
         try:
-            fn = engine_mod.topk_program(
-                plan, bucket.k, bucket.largest, bool(verify))
             sds = jax.ShapeDtypeStruct((bucket.b, bucket.n, bucket.n),
                                        jnp.dtype(dtype))
-            prog = fn.lower(sds).compile()
+            if isinstance(bucket, PackedBucket):
+                fn = engine_mod.packed_topk_program(
+                    plan, bucket.k, bucket.largest, bool(verify))
+                seg_sds = jax.ShapeDtypeStruct(
+                    (bucket.b, bucket.s), jnp.dtype(jnp.int32))
+                prog = fn.lower(sds, seg_sds, seg_sds).compile()
+            else:
+                fn = engine_mod.topk_program(
+                    plan, bucket.k, bucket.largest, bool(verify))
+                prog = fn.lower(sds).compile()
         except BaseException as exc:
             entry.error = exc
             with self._lock:
@@ -323,7 +363,10 @@ class _Request:
 class _InflightStack:
     result: object  # TopkResult of device arrays, possibly still computing
     requests: list  # the _Requests whose slices ride in this stack
-    bucket: ShapeBucket
+    bucket: object  # ShapeBucket, or PackedBucket for segment-packed stacks
+    # Packed stacks only: per-request ``(row, slot, offset)`` parallel to
+    # ``requests`` — retire slices each request's window out of its slot.
+    layout: Optional[list] = None
 
 
 @dataclasses.dataclass
@@ -333,10 +376,15 @@ class DispatchRecord:
     futures were resolved from its rows.  Recorded only when the server is
     constructed with ``record_dispatches=True``."""
 
-    bucket: ShapeBucket
+    bucket: object  # ShapeBucket, or PackedBucket for packed dispatches
     plan: SolverPlan
     stack: np.ndarray  # the assembled (bucket.b, bucket.n, bucket.n) input
-    requests: list  # [_Request, ...] in row order
+    requests: list  # [_Request, ...] in row (packed: layout) order
+    # Packed dispatches only: the (b, s) int32 segment layout operands and
+    # the per-request (row, slot, offset) triples parallel to ``requests``.
+    seg_off: Optional[np.ndarray] = None
+    seg_len: Optional[np.ndarray] = None
+    layout: Optional[list] = None
 
 
 class EeiServer:
@@ -402,6 +450,9 @@ class EeiServer:
         mesh: Optional[jax.sharding.Mesh] = None,
         cache: Optional[ProgramCache] = None,
         record_dispatches: bool = False,
+        pack: str = "never",
+        pack_row_n: int = 64,
+        pack_k: int = 8,
         verify: bool = True,
         fallback: bool = True,
         max_retries: int = 2,
@@ -436,6 +487,20 @@ class EeiServer:
         self.pending_policy = pending_policy
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if pack not in ("auto", "never", "always"):
+            raise ValueError(
+                f"pack must be 'auto', 'never' or 'always', got {pack!r}")
+        if pack_row_n < n_align:
+            raise ValueError(
+                f"pack_row_n must be >= n_align ({n_align}), got {pack_row_n}")
+        if pack_k < 1:
+            raise ValueError(f"pack_k must be >= 1, got {pack_k}")
+        self.pack = pack
+        self.pack_row_n = _bucket_n(pack_row_n, n_align)
+        self.pack_k = int(pack_k)
+        # Slot lanes per packed row: bounded by the smallest footprint a
+        # segment can occupy (one align granule).
+        self._pack_max_slots = max(1, self.pack_row_n // n_align)
         self.cache = cache if cache is not None else ProgramCache()
         self.record_dispatches = record_dispatches
         self.dispatch_log: "list[DispatchRecord]" = []
@@ -486,11 +551,16 @@ class EeiServer:
         self.requests_rejected = 0  # late submits after close()
         self.requests_cancelled = 0  # caller-cancelled while still pending
         self.stacks_dispatched = 0
-        # Pad-waste accounting: every dispatched grid cell (b * n^2 per
-        # stack) versus the cells carrying real request data (sum of the
-        # group's n_i^2).  The complement is what guard diagonals and
-        # batch-repeat padding burn — the measurement the ROADMAP's
-        # "packed ragged dispatch" item needs before it can claim a win.
+        self.packed_stacks_dispatched = 0
+        self.packed_requests_completed = 0
+        # Pad-waste accounting: every grid cell of a stack (b * n^2) versus
+        # the cells carrying real request data (sum of the group's n_i^2).
+        # The complement is what guard diagonals and batch-repeat padding
+        # burn.  Cells are counted once per *successfully retired* stack —
+        # at launch time they would double-count under retries, bisection
+        # splits and fleet redispatch (the same request's cells landing
+        # again with every relaunch), which is exactly the over-reporting
+        # bug this accounting replaces; see ``stats()`` for the contract.
         self.grid_cells_total = 0
         self.grid_cells_real = 0
         self._pad_cells_by_bucket: dict = {}  # bucket -> [real, total]
@@ -621,12 +691,44 @@ class EeiServer:
         # stack together (the program runs the group's max k rounded to a
         # power of two and each future slices its own k back out), so a
         # mixed-k stream coalesces into full stacks instead of fragmenting
-        # into near-empty per-k groups.
+        # into near-empty per-k groups.  Packable small-n requests coalesce
+        # into ONE key per extreme regardless of their n — that collapse is
+        # the core of the packing win on mixed streams: one queue fills a
+        # stack as fast as all the per-n queues did together, so linger
+        # windows stop fragmenting sparse traffic into padded singletons.
+        if self._packable(req):
+            return ("pack", req.largest)
         return (_bucket_n(req.n, self.n_align), req.largest)
+
+    def _packable(self, req: _Request) -> bool:
+        """Whether a request rides the segment-packed path.
+
+        ``"auto"`` packs requests whose aligned footprint is at most the
+        calibrated :func:`~repro.engine.plan.resolved_pack_n_max` (and at
+        most half a row, so every packed row carries >= 2 segments);
+        ``"always"`` relaxes to anything that fits a row.  ``k`` stays
+        bounded by ``pack_k`` so the per-slot window never explodes the
+        packed program's lane count.
+        """
+        if self.pack == "never" or req.k > self.pack_k:
+            return False
+        footprint = _bucket_n(req.n, self.n_align)
+        if self.pack == "always":
+            return footprint <= self.pack_row_n
+        return footprint <= min(resolved_pack_n_max(), self.pack_row_n // 2)
+
+    def _group_cap(self, key: tuple) -> int:
+        """Requests forming a *full* stack for this coalesce key: packed
+        keys fill ``max_batch`` rows of up to ``_pack_max_slots`` segments,
+        bucketed keys one request per row."""
+        if key[0] == "pack":
+            return self.max_batch * self._pack_max_slots
+        return self.max_batch
 
     def _pop_group_locked(self, key: tuple) -> list:
         q = self._queues[key]
-        group = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+        group = [q.popleft()
+                 for _ in range(min(len(q), self._group_cap(key)))]
         if not q:
             del self._queues[key]
         self._pending -= len(group)
@@ -683,13 +785,14 @@ class EeiServer:
             bucket = bucket._replace(b=bucket.b + (-bucket.b) % mult)
         return bucket, plan
 
-    def _launch(self, bucket: ShapeBucket, plan: SolverPlan,
-                stack: np.ndarray):
-        """Fetch the bucket program and launch the stack, retrying
-        *transient* failures (see :func:`_is_transient`) up to
-        ``max_retries`` with decorrelated-jitter backoff.  Chaos
-        compile/launch injection points live here — upstream of the retry
-        logic, exactly like the real failures they model."""
+    def _launch(self, bucket, plan: SolverPlan, operands: tuple):
+        """Fetch the bucket program and launch it over ``operands`` (one
+        stack for bucketed programs; stack + the two ``(b, s)`` segment
+        arrays for packed ones), retrying *transient* failures (see
+        :func:`_is_transient`) up to ``max_retries`` with
+        decorrelated-jitter backoff.  Chaos compile/launch injection points
+        live here — upstream of the retry logic, exactly like the real
+        failures they model."""
         prev_delay = self.retry_backoff_s
         for attempt in range(self.max_retries + 1):
             try:
@@ -699,7 +802,7 @@ class EeiServer:
                     bucket, plan, self.dtype, verify=self.verify)
                 if self.chaos is not None:
                     self.chaos.on_launch()
-                return program(jnp.asarray(stack))  # async: returns at once
+                return program(*operands)  # async: returns at once
             except Exception as exc:
                 if attempt >= self.max_retries or not _is_transient(exc):
                     raise
@@ -719,29 +822,158 @@ class EeiServer:
         (planning, assembly, compile, launch) is retried / split / escalated
         down the fallback chain (``fallback=True``) or resolves the group's
         futures with the error — never stranding callers or killing a
-        server thread.  Appends to ``_inflight`` under the lock."""
+        server thread.  Appends to ``_inflight`` under the lock.
+
+        Groups whose every member is packable take the segment-packed path;
+        packability is re-derived here (not trusted from the coalesce key)
+        so bisection halves of a failed packed stack re-pack consistently.
+
+        Pad-waste cell accounting deliberately does NOT happen here: cells
+        are counted once per *successfully retired* stack (see
+        ``_account_retired_locked``), because counting at launch double- or
+        triple-counted every request that rode a retried, bisected or
+        fleet-redispatched stack."""
+        if group and all(self._packable(req) for req in group):
+            self._dispatch_packed(group)
+            return
         try:
             bucket, plan = self._plan_bucket(group)
             stack = self._assemble(group, bucket)
-            result = self._launch(bucket, plan, stack)
+            result = self._launch(bucket, plan, (jnp.asarray(stack),))
         except Exception as exc:  # compile/launch failure after retries:
             self._handle_group_failure(group, exc)  # split / fallback / fail
             return
         with self._cv:
             self._inflight.append(_InflightStack(result, list(group), bucket))
             self.stacks_dispatched += 1
-            total = bucket.b * bucket.n * bucket.n
-            real = sum(req.n * req.n for req in group)
-            self.grid_cells_total += total
-            self.grid_cells_real += real
-            cells = self._pad_cells_by_bucket.setdefault(bucket, [0, 0])
-            cells[0] += real
-            cells[1] += total
             if self.record_dispatches:
                 self.dispatch_log.append(DispatchRecord(
                     bucket=bucket, plan=plan, stack=stack,
                     requests=list(group)))
             self._cv.notify_all()
+
+    def _packed_plan(self) -> SolverPlan:
+        """The plan packed stacks compile under.
+
+        A pinned ``plan=`` is honored when its method registers a
+        ``packed_topk`` chain; otherwise (and in the default auto-plan
+        mode) :func:`~repro.engine.plan.packed_plan_for` picks the
+        calibrated eigh-vs-tridiag packed chain for ``pack_row_n``.
+        """
+        plan = self._plan
+        if plan is not None:
+            # Mirror engine._resolve_chain's packed_topk lookup (windowed
+            # comp when the plan asks, falling back to the full comp).
+            try:
+                chain = registry.composition_for(
+                    plan.method, plan.spectrum == "windowed").packed_topk
+                if chain is None:
+                    chain = registry.composition_for(
+                        plan.method, False).packed_topk
+            except KeyError:
+                chain = None
+            if chain is not None:
+                return plan
+            log.debug("pinned plan %s has no packed chain; using "
+                      "packed_plan_for(%d)", plan, self.pack_row_n)
+        return packed_plan_for(self.pack_row_n)
+
+    def _dispatch_packed(self, group: list) -> None:
+        """Segment-packed dispatch: first-fit pack the group's matrices
+        into block-diagonal rows of width ``pack_row_n``, chunk the rows
+        into stacks of at most ``max_batch``, and launch each chunk through
+        the engine's ``packed_topk`` program — three operands: the packed
+        stack plus the ``(b, s)`` segment-layout arrays.  Each chunk is its
+        own in-flight stack, so a failure bisects/escalates only its own
+        riders, exactly like a bucketed stack."""
+        try:
+            rows = blocks.pack_segments(
+                [req.n for req in group], self.pack_row_n,
+                self._pack_max_slots, align=self.n_align)
+            plan = self._packed_plan()
+        except Exception as exc:
+            self._handle_group_failure(group, exc)
+            return
+        for start in range(0, len(rows), self.max_batch):
+            chunk = rows[start:start + self.max_batch]
+            sub = [group[i] for row in chunk for i, _, _ in row]
+            try:
+                bucket, stack, seg_off, seg_len, layout = \
+                    self._assemble_packed(group, chunk)
+                result = self._launch(
+                    bucket, plan,
+                    (jnp.asarray(stack), jnp.asarray(seg_off),
+                     jnp.asarray(seg_len)))
+            except Exception as exc:
+                self._handle_group_failure(sub, exc)
+                continue
+            with self._cv:
+                self._inflight.append(_InflightStack(
+                    result, sub, bucket, layout=layout))
+                self.stacks_dispatched += 1
+                self.packed_stacks_dispatched += 1
+                if self.record_dispatches:
+                    self.dispatch_log.append(DispatchRecord(
+                        bucket=bucket, plan=plan, stack=stack,
+                        requests=sub, seg_off=seg_off, seg_len=seg_len,
+                        layout=layout))
+                self._cv.notify_all()
+
+    def _assemble_packed(self, group: list, chunk: list):
+        """Build one packed stack from ``chunk``: a list of packed rows,
+        each ``[(group_index, offset, length), ...]`` from
+        :func:`~repro.kernels.blocks.pack_segments`.
+
+        Returns ``(bucket, stack, seg_off, seg_len, layout)``; ``layout``
+        holds per-request ``(row, slot, offset)`` triples in the same order
+        the sub-requests ride the stack.  Diagonal cells outside every
+        segment carry *spaced, distinct* guard values strictly outside the
+        row's union Gershgorin interval, on the side away from the
+        requested extreme: outside the union so no guard eigenvalue can
+        enter any slot's window, distinct so the packed row's spectrum
+        stays simple enough for the tridiagonal minor-determinant chain.
+        Batch-pad rows repeat row 0's matrix with every ``seg_len`` zero —
+        empty slots verify vacuously and retire nothing."""
+        largest = group[0].largest
+        b = blocks.pow2_bucket(len(chunk))
+        s = blocks.pow2_bucket(max(len(row) for row in chunk))
+        kmax = max(group[i].k for row in chunk for i, _, _ in row)
+        n = self.pack_row_n
+        bucket = PackedBucket(
+            b=b, n=n, s=s, k=min(blocks.pow2_bucket(kmax), n),
+            largest=largest)
+        stack = np.zeros((b, n, n), dtype=self.dtype)
+        seg_off = np.zeros((b, s), dtype=np.int32)
+        seg_len = np.zeros((b, s), dtype=np.int32)
+        layout = []
+        for row, segs in enumerate(chunk):
+            lo, hi = np.inf, -np.inf
+            covered = np.zeros(n, dtype=bool)
+            for slot, (i, off, length) in enumerate(segs):
+                a = group[i].a
+                stack[row, off:off + length, off:off + length] = a
+                seg_off[row, slot] = off
+                seg_len[row, slot] = length
+                layout.append((row, slot, off))
+                radius = np.sum(np.abs(a), axis=1) - np.abs(np.diagonal(a))
+                diag = np.diagonal(a)
+                lo = min(lo, float(np.min(diag - radius)))
+                hi = max(hi, float(np.max(diag + radius)))
+                covered[off:off + length] = True
+            idx = np.where(~covered)[0]
+            if idx.size:
+                margin = max(1.0, 0.01 * (hi - lo))
+                step = margin / idx.size
+                if largest:
+                    vals = lo - margin - step * np.arange(idx.size)
+                else:
+                    vals = hi + margin + step * np.arange(idx.size)
+                stack[row, idx, idx] = vals
+        # Batch padding repeats row 0's matrix (real data, never an all-zero
+        # degenerate input) but with zero seg_len: nothing is selected,
+        # verified or retired from a pad row.
+        stack[len(chunk):] = stack[0]
+        return bucket, stack, seg_off, seg_len, layout
 
     @staticmethod
     def _set(future: Future, *, result=None, error=None) -> bool:
@@ -876,24 +1108,45 @@ class EeiServer:
         t_done = time.monotonic()
         results = []
         escalate = []
-        for row, req in enumerate(inflight.requests):
-            # The program returns `bucket.k` ascending pairs at the requested
-            # extreme.  Guards were placed on the far side of the spectrum,
-            # so the request's k pairs are the window's own extreme end:
-            # the *last* k for largest, the *first* k for smallest.
-            if req.largest:
-                lam_r = lam[row, -req.k:]
-                vec_r = vec[row, -req.k:, : req.n]
-            else:
-                lam_r = lam[row, : req.k]
-                vec_r = vec[row, : req.k, : req.n]
-            if flags_ok is not None and not (
-                    bool(flags_ok[row])
-                    and np.all(np.isfinite(lam_r))
-                    and np.all(np.isfinite(vec_r))):
-                escalate.append(req)
-                continue
-            results.append((req, engine_mod.TopkResult(lam_r, vec_r)))
+        if inflight.layout is not None:
+            # Packed stack: lam (b, S, K), vec (b, S, K, N), flags (b, S).
+            # Each request slices its k pairs out of its own slot's window
+            # and its n columns out of its segment's offset.
+            for req, (row, slot, off) in zip(inflight.requests,
+                                             inflight.layout):
+                if req.largest:
+                    lam_r = lam[row, slot, -req.k:]
+                    vec_r = vec[row, slot, -req.k:, off:off + req.n]
+                else:
+                    lam_r = lam[row, slot, : req.k]
+                    vec_r = vec[row, slot, : req.k, off:off + req.n]
+                if flags_ok is not None and not (
+                        bool(flags_ok[row, slot])
+                        and np.all(np.isfinite(lam_r))
+                        and np.all(np.isfinite(vec_r))):
+                    escalate.append(req)
+                    continue
+                results.append((req, engine_mod.TopkResult(lam_r, vec_r)))
+        else:
+            for row, req in enumerate(inflight.requests):
+                # The program returns `bucket.k` ascending pairs at the
+                # requested extreme.  Guards were placed on the far side of
+                # the spectrum, so the request's k pairs are the window's
+                # own extreme end: the *last* k for largest, the *first* k
+                # for smallest.
+                if req.largest:
+                    lam_r = lam[row, -req.k:]
+                    vec_r = vec[row, -req.k:, : req.n]
+                else:
+                    lam_r = lam[row, : req.k]
+                    vec_r = vec[row, : req.k, : req.n]
+                if flags_ok is not None and not (
+                        bool(flags_ok[row])
+                        and np.all(np.isfinite(lam_r))
+                        and np.all(np.isfinite(vec_r))):
+                    escalate.append(req)
+                    continue
+                results.append((req, engine_mod.TopkResult(lam_r, vec_r)))
         # Counters update BEFORE futures resolve: a caller woken by
         # future.result() may read stats() immediately and must see this
         # stack's requests already accounted for.
@@ -901,7 +1154,10 @@ class EeiServer:
             self.latencies_ms.extend(
                 (t_done - req.t_submit) * 1e3 for req, _ in results)
             self.requests_completed += len(results)
+            if inflight.layout is not None:
+                self.packed_requests_completed += len(results)
             self.verify_failed += len(escalate)
+            self._account_retired_locked(inflight)
             self._cv.notify_all()
         for req, res in results:
             self._set(req.future, result=res)
@@ -912,6 +1168,31 @@ class EeiServer:
                 self._fallback_request(req, cause)
             else:
                 self._fail([req], cause)
+
+    def _account_retired_locked(self, inflight: _InflightStack) -> None:
+        """Pad-waste cell accounting, exactly once per *successfully
+        retired* stack.
+
+        Counting used to happen at dispatch, which over-reported whenever
+        the same request rode more than one launch: in-place transient
+        retries were safe (one count per successful launch), but a stack
+        that failed at its retire sync re-entered ``_dispatch`` through
+        bisection, and a fleet failover redispatched a dead replica's
+        requests through a second replica's dispatch path — every such
+        request's cells were counted two or more times, so chaos runs
+        reported inflated ``grid_cells_*`` relative to the identical clean
+        stream.  Counting at retire makes the counters mean "cells the
+        serving programs actually computed and handed back": each retired
+        stack counts once, and requests that escalate to the per-request
+        fallback chain (whose solves are unpadded) add nothing."""
+        bucket = inflight.bucket
+        total = bucket.b * bucket.n * bucket.n
+        real = sum(req.n * req.n for req in inflight.requests)
+        self.grid_cells_total += total
+        self.grid_cells_real += real
+        cells = self._pad_cells_by_bucket.setdefault(bucket, [0, 0])
+        cells[0] += real
+        cells[1] += total
 
     def _make_room_locked(self) -> None:
         """Caller-driven mode: retire the oldest stack(s) until a launch
@@ -939,7 +1220,7 @@ class EeiServer:
         for key, q in self._queues.items():
             head_t = q[0].t_submit
             expiry = head_t + linger_s
-            if len(q) >= self.max_batch or force or now >= expiry:
+            if len(q) >= self._group_cap(key) or force or now >= expiry:
                 if best_t is None or head_t < best_t:
                     best_key, best_t = key, head_t
             elif best_key is None:
@@ -1098,8 +1379,8 @@ class EeiServer:
             return
         with self._cv:
             for key in [k for k, q in self._queues.items()
-                        if len(q) >= self.max_batch]:
-                while len(self._queues.get(key, ())) >= self.max_batch:
+                        if len(q) >= self._group_cap(k)]:
+                while len(self._queues.get(key, ())) >= self._group_cap(key):
                     self._make_room_locked()
                     self._dispatch(self._pop_group_locked(key))
 
@@ -1264,6 +1545,8 @@ class EeiServer:
             self.requests_rejected = 0
             self.requests_cancelled = 0
             self.stacks_dispatched = 0
+            self.packed_stacks_dispatched = 0
+            self.packed_requests_completed = 0
             self.grid_cells_total = 0
             self.grid_cells_real = 0
             self._pad_cells_by_bucket = {}
@@ -1278,8 +1561,36 @@ class EeiServer:
         self.cache.reset_counters()
 
     def stats(self) -> dict:
+        """Counter snapshot.
+
+        Pad-waste semantics (``grid_cells_*``, ``pad_waste_*``): cells are
+        counted exactly once per *successfully retired* stack — a stack
+        that is retried, bisection-split or redispatched by a fleet
+        failover contributes once, when (and only when) a program's result
+        is actually handed back; requests served by the per-request
+        fallback chain contribute nothing.  ``stacks_dispatched`` counts
+        *launches* instead, so ``stacks_dispatched`` can exceed the number
+        of retired stacks under chaos while the cell counters match the
+        equivalent clean run.  ``pad_waste_bucketed_frac`` /
+        ``pad_waste_packed_frac`` split the waste by dispatch path.  The
+        packed fraction counts every cell of the ``(b, n, n)`` packed
+        rows, which charges a block-diagonal row quadratically for its
+        structural off-block zeros — so the packed fraction sits *above*
+        the bucketed one by construction, pricing the trade packing
+        makes: more guard cells per launch in exchange for far fewer
+        launches and compiled programs on fragmented ragged traffic.
+        Compare each fraction against its own history, not against the
+        other path's."""
         with self._cv:
             lat = sorted(self.latencies_ms)
+            packed_real = packed_total = buck_real = buck_total = 0
+            for bk, (real, total) in self._pad_cells_by_bucket.items():
+                if isinstance(bk, PackedBucket):
+                    packed_real += real
+                    packed_total += total
+                else:
+                    buck_real += real
+                    buck_total += total
             snap = {
                 "requests_submitted": self.requests_submitted,
                 "requests_completed": self.requests_completed,
@@ -1289,16 +1600,24 @@ class EeiServer:
                 "requests_pending": self._pending,
                 "requests_unresolved": len(self._unresolved),
                 "stacks_dispatched": self.stacks_dispatched,
+                "packed_stacks_dispatched": self.packed_stacks_dispatched,
+                "packed_requests_completed": self.packed_requests_completed,
                 "grid_cells_total": self.grid_cells_total,
                 "grid_cells_real": self.grid_cells_real,
                 "pad_waste_frac": (
                     1.0 - self.grid_cells_real / self.grid_cells_total
                     if self.grid_cells_total else 0.0),
+                "pad_waste_bucketed_frac": (
+                    1.0 - buck_real / buck_total if buck_total else 0.0),
+                "pad_waste_packed_frac": (
+                    1.0 - packed_real / packed_total
+                    if packed_total else 0.0),
                 "pad_waste_by_bucket": {
-                    f"b{bk.b}n{bk.n}k{bk.k}" + ("L" if bk.largest else "S"):
+                    _bucket_label(bk):
                         round(1.0 - real / total, 6) if total else 0.0
                     for bk, (real, total)
-                    in sorted(self._pad_cells_by_bucket.items())},
+                    in sorted(self._pad_cells_by_bucket.items(),
+                              key=lambda kv: _bucket_label(kv[0]))},
                 "verify_failed": self.verify_failed,
                 "retries": self.retries,
                 "stack_splits": self.stack_splits,

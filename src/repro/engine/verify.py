@@ -116,6 +116,91 @@ def verify_topk(a: jnp.ndarray, lam_sel: jnp.ndarray, vecs: jnp.ndarray,
                        norm_ok=norm_ok, ordered=ordered, residual=worst)
 
 
+def verify_topk_packed(a: jnp.ndarray, seg_off: jnp.ndarray,
+                       seg_len: jnp.ndarray, lam_seg: jnp.ndarray,
+                       vecs_seg: jnp.ndarray, largest: bool = True,
+                       tol: float = DEFAULT_TOL,
+                       norm_tol: float = DEFAULT_NORM_TOL) -> VerifyFlags:
+    """Per-*slot* verification of a segment-packed topk result, ``(b, S)``.
+
+    Same checks as :func:`verify_topk`, scoped to each segment of each
+    packed row so the PR-7 guarantee holds per request, not per stack:
+
+    * residuals are scaled by the *segment's* Frobenius norm (a small
+      request must not hide behind a large neighbor's scale);
+    * only the ``min(seg_len, k)`` *valid* lanes are checked — the packer
+      guarantees every rider's window lies inside them (sentinel lanes sit
+      at the front for ``largest``, at the back for smallest);
+    * ``norm_ok`` additionally requires in-segment mass ``>= 1 - norm_tol``
+      — the check that catches eigh rotating a cross-segment (near-)
+      degenerate eigenspace into vectors that straddle two requests;
+    * empty slots (``seg_len == 0``) pass vacuously.
+    """
+    b, s, k = lam_seg.shape
+    n = a.shape[-1]
+    dtype = a.dtype
+    seg_off = seg_off.astype(jnp.int32)
+    seg_len = seg_len.astype(jnp.int32)
+
+    col = jnp.arange(n, dtype=jnp.int32)
+    in_seg = ((seg_off[:, :, None] <= col[None, None, :])
+              & (col[None, None, :]
+                 < (seg_off + seg_len)[:, :, None]))  # (b, S, N)
+    m = in_seg.astype(dtype)
+    empty = seg_len == 0  # (b, S)
+
+    # Valid lanes per slot: the min(len, k) real window positions.
+    clen = jnp.minimum(seg_len, k)  # (b, S)
+    t = jnp.arange(k, dtype=jnp.int32)[None, None, :]
+    if largest:
+        valid = t >= (k - clen)[:, :, None]  # (b, S, k)
+    else:
+        valid = t < clen[:, :, None]
+
+    finite_lane = (jnp.isfinite(lam_seg)
+                   & jnp.all(jnp.isfinite(vecs_seg), axis=-1))  # (b, S, k)
+    finite = jnp.all(finite_lane | ~valid, axis=-1)
+
+    # Segment-scoped scale: ||A[seg, seg]||_F via the mask quadratic form.
+    seg_fro2 = jnp.einsum("bsp,bpq,bsq->bs", m, a * a, m)
+    scale = jnp.maximum(jnp.sqrt(seg_fro2),
+                        jnp.asarray(1e-30, dtype))  # (b, S)
+
+    # Residual of the *served* slice: retire hands each caller only its
+    # segment's columns, so the vector is masked to the segment first.  The
+    # tridiag chain's rows carry ~1e-4 stray amplitude outside the segment
+    # (minor-det mass is ~0 there, not exactly 0) that the caller never
+    # sees; unmasked, the guard diagonals amplify it into a false reject.
+    # What the mask drops is bounded by the in-segment mass check below.
+    vm = vecs_seg * m[:, :, None, :]  # (b, S, k, N)
+    av = jnp.einsum("bij,bskj->bski", a, vm)
+    res = av - lam_seg[..., None] * vm
+    res_norm = jnp.sqrt(jnp.sum(res * res, axis=-1))  # (b, S, k)
+    worst = jnp.max(jnp.where(valid, res_norm, 0.0), axis=-1) / scale
+    residual_ok = worst <= tol
+
+    norms2 = jnp.sum(vecs_seg * vecs_seg, axis=-1)  # (b, S, k)
+    mass = jnp.einsum("bsp,bskp->bsk", m, vecs_seg * vecs_seg)
+    lane_norm_ok = (jnp.abs(jnp.sqrt(norms2) - 1.0) <= norm_tol) \
+        & (mass >= 1.0 - norm_tol)
+    norm_ok = jnp.all(lane_norm_ok | ~valid, axis=-1)
+
+    # Ascending across adjacent *valid* lanes only (sentinels are contiguous
+    # at one end, so valid lanes are contiguous and adjacency is enough).
+    dif = lam_seg[..., 1:] - lam_seg[..., :-1]
+    pair_valid = valid[..., 1:] & valid[..., :-1]
+    ordered = jnp.all(
+        (dif >= -tol * scale[..., None]) | ~pair_valid, axis=-1)
+    if k < 2:
+        ordered = jnp.ones_like(finite)
+
+    ok = (finite & residual_ok & norm_ok & ordered) | empty
+    return VerifyFlags(ok=ok, finite=finite | empty,
+                       residual_ok=residual_ok | empty,
+                       norm_ok=norm_ok | empty, ordered=ordered | empty,
+                       residual=jnp.where(empty, 0.0, worst))
+
+
 def verify_topk_host(a: np.ndarray, lam_sel: np.ndarray, vecs: np.ndarray,
                      tol: float = DEFAULT_TOL,
                      norm_tol: float = DEFAULT_NORM_TOL) -> VerifyFlags:

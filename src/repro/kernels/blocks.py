@@ -51,3 +51,48 @@ def clamp_block(requested: int, dim: int, align: int = 8) -> int:
     rounded = -(-dim // align) * align
     clamped = min(requested, rounded)
     return max(align, -(-clamped // align) * align)
+
+
+def pack_segments(
+    lengths: list[int] | tuple[int, ...],
+    row_width: int,
+    max_slots: int,
+    align: int = 8,
+) -> list[list[tuple[int, int, int]]]:
+    """First-fit pack of segment lengths into rows of ``row_width``.
+
+    The packed-dispatch layout helper: each input length is rounded up to
+    ``align`` (its *footprint* — segments must start on the hardware granule
+    so block-aligned kernels see aligned offsets) and placed into the first
+    open row with enough remaining width and a free slot.  Returns a list of
+    rows, each a list of ``(index, offset, length)`` triples where ``index``
+    is the position in ``lengths``, ``offset`` the aligned start column, and
+    ``length`` the *unpadded* segment length (the aligned slack between
+    ``offset + length`` and the next offset is guard territory).
+
+    First-fit (rather than strict FIFO append) trades a bounded amount of
+    reordering inside one packed stack — where all segments retire together
+    anyway — for measurably fuller rows on mixed-size streams.
+    """
+    if row_width < align:
+        raise ValueError(f"row_width {row_width} < align {align}")
+    if max_slots < 1:
+        raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+    rows: list[dict] = []
+    for idx, length in enumerate(lengths):
+        if length < 1:
+            raise ValueError(f"segment length must be >= 1, got {length}")
+        footprint = -(-length // align) * align
+        if footprint > row_width:
+            raise ValueError(
+                f"segment length {length} (footprint {footprint}) exceeds "
+                f"row width {row_width}")
+        for row in rows:
+            if row["used"] + footprint <= row_width and \
+                    len(row["slots"]) < max_slots:
+                row["slots"].append((idx, row["used"], length))
+                row["used"] += footprint
+                break
+        else:
+            rows.append({"used": footprint, "slots": [(idx, 0, length)]})
+    return [row["slots"] for row in rows]

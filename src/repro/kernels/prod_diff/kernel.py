@@ -121,6 +121,87 @@ def logabs_sum_batched_padded(
     )(lam_col, mu_t, mask_t, floor)
 
 
+def _logabs_sum_batched_masked_kernel(
+    lam_ref, mut_ref, mask_ref, floor_ref, out_ref, *, block_k
+):
+    """Per-batch-mask twin of :func:`_logabs_sum_batched_kernel`.
+
+    The mask tile carries a leading batch axis — each matrix in the stack
+    masks its *own* ``(k, j)`` validity pattern.  This is the packed-dispatch
+    plumbing: a segment-packed stack is ragged per row (each row's valid
+    ``(j, k)`` region is its own segment layout), so the shared-mask
+    assumption of the uniform bucketed path no longer holds.
+    """
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lam = lam_ref[...]  # (bb, bi, 1)
+    mut = mut_ref[...]  # (bb, bk, bj)
+    mask = mask_ref[...]  # (bb, bk, bj) — per-matrix validity
+    floor = floor_ref[...]  # (bb, 1, 1)
+
+    def body(c, acc):
+        mu_c = jax.lax.dynamic_slice_in_dim(mut, c * K_CHUNK, K_CHUNK, axis=1)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, c * K_CHUNK, K_CHUNK, axis=1)
+        ad = jnp.abs(lam[:, :, :, None] - mu_c[:, None, :, :])
+        ad = jnp.where(
+            m_c[:, None, :, :] > 0,
+            jnp.maximum(ad, floor[:, :, :, None]), 1.0)
+        return acc + jnp.sum(jnp.log(ad), axis=2)
+
+    acc = jax.lax.fori_loop(
+        0, block_k // K_CHUNK, body, jnp.zeros(out_ref.shape, out_ref.dtype)
+    )
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_i", "block_j", "block_k", "interpret"),
+)
+def logabs_sum_batched_masked_padded(
+    lam_col: jax.Array,  # (B, I, 1)
+    mu_t: jax.Array,  # (B, K, J)
+    mask_t: jax.Array,  # (B, K, J) 1.0 valid / 0.0 masked — per matrix
+    floor: jax.Array,  # (B, 1, 1)
+    *,
+    block_b: int = 1,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Batched pallas_call with a per-matrix validity mask (see ops)."""
+    if block_k % K_CHUNK:
+        raise ValueError(f"block_k must be a multiple of {K_CHUNK}, got {block_k}")
+    b_total, i_total, _ = lam_col.shape
+    _, k_total, j_total = mask_t.shape
+    if b_total % block_b:
+        raise ValueError(
+            f"batch {b_total} not a multiple of block_b={block_b}")
+    grid = (b_total // block_b, i_total // block_i, j_total // block_j,
+            k_total // block_k)
+    return pl.pallas_call(
+        functools.partial(_logabs_sum_batched_masked_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_i, 1), lambda b, i, j, k: (b, i, 0)),
+            pl.BlockSpec(
+                (block_b, block_k, block_j), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec(
+                (block_b, block_k, block_j), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec((block_b, 1, 1), lambda b, i, j, k: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, block_i, block_j), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_total, i_total, j_total), lam_col.dtype),
+        interpret=interpret,
+    )(lam_col, mu_t, mask_t, floor)
+
+
 # ---------------------------------------------------------------------------
 # Legacy single-matrix 3-D grid (PR-1) — kept as the vmapped baseline.
 # ---------------------------------------------------------------------------

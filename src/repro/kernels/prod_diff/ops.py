@@ -45,6 +45,7 @@ def logabs_sum_batched(
     mu: jax.Array,  # (B, J, K)
     floor: jax.Array | float,  # scalar or (B,)
     *,
+    mask: jax.Array | None = None,  # (B, J, K) 1.0 valid / 0.0 masked
     block_b: int = 1,
     block_i: int = 128,
     block_j: int = 128,
@@ -60,6 +61,13 @@ def logabs_sum_batched(
     ``n``).  Batch-padded rows get ``lam = mu = 0`` and ``floor = 1`` so they
     contribute exact zeros instead of ``log(0)``; they are sliced off before
     returning.
+
+    ``mask`` switches to the per-matrix-mask kernel variant: each matrix
+    masks its own ``(j, k)`` validity region (masked cells contribute exact
+    zeros).  This is the segment plumbing for packed ragged stacks, where
+    every row's valid region is its own segment layout rather than the
+    uniform bucket shape; ``mask=None`` keeps the shared-mask grid (and its
+    once-per-tile mask fetch) bitwise-unchanged.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -72,11 +80,27 @@ def logabs_sum_batched(
     lam_col = _pad_to(_pad_to(lam[:, :, None], 1, block_i), 0, block_b)
     mu_p = _pad_to(
         _pad_to(_pad_to(mu, 1, block_j), 2, block_k), 0, block_b)
+    floor_arr = (jnp.zeros((b_n,), lam.dtype) + jnp.asarray(floor, lam.dtype))
+    floor_arr = _pad_to(floor_arr, 0, block_b, value=1.0)
+    if mask is not None:
+        mask_p = _pad_to(
+            _pad_to(_pad_to(mask.astype(lam.dtype), 1, block_j), 2, block_k),
+            0, block_b)
+        out = _kernel.logabs_sum_batched_masked_padded(
+            lam_col,
+            jnp.swapaxes(mu_p, 1, 2),
+            jnp.swapaxes(mask_p, 1, 2),
+            floor_arr.reshape(-1, 1, 1),
+            block_b=block_b,
+            block_i=block_i,
+            block_j=block_j,
+            block_k=block_k,
+            interpret=interpret,
+        )
+        return out[:b_n, :i_n, :j_n]
     mask_p = _pad_to(
         _pad_to(jnp.ones((j_n, k_n), lam.dtype), 0, block_j), 1, block_k
     )
-    floor_arr = (jnp.zeros((b_n,), lam.dtype) + jnp.asarray(floor, lam.dtype))
-    floor_arr = _pad_to(floor_arr, 0, block_b, value=1.0)
     out = _kernel.logabs_sum_batched_padded(
         lam_col,
         jnp.swapaxes(mu_p, 1, 2),

@@ -78,6 +78,99 @@ def _sturm_kernel(d_ref, e_ref, bounds_ref, out_ref, *, n_iter, block_m, n_total
     out_ref[...] = 0.5 * (lo + hi)
 
 
+def _sturm_segmented_kernel(d_ref, e_ref, lo_ref, hi_ref, piv_ref,
+                            start_ref, end_ref, targ_ref, out_ref, *,
+                            n_iter, n_total):
+    """Per-segment windowed bisection over packed block-diagonal bands.
+
+    Lane arrays replace the per-matrix bounds row: every lane carries its own
+    bracket ``[lo, hi]``, ``pivmin``, segment window ``[start, end)`` and
+    eigenvalue-index target.  The Sturm recurrence still runs over the whole
+    packed band — junction off-diagonals are exactly zero in the packed
+    layout, so ``q`` restarts by itself (``e2/q = 0``) — but the *count* is
+    masked to the lane's segment, making each lane bracket eigenvalue
+    ``target`` of its own diagonal block and nothing else.
+    """
+    d = d_ref[...]  # (bb, N)
+    e = e_ref[...]  # (bb, N)
+    e2 = e * e
+    lo = lo_ref[...]  # (bb, bm)
+    hi = hi_ref[...]
+    pivmin = piv_ref[...]
+    start = start_ref[...]  # (bb, bm) int32
+    end = end_ref[...]
+    targets = targ_ref[...]
+
+    def count_below(x):
+        """#eigenvalues of the lane's segment < x; x: (bb, bm)."""
+        q0 = jax.lax.dynamic_slice_in_dim(d, 0, 1, axis=1) - x  # (bb, bm)
+        q0 = jnp.where(jnp.abs(q0) < pivmin, -pivmin, q0)
+        c0 = ((q0 < 0) & (start <= 0) & (end > 0)).astype(jnp.int32)
+
+        def body(k, carry):
+            q, c = carry
+            dk = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)  # (bb, 1)
+            e2k = jax.lax.dynamic_slice_in_dim(e2, k - 1, 1, axis=1)
+            q = dk - x - e2k / q
+            q = jnp.where(jnp.abs(q) < pivmin, -pivmin, q)
+            in_seg = (start <= k) & (k < end)
+            return q, c + ((q < 0) & in_seg).astype(jnp.int32)
+
+        _, c = jax.lax.fori_loop(1, n_total, body, (q0, c0))
+        return c
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        c = count_below(mid)
+        go_right = c <= targets
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, bisect, (lo, hi))
+    out_ref[...] = 0.5 * (lo + hi)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_iter", "block_b", "block_m", "interpret"),
+)
+def sturm_segmented_padded(
+    d: jax.Array,  # (B, N)
+    e: jax.Array,  # (B, N)
+    lo: jax.Array,  # (B, M) f32 lane brackets
+    hi: jax.Array,  # (B, M)
+    pivmin: jax.Array,  # (B, M)
+    start: jax.Array,  # (B, M) int32 segment start (inclusive)
+    end: jax.Array,  # (B, M) int32 segment end (exclusive)
+    targets: jax.Array,  # (B, M) int32 per-segment eigenvalue index
+    *,
+    n_iter: int,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool = False,
+):
+    """Tiled segment-masked bisection: lane ``(b, m)`` brackets eigenvalue
+    ``targets[b, m]`` of the diagonal block ``[start, end)`` of band row
+    ``b``.  All operands pre-padded to block multiples by ``ops.py``."""
+    b_total, n_total = d.shape
+    m_total = targets.shape[1]
+    grid = (b_total // block_b, m_total // block_m)
+    lane = pl.BlockSpec((block_b, block_m), lambda b, m: (b, m))
+    return pl.pallas_call(
+        functools.partial(
+            _sturm_segmented_kernel, n_iter=n_iter, n_total=n_total),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_total), lambda b, m: (b, 0)),
+            pl.BlockSpec((block_b, n_total), lambda b, m: (b, 0)),
+            lane, lane, lane, lane, lane, lane,
+        ],
+        out_specs=lane,
+        out_shape=jax.ShapeDtypeStruct((b_total, m_total), d.dtype),
+        interpret=interpret,
+    )(d, e, lo, hi, pivmin, start, end, targets)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

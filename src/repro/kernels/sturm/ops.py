@@ -122,6 +122,121 @@ def sturm_eigenvalues(
 
 
 @functools.partial(
+    jax.jit,
+    static_argnames=("k", "largest", "n_iter", "block_b", "block_m",
+                     "interpret"),
+)
+def sturm_eigenvalues_segmented(
+    d: jax.Array,  # (B, N) packed block-diagonal bands
+    e: jax.Array,  # (B, N-1) off-diagonals (zero at segment junctions)
+    seg_off: jax.Array,  # (B, S) int32 segment start columns
+    seg_len: jax.Array,  # (B, S) int32 segment lengths (0 = empty slot)
+    *,
+    k: int,
+    largest: bool,
+    n_iter: int = 0,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The ``k`` extremal eigenvalues of every *segment* of packed bands.
+
+    Each band row carries up to ``S`` independent tridiagonal blocks
+    (segments) laid out by the serving packer: block ``s`` of row ``b``
+    occupies columns ``[seg_off[b, s], seg_off[b, s] + seg_len[b, s])`` and
+    junction off-diagonals are exactly zero, so the Sturm count restricted
+    to a segment window is the exact count for that block (decoupling is a
+    property of the recurrence, not an approximation).  Lane ``(s, t)``
+    brackets per-segment index ``len - k + t`` (largest, clamped at 0) or
+    ``t`` (smallest, clamped at ``len - 1``) — clamped lanes duplicate the
+    boundary eigenvalue and sit *outside* the slice a ``k' <= len`` request
+    reads, mirroring the guard convention of the bucketed path.
+
+    Returns ``(B, S, k)``, ascending per segment; empty slots return zeros.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b_n, n = d.shape
+    s_slots = seg_off.shape[1]
+    dtype = d.dtype
+    if n_iter == 0:
+        n_iter = _default_iters(dtype)
+    if k < 1:
+        raise ValueError(f"window k={k} must be >= 1")
+
+    seg_off = seg_off.astype(jnp.int32)
+    seg_len = seg_len.astype(jnp.int32)
+    seg_end = seg_off + seg_len
+
+    # Per-segment Gershgorin bounds + pivmin via masked reductions over the
+    # band (the segment layout is traced data, so everything stays jittable).
+    e_full = jnp.zeros_like(d)
+    if n > 1:
+        e_full = e_full.at[:, : n - 1].set(jnp.abs(e))
+    r = jnp.zeros_like(d)
+    if n > 1:
+        r = r.at[:, :-1].add(e_full[:, : n - 1])
+        r = r.at[:, 1:].add(e_full[:, : n - 1])
+    col = jnp.arange(n, dtype=jnp.int32)[None, None, :]  # (1, 1, N)
+    in_seg = (seg_off[:, :, None] <= col) & (col < seg_end[:, :, None])
+    big = jnp.asarray(jnp.finfo(dtype).max, dtype)
+    lo_s = jnp.min(
+        jnp.where(in_seg, (d - r)[:, None, :], big), axis=2)  # (B, S)
+    hi_s = jnp.max(jnp.where(in_seg, (d + r)[:, None, :], -big), axis=2)
+    empty = seg_len == 0
+    lo_s = jnp.where(empty, 0.0, lo_s)
+    hi_s = jnp.where(empty, 0.0, hi_s)
+    span = jnp.maximum(hi_s - lo_s, 1.0)
+    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
+    lo_s = lo_s - eps * span
+    hi_s = hi_s + eps * span
+    scale = jnp.max(
+        jnp.where(in_seg, jnp.abs(d)[:, None, :], 0.0), axis=2)
+    scale = jnp.maximum(
+        scale, jnp.max(jnp.where(in_seg, e_full[:, None, :], 0.0), axis=2))
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    piv_s = jnp.maximum(eps * eps * scale * scale, tiny)
+
+    # Lane layout: m = s * k + t.  Targets are per-segment indices.
+    t = jnp.arange(k, dtype=jnp.int32)[None, None, :]  # (1, 1, k)
+    if largest:
+        targ = jnp.maximum(seg_len[:, :, None] - k + t, 0)
+    else:
+        targ = jnp.minimum(t, jnp.maximum(seg_len[:, :, None] - 1, 0))
+
+    m_total = s_slots * k
+    block_m = blocks.clamp_block(block_m, m_total)
+    block_b = blocks.clamp_block(block_b, b_n, align=1)
+    pad_m = (-m_total) % block_m
+    pad_b = (-b_n) % block_b
+    pad_n = (-n) % 8
+
+    def pad_lane(x, value):
+        """Broadcast (B, S[, k]) to lanes (B, S*k) and pad to blocks."""
+        x = jnp.broadcast_to(x[:, :, None] if x.ndim == 2 else x,
+                             (b_n, s_slots, k)).reshape(b_n, m_total)
+        return jnp.pad(x, ((0, pad_b), (0, pad_m)), constant_values=value)
+
+    lo_l = pad_lane(lo_s, 0.0)
+    hi_l = pad_lane(hi_s, 0.0)
+    piv_l = pad_lane(piv_s, 1.0)
+    start_l = pad_lane(seg_off, 0)
+    end_l = pad_lane(seg_end, 0)  # padded lanes: empty window, count 0
+    targ_l = pad_lane(targ, 0)
+
+    d_p = jnp.pad(d, ((0, pad_b), (0, pad_n)), constant_values=1.0)
+    e_p = jnp.zeros_like(d_p)
+    if n > 1:
+        e_p = e_p.at[:b_n, : n - 1].set(e)
+
+    out = _kernel.sturm_segmented_padded(
+        d_p, e_p, lo_l, hi_l, piv_l, start_l, end_l, targ_l,
+        n_iter=n_iter, block_b=block_b, block_m=block_m,
+        interpret=interpret)
+    return out[:b_n, :m_total].reshape(b_n, s_slots, k)
+
+
+@functools.partial(
     jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
 )
 def sturm_minor_spectra(

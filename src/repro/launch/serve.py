@@ -158,7 +158,7 @@ def serve_eei(args):
                        max_batch=args.batch, max_inflight=args.inflight,
                        linger_ms=args.linger_ms,
                        mesh=serve_mesh if args.mixed else None,
-                       chaos=chaos)
+                       pack=args.pack, chaos=chaos)
     t0 = time.monotonic()
     futures = []
     for a, k_i in stream:
@@ -190,6 +190,14 @@ def serve_eei(args):
              stats["pad_waste_frac"],
              stats["grid_cells_total"] - stats["grid_cells_real"],
              stats["grid_cells_total"], per_bucket or "none")
+    if stats["packed_stacks_dispatched"]:
+        log.info("packed dispatch (--pack=%s): %d of %d stacks packed, "
+                 "%d requests packed | pad waste packed=%.3f bucketed=%.3f",
+                 args.pack, stats["packed_stacks_dispatched"],
+                 stats["stacks_dispatched"],
+                 stats["packed_requests_completed"],
+                 stats["pad_waste_packed_frac"],
+                 stats["pad_waste_bucketed_frac"])
     by_plan = ", ".join(f"{name}={count}" for name, count in
                         sorted(stats["fallbacks_by_plan"].items()))
     log.info("robustness: %d verify failures, %d retries, %d stack splits, "
@@ -201,7 +209,11 @@ def serve_eei(args):
                              sorted(stats["chaos_injected"].items()))
         log.info("chaos injected: %s | requests_failed=%d",
                  injected or "none", stats["requests_failed"])
-    return futures[-1].result()
+    # A zero-request stream (--requests 0: config smoke, drained replay)
+    # has no futures — the rollups above already guard division by zero /
+    # empty percentiles; returning None instead of futures[-1] keeps the
+    # degenerate run from dying with IndexError after serving nothing.
+    return futures[-1].result() if futures else None
 
 
 def _serve_eei_fleet(args, stream, gap_s, rng):
@@ -231,7 +243,8 @@ def _serve_eei_fleet(args, stream, gap_s, rng):
         replica_mode=args.replica_mode,
         server_kwargs=dict(
             max_batch=args.batch, max_inflight=args.inflight,
-            linger_ms=args.linger_ms if args.linger_ms is not None else 2.0),
+            linger_ms=args.linger_ms if args.linger_ms is not None else 2.0,
+            pack=args.pack),
         chaos=chaos,
         restart_policy_kwargs=dict(max_restarts=1000),
     )
@@ -265,7 +278,7 @@ def _serve_eei_fleet(args, stream, gap_s, rng):
                              if count)
         log.info("chaos injected: %s | requests_failed=%d",
                  injected or "none", stats["requests_failed"])
-    return futures[-1].result()
+    return futures[-1].result() if futures else None
 
 
 def main(argv=None):
@@ -283,6 +296,13 @@ def main(argv=None):
     ap.add_argument("--sync", action="store_true",
                     help="EEI: synchronous per-request loop instead of the "
                     "continuous-batching server (baseline)")
+    ap.add_argument("--pack", choices=["auto", "never", "always"],
+                    default="never",
+                    help="EEI: segment-packed dispatch — coalesce small-n "
+                    "requests into block-diagonal packed rows ('auto': "
+                    "pack below the calibrated crossover; 'always': pack "
+                    "anything that fits a row; default 'never' keeps the "
+                    "pure shape-bucketed path)")
     ap.add_argument("--spectrum", choices=["auto", "full", "windowed"],
                     default="auto",
                     help="EEI: pin the stage composition — 'windowed' "

@@ -100,7 +100,7 @@ def test_pr2_checked_in_default_still_loads():
     assert table.windowed_k_frac == WINDOWED_K_FRAC
 
 
-def test_v4_round_trip_carries_krylov_n_min(tmp_path):
+def test_round_trip_carries_krylov_n_min(tmp_path):
     table = CalibrationTable(
         eigh_crossover_n=24, dense_crossover_n=48,
         prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
@@ -108,9 +108,49 @@ def test_v4_round_trip_carries_krylov_n_min(tmp_path):
         host="test", backend="cpu")
     path = table.save(tmp_path / "cal.json")
     d = json.loads(path.read_text())
-    assert d["schema_version"] == 4
+    assert d["schema_version"] == autotune._SCHEMA_VERSION
     assert d["krylov_n_min"] == 512
     assert load_table(path).krylov_n_min == 512
+
+
+def test_v4_table_loads_without_pack_fields_and_warns(tmp_path, caplog):
+    """A v4 (PR-6) table predates the packed-dispatch crossovers: it must
+    load with both fields None (the planner then uses the static
+    ``plan.PACK_N_MAX`` / ``plan.PACKED_EIGH_N_MAX`` fallbacks) and warn
+    once about the stale schema."""
+    v4 = {
+        "schema_version": 4,
+        "eigh_crossover_n": 128, "dense_crossover_n": 8,
+        "prod_diff_blocks": [64, 64, 64], "sturm_blocks": [16, 128],
+        "prod_diff_block_b": 4, "windowed_k_frac": 1.0,
+        "krylov_n_min": 256,
+        "host": "x86_64-cpu-cpu", "backend": "cpu",
+    }
+    path = tmp_path / "v4.json"
+    path.write_text(json.dumps(v4))
+    autotune._WARNED.discard((f"file:{path}", 4))
+    with caplog.at_level(logging.WARNING, logger="repro.autotune"):
+        table = load_table(path)
+    assert "schema_version 4" in caplog.text
+    assert table.pack_n_max is None
+    assert table.packed_eigh_n_max is None
+    assert table.krylov_n_min == 256
+
+
+def test_v5_round_trip_carries_pack_crossovers(tmp_path):
+    table = CalibrationTable(
+        eigh_crossover_n=24, dense_crossover_n=48,
+        prod_diff_blocks=(64, 128, 128), sturm_blocks=(8, 128),
+        windowed_k_frac=0.5, pack_n_max=16, packed_eigh_n_max=64,
+        host="test", backend="cpu")
+    path = table.save(tmp_path / "cal.json")
+    d = json.loads(path.read_text())
+    assert d["schema_version"] == 5
+    assert d["pack_n_max"] == 16
+    assert d["packed_eigh_n_max"] == 64
+    loaded = load_table(path)
+    assert loaded.pack_n_max == 16
+    assert loaded.packed_eigh_n_max == 64
 
 
 def test_v3_table_loads_without_krylov_n_min_and_warns(tmp_path, caplog):

@@ -38,7 +38,8 @@ from repro.engine import (
     SolverPlan,
     verify_topk_host,
 )
-from repro.engine.server import make_eei_stream
+from repro.engine.server import PackedBucket, _bucket_n, make_eei_stream
+from repro.kernels import blocks
 from repro.runtime import ChaosConfig, ChaosMonkey
 
 PLAN = SolverPlan(method="eei_tridiag", backend="jnp")
@@ -1098,3 +1099,337 @@ def test_program_cache_failed_compile_raises_everywhere_and_retries():
         assert prog is not None and len(cache) == 1
     finally:
         engine_mod.topk_program = orig
+
+
+# ---------------------------------------------------------------------------
+# Packed ragged dispatch (PR 9): small-n requests coalesce into block-
+# diagonal segment-packed rows.  The conformance contract is per-request
+# (not per-stack-bitwise): every packed result must match the bucketed
+# SolverEngine.topk oracle on the request's own unpadded matrix to float32
+# tolerance, every future resolves exactly once, and the cancel/chaos
+# safety lanes hold unchanged with packing on.
+# ---------------------------------------------------------------------------
+
+# Packable request: n small enough to pack (pack_row_n=64 default), k <= 4.
+_PACK_REQ = st.tuples(st.integers(1, 32), st.integers(0, 3), st.booleans(),
+                      st.integers(0, 3))
+
+
+def _assert_packed_oracle_match(reqs):
+    """``reqs`` is ``[(a, k, largest, future), ...]``: each packed result
+    must agree with the bucketed oracle on the unpadded matrix — same
+    eigenvalues to float32 tolerance, unit-norm vectors with small
+    residuals (vector *entries* are not compared bitwise: a packed row
+    solves a different — block-diagonal — matrix, so signs and degenerate
+    rotations may differ while the eigenpairs are equally correct)."""
+    for a, k, largest, fut in reqs:
+        res = fut.result(timeout=120)
+        lam = np.asarray(res.eigenvalues)
+        vec = np.asarray(res.vectors)
+        n = a.shape[0]
+        assert lam.shape == (k,) and vec.shape == (k, n)
+        # eigh-method oracle: the tridiag reference chain cannot solve
+        # n=1 (minor bands need n >= 2), but packed rows accept it.
+        ref = SolverEngine(SolverPlan(method="eigh", backend="jnp")).topk(
+            jnp.asarray(a), k, largest)
+        ref_lam = np.asarray(ref.eigenvalues)
+        scale = max(1.0, float(np.max(np.abs(ref_lam))))
+        np.testing.assert_allclose(lam, ref_lam, atol=5e-4 * scale, rtol=0)
+        fro = max(1.0, float(np.linalg.norm(a)))
+        res_norm = np.linalg.norm(a @ vec.T - vec.T * lam, axis=0)
+        assert np.max(res_norm) <= 5e-3 * fro
+        norms = np.linalg.norm(vec, axis=1)
+        np.testing.assert_allclose(norms, 1.0, atol=2e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(ops=st.lists(_PACK_REQ, min_size=1, max_size=20),
+       max_batch=st.sampled_from([1, 2, 4]), seed=st.integers(0, 999))
+def test_packed_stream_conformance_fuzz_caller_driven(ops, max_batch, seed):
+    """Random packable streams under pack='always', caller-driven mode:
+    per-request oracle conformance, exactly-once future resolution, and
+    every stack actually went down the packed path."""
+    server = EeiServer(max_batch=max_batch, pack="always",
+                       cache=SHARED_CACHE, record_dispatches=True)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for n, k_raw, largest, action in ops:
+        a, k = _sym(rng, n), 1 + k_raw % n
+        reqs.append((a, k, largest, server.submit(a, k, largest=largest)))
+        if action == 1:
+            server.pump()
+        elif action == 2:
+            time.sleep(0.002)
+    server.flush()
+    stats = server.stats()
+    assert stats["requests_failed"] == 0
+    assert stats["requests_completed"] == len(ops)
+    assert stats["packed_stacks_dispatched"] == stats["stacks_dispatched"]
+    assert all(isinstance(rec.bucket, PackedBucket)
+               for rec in server.dispatch_log)
+    for rec in server.dispatch_log:  # layout parallels requests exactly
+        assert len(rec.layout) == len(rec.requests)
+    _assert_packed_oracle_match(reqs)
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(_PACK_REQ, min_size=1, max_size=16),
+       linger_ms=st.sampled_from([0.0, 1.0, 5.0]),
+       seed=st.integers(0, 999))
+def test_packed_stream_conformance_fuzz_linger_thread(ops, linger_ms, seed):
+    """The packed conformance contract under the threaded runtime: linger
+    timing decides how rows fill, but every future must resolve with an
+    oracle-conformant result and no flush() ever called."""
+    server = EeiServer(max_batch=2, pack="always", linger_ms=linger_ms,
+                       cache=SHARED_CACHE)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    try:
+        for n, k_raw, largest, action in ops:
+            a, k = _sym(rng, n), 1 + k_raw % n
+            reqs.append((a, k, largest,
+                         server.submit(a, k, largest=largest)))
+            if action == 2:
+                time.sleep(0.002)
+        for _, _, _, f in reqs:
+            f.result(timeout=120)
+    finally:
+        server.close(timeout=120)
+    stats = server.stats()
+    assert stats["requests_failed"] == 0
+    assert stats["packed_stacks_dispatched"] == stats["stacks_dispatched"]
+    _assert_packed_oracle_match(reqs)
+
+
+@settings(max_examples=4, deadline=None)
+@given(ops=st.lists(_PACK_REQ, min_size=4, max_size=12),
+       rate=st.sampled_from([0.05, 0.1]),
+       seed=st.integers(0, 999), chaos_seed=st.integers(0, 999))
+def test_packed_chaos_stream_fuzz(ops, rate, seed, chaos_seed):
+    """The chaos safety contract with packing on: injected compile/launch
+    failures, NaN results, slow retires and thread crashes — every future
+    still resolves exactly once with a finite, verified result."""
+    chaos = ChaosMonkey(ChaosConfig(seed=chaos_seed, rate=rate,
+                                    slow_s=0.001))
+    server = EeiServer(max_batch=2, pack="always", linger_ms=1.0,
+                       cache=SHARED_CACHE, chaos=chaos)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    try:
+        for n, k_raw, largest, action in ops:
+            a, k = _sym(rng, n), 1 + k_raw % n
+            reqs.append((a, k, server.submit(a, k, largest=largest)))
+            if action == 2:
+                time.sleep(0.002)
+        for _, _, f in reqs:
+            f.result(timeout=120)
+    finally:
+        server.close(timeout=120)
+    _assert_chaos_safe(reqs, server.stats())
+
+
+def test_packed_cancel_lanes():
+    """Cancellation with packing on: a pending cancel dequeues the request
+    (it never rides a packed row); a post-dispatch cancel rides the stack
+    and retirement tolerates the resolved future."""
+    rng = np.random.default_rng(60)
+    with EeiServer(max_batch=8, pack="always", pack_row_n=16,
+                   linger_ms=60_000, cache=SHARED_CACHE) as server:
+        futs = [server.submit(_sym(rng, 12), 2) for _ in range(3)]
+        assert futs[1].cancel()
+        server.flush()
+        for f in (futs[0], futs[2]):
+            assert f.result(timeout=120).eigenvalues.shape == (2,)
+        assert futs[1].cancelled()
+        stats = server.stats()
+        assert stats["requests_cancelled"] == 1
+        assert stats["requests_completed"] == 2
+        assert stats["packed_stacks_dispatched"] == 1
+        # Late cancel: the packed group is already on device.  16 n=8
+        # requests fill the pack-group cap (max_batch=8 rows x 2 slots
+        # at pack_row_n=16), so the admission thread dispatches without
+        # waiting out the linger; poll for it (the dispatch is async).
+        futs2 = [server.submit(_sym(rng, 8), 1) for _ in range(16)]
+        deadline = time.monotonic() + 60
+        while (server.stats()["stacks_dispatched"] < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert server.stats()["stacks_dispatched"] == 2  # full pack group
+        cancelled_late = futs2[0].cancel()
+        server.flush()
+        for f in futs2[1:]:
+            assert f.result(timeout=120).eigenvalues.shape == (1,)
+        if cancelled_late:
+            assert futs2[0].cancelled()
+
+
+def test_packed_stream_compiles_fewer_programs_than_bucketed():
+    """The structural packing win: a mixed small-n stream executes through
+    fewer distinct compiled programs packed than bucketed (one packed row
+    shape covers every small n; the bucketed path compiles per distinct
+    footprint)."""
+    sizes = [8, 12, 16, 24, 32, 40]
+    rng = np.random.default_rng(61)
+    stream = [(_sym(rng, n), 2) for n in sizes for _ in range(4)]
+    counts = {}
+    for mode in ("never", "always"):
+        server = EeiServer(max_batch=4, pack=mode, pack_row_n=64,
+                           cache=ProgramCache())
+        for a, k in stream:
+            server.submit(a, k)
+        server.flush()
+        server.close()
+        stats = server.stats()
+        assert stats["requests_completed"] == len(stream)
+        counts[mode] = (stats["distinct_buckets"],
+                        stats["stacks_dispatched"])
+    assert counts["always"][0] < counts["never"][0], counts
+    assert counts["always"][1] <= counts["never"][1], counts
+
+
+# ---------------------------------------------------------------------------
+# Pad-waste accounting (PR 9 bugfix): cells are counted once per
+# successfully *retired* stack, so retries / splits / redispatch cannot
+# inflate the counters relative to a clean run of the same stream.
+# ---------------------------------------------------------------------------
+
+
+def test_pad_waste_counted_at_retire_not_dispatch():
+    """Regression for the over-reporting bug: a dispatched-but-unretired
+    stack contributes nothing; the cells land exactly when the stack
+    retires."""
+    rng = np.random.default_rng(62)
+    server = EeiServer(PLAN, max_batch=2, max_inflight=2)
+    futs = [server.submit(_sym(rng, 12), 2) for _ in range(2)]  # full stack
+    assert server.stats()["stacks_dispatched"] == 1
+    assert server.stats()["grid_cells_total"] == 0  # on device, not retired
+    server.flush()
+    stats = server.stats()
+    assert stats["grid_cells_total"] == 2 * 16 * 16
+    assert stats["grid_cells_real"] == 2 * 12 * 12
+    for f in futs:
+        assert f.result(timeout=60).eigenvalues.shape == (2,)
+    server.close()
+
+
+@pytest.mark.parametrize("pack", ["never", "always"])
+def test_pad_waste_matches_clean_run_under_chaos_launch_failures(pack):
+    """The satellite bugfix end-to-end: a stream served under injected
+    *transient* launch failures (retried in place, never split) must report
+    exactly the clean run's cell counters — before the fix every retried
+    stack's cells were counted once per launch attempt path taken."""
+    rng = np.random.default_rng(63)
+    stream = [(_sym(rng, int(rng.integers(4, 25))), 2) for _ in range(12)]
+
+    def run(chaos):
+        server = EeiServer(max_batch=2, pack=pack, cache=SHARED_CACHE,
+                           chaos=chaos, max_retries=64,
+                           retry_backoff_s=1e-4, retry_backoff_cap_s=1e-3)
+        futs = [server.submit(a, k) for a, k in stream]
+        server.flush()
+        for f in futs:
+            f.result(timeout=120)
+        server.close()
+        return server.stats()
+
+    clean = run(None)
+    # High per-point rate: the packed mode serves the whole stream in only
+    # a couple of launches, so a modest rate can (deterministically, by
+    # seed) miss every one and leave the chaos-fired assertion vacuous.
+    chaos = ChaosMonkey(ChaosConfig(seed=7, rate=0.0, launch_rate=0.75))
+    chaotic = run(chaos)
+    assert chaotic["chaos_injected"].get("launch", 0) > 0  # chaos did fire
+    assert chaotic["retries"] > 0
+    for key in ("grid_cells_total", "grid_cells_real", "pad_waste_frac",
+                "pad_waste_by_bucket", "requests_completed"):
+        assert chaotic[key] == clean[key], (key, chaotic[key], clean[key])
+    # Launches are *supposed* to differ: stacks_dispatched counts launches.
+    assert chaotic["stacks_dispatched"] == clean["stacks_dispatched"]
+
+
+# ---------------------------------------------------------------------------
+# Bucket-edge properties (PR 9 hardening): n=1, k=n, n below the align
+# granule — the padded shape always covers the real one, the pow2 k window
+# never truncates a request, and guards stay outside the requested window.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 40), k_raw=st.integers(0, 63),
+       count=st.integers(1, 9), largest=st.booleans())
+def test_property_bucket_edges_cover_request(n, k_raw, count, largest):
+    k = 1 + k_raw % n  # k in [1, n] — k=n hit whenever k_raw % n == n-1
+    bn = _bucket_n(n, 8)
+    assert bn >= n and bn % 8 == 0 and bn - n < 8
+    bucket = ShapeBucket.for_requests(count, n, k, largest)
+    assert bucket.n == bn
+    assert bucket.b >= count
+    assert k <= bucket.k <= bucket.n  # the pow2 window never truncates
+    assert blocks.pow2_bucket(bucket.b) == bucket.b
+    assert blocks.clamp_block(128, n) == bn  # block clamp = same granule
+
+
+@settings(max_examples=40, deadline=None)
+@given(lengths=st.lists(st.integers(1, 48), min_size=1, max_size=24),
+       max_slots=st.integers(1, 8))
+def test_property_pack_segments_layout(lengths, max_slots):
+    """pack_segments structural invariants: every input appears exactly
+    once, offsets are align-granular, footprints never overlap or overflow
+    the row, and no row exceeds max_slots."""
+    row_width = 64
+    rows = blocks.pack_segments(lengths, row_width, max_slots, align=8)
+    seen = []
+    for row in rows:
+        assert 1 <= len(row) <= max_slots
+        end = 0
+        for idx, off, length in row:
+            seen.append(idx)
+            assert length == lengths[idx]
+            assert off % 8 == 0 and off >= end  # aligned, non-overlapping
+            end = off + (-(-length // 8) * 8)
+            assert end <= row_width
+    assert sorted(seen) == list(range(len(lengths)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 12), pad=st.integers(1, 8), seed=st.integers(0, 999),
+       largest=st.booleans(), scale=st.sampled_from([1e-2, 1.0, 1e2]))
+def test_property_guard_value_at_edges(n, pad, seed, largest, scale):
+    """_guard_value stays strictly outside the spectrum down to n=1 (the
+    degenerate Gershgorin radius-0 case the bucket-edge sweep covers)."""
+    rng = np.random.default_rng(seed)
+    a = (scale * _sym(rng, n)).astype(np.float32)
+    server = EeiServer(PLAN)
+    guard = server._guard_value(a, largest)
+    w = np.linalg.eigvalsh(a.astype(np.float64))
+    if largest:
+        assert guard < w[0]
+    else:
+        assert guard > w[-1]
+
+
+# ---------------------------------------------------------------------------
+# serve.py CLI degenerate streams (PR 9 bugfix): a --requests 0 run must
+# drain cleanly through every mode — the stats rollups guard their empty
+# denominators and the final `futures[-1].result()` no longer IndexErrors.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("extra", [[], ["--sync"], ["--linger-ms", "1"],
+                                   ["--pack", "always"]],
+                         ids=["server", "sync", "linger", "packed"])
+def test_serve_cli_zero_request_stream(extra):
+    from repro.launch import serve as serve_cli
+
+    assert serve_cli.main(["--eei", "--requests", "0", "--n", "12",
+                           "--k", "2", *extra]) is None
+
+
+def test_serve_cli_packed_stream_smoke():
+    """--eei --pack always on a small mixed stream: the CLI serves it end
+    to end and returns the final request's result."""
+    from repro.launch import serve as serve_cli
+
+    out = serve_cli.main(["--eei", "--requests", "6", "--n", "16", "--k",
+                          "2", "--mixed", "--pack", "always"])
+    assert out is not None and np.all(np.isfinite(np.asarray(out.eigenvalues)))
