@@ -185,12 +185,33 @@ PACKED_ROW_N = 64
 #: footprint space earlier lanes in the same process already compiled).
 PACKED_SPEEDUP_FLOOR = 1.3
 
+#: Streaming update benchmark (PR 10): per-update latency of a
+#: ``SpectralSession``'s warm rank-1 path vs re-solving the updated matrix
+#: from scratch (what a stateless server pays per update).  Each config
+#: streams small rank-1 updates through one session — every step validated
+#: against a float64 ``eigvalsh`` oracle — then injects two large updates
+#: that must trip the drift monitor into a full re-solve (the gate asserts
+#: the monitor actually fired; a stream that never re-solves proves
+#: nothing about staleness safety).  ``(n, k)`` per config.
+UPDATE_CONFIGS = ((64, 4), (64, 8), (256, 4), (256, 8))
+#: Warm updates in the timed stream per config (smoke halves it).
+UPDATE_STREAM = 12
+#: Hard floor on the scratch/warm per-update ratio at the target config
+#: (ISSUE 10 acceptance asks >= 5x there; measured headroom is well above,
+#: so 3x only trips on a real regression), plus the committed-baseline
+#: regression gate on every config's ratio.
+UPDATE_TARGET = (256, 8)
+UPDATE_RATIO_FLOOR = 3.0
+#: Oracle tolerance: max |lam - lam_oracle| / spectral span per update.
+UPDATE_TOL = 5e-3
+
 BASELINE_PATH = Path(__file__).parent / "baselines" / "throughput_smoke.json"
 SERVE_BASELINE_PATH = Path(__file__).parent / "baselines" / "serve_smoke.json"
 KRYLOV_BASELINE_PATH = Path(__file__).parent / "baselines" / "krylov.json"
 FLEET_BASELINE_PATH = Path(__file__).parent / "baselines" / "fleet_smoke.json"
 ROBUST_BASELINE_PATH = Path(__file__).parent / "baselines" / "robust_smoke.json"
 PACKED_BASELINE_PATH = Path(__file__).parent / "baselines" / "packed_smoke.json"
+UPDATE_BASELINE_PATH = Path(__file__).parent / "baselines" / "update_smoke.json"
 
 #: Allowed relative regression against the committed baseline metrics.
 REGRESSION_TOLERANCE = 0.20
@@ -658,6 +679,113 @@ def krylov_benchmark(metrics: dict, smoke: bool = False) -> list[Row]:
     return rows
 
 
+def update_benchmark(metrics: dict, smoke: bool = False) -> list[Row]:
+    """Warm rank-1 session updates vs from-scratch re-solves (PR 10).
+
+    Per config: open a ``SpectralSession`` over a random symmetric matrix,
+    stream :data:`UPDATE_STREAM` small rank-1 updates through the warm
+    path (each sized ~1% of ``||A||_F`` so the drift monitor stays green),
+    and time each ``engine.update`` end-to-end — program call plus the
+    host-side verify leg, i.e. what a serving caller actually pays.  The
+    scratch leg times ``engine.topk(a_t, k)`` on the same accumulated
+    matrices: the stateless per-update cost the session replaces (and the
+    cheaper window — ``k``, not the session's ``k + buffer`` — so the
+    ratio is conservative).  Every step is validated against a float64
+    ``eigvalsh`` oracle; two large injected updates at the end must trip
+    the drift monitor into a verified full re-solve.
+    """
+    import time as _time
+
+    from repro.engine import Rank1Update, SessionConfig, SolverEngine
+
+    stream = max(UPDATE_STREAM // 2, 4) if smoke else UPDATE_STREAM
+    plan = SolverPlan(method="eei_tridiag", backend="jnp")
+    rows = []
+    oracle_failures = 0
+    for n, k in UPDATE_CONFIGS:
+        rng = np.random.default_rng(n + k)
+        a_np = rng.standard_normal((n, n))
+        a_np = (a_np + a_np.T) / 2
+        engine = SolverEngine(plan)
+        session = engine.open_session(
+            a_np, k, config=SessionConfig(drift_bound=0.5))
+        fro = float(np.linalg.norm(a_np))
+        small = np.sqrt(0.01 * fro / n)  # |rho| ~ 1% of ||A||_F per step
+        span0 = None
+
+        def _check(res, a_now):
+            nonlocal oracle_failures, span0
+            lam = np.linalg.eigvalsh(a_now)
+            if span0 is None:
+                span0 = float(lam[-1] - lam[0])
+            got = np.asarray(res.eigenvalues, np.float64)
+            relerr = float(np.max(np.abs(got - lam[-k:]))) / span0
+            if relerr > UPDATE_TOL:
+                oracle_failures += 1
+            return relerr
+
+        # Untimed warmup: compiles the update program (the open_session
+        # full solve already compiled the m_keep topk program).
+        for _ in range(2):
+            u = rng.standard_normal(n) * small
+            a_np = a_np + np.outer(u, u)
+            engine.update(session, Rank1Update(u, 1))
+
+        fast_before = session.stats()["fast_updates"]
+        warm_s, relerrs = [], []
+        for _ in range(stream):
+            u = rng.standard_normal(n) * small
+            a_np = a_np + np.outer(u, u)
+            t0 = _time.perf_counter()
+            res = engine.update(session, Rank1Update(u, 1))
+            warm_s.append(_time.perf_counter() - t0)
+            relerrs.append(_check(res, a_np))
+        assert session.stats()["fast_updates"] - fast_before == stream, \
+            "the 'warm' stream fell off the fast path — timings are solves"
+
+        # Drift trip: two updates at ~60% of ||A||_F each must force the
+        # monitor into a full re-solve (staleness safety, exercised here
+        # so the artifact proves the monitor fires, not just that it
+        # exists).
+        big = np.sqrt(0.6 * fro / n)
+        for _ in range(2):
+            u = rng.standard_normal(n) * big
+            a_np = a_np + np.outer(u, u)
+            res = engine.update(session, Rank1Update(u, 1))
+            relerrs.append(_check(res, a_np))
+        drift_resolves = session.stats()["resolves_by_cause"].get("drift", 0)
+
+        # Scratch leg: per-update cost without a session, on the stream's
+        # final matrix (shape-identical work; the value does not matter).
+        scratch_s = []
+        aj = jnp.asarray(a_np, jnp.float32)
+        jax.block_until_ready(engine.topk(aj, k).eigenvalues)  # warm
+        for _ in range(max(stream // 2, 3)):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(engine.topk(aj, k).eigenvalues)
+            scratch_s.append(_time.perf_counter() - t0)
+
+        warm_us = float(np.median(warm_s) * 1e6)
+        scratch_us = float(np.median(scratch_s) * 1e6)
+        ratio = scratch_us / warm_us
+        metrics[f"update_vs_scratch_n{n}_k{k}_ratio"] = ratio
+        metrics[f"update_warm_n{n}_k{k}_us"] = warm_us
+        metrics[f"scratch_n{n}_k{k}_us"] = scratch_us
+        metrics[f"update_relerr_n{n}_k{k}"] = float(np.max(relerrs))
+        metrics[f"update_drift_resolves_n{n}_k{k}"] = drift_resolves
+        rows.append(Row(
+            f"update/scratch_topk/n={n},k={k}", scratch_us,
+            "stateless per-update re-solve (engine.topk on the updated "
+            "matrix)"))
+        rows.append(Row(
+            f"update/warm_session/n={n},k={k}", warm_us,
+            f"speedup_vs_scratch={ratio:.1f}x "
+            f"relerr={float(np.max(relerrs)):.1e} "
+            f"drift_resolves={drift_resolves}"))
+    metrics["update_oracle_failures"] = oracle_failures
+    return rows
+
+
 def fleet_benchmark(metrics: dict, smoke: bool = False) -> list[Row]:
     """Multi-replica fleet scaling + the chaos kill/restart lane (PR 8).
 
@@ -967,7 +1095,53 @@ def main() -> None:
     ap.add_argument("--fleet-out", default="BENCH_fleet.json",
                     help="fleet benchmark artifact path "
                     "(default: ./%(default)s)")
+    ap.add_argument("--update", action="store_true",
+                    help="run ONLY the streaming rank-1 update lane: warm "
+                    "SpectralSession updates vs from-scratch re-solves "
+                    "across n x k configs, eigh-oracle-validated, with the "
+                    "drift-monitor full-resolve exercised in-stream; "
+                    "writes the artifact and enforces the ratio floor at "
+                    f"the n={UPDATE_TARGET[0]},k={UPDATE_TARGET[1]} gate "
+                    "point plus the committed-baseline regression gate")
+    ap.add_argument("--update-out", default="BENCH_update.json",
+                    help="update benchmark artifact path "
+                    "(default: ./%(default)s)")
     args = ap.parse_args()
+    if args.update:
+        update_metrics: dict = {}
+        update_rows = update_benchmark(update_metrics, smoke=args.smoke)
+        print("name,us_per_call,derived")
+        for row in update_rows:
+            print(row.csv())
+        _write_artifact(args.update_out, update_rows, update_metrics)
+        failures = []
+        if update_metrics.get("update_oracle_failures", 0):
+            failures.append(
+                "update_oracle_failures: "
+                f"{update_metrics['update_oracle_failures']} update(s) "
+                f"outside the eigvalsh oracle tolerance ({UPDATE_TOL})")
+        for n, k in UPDATE_CONFIGS:
+            if update_metrics.get(
+                    f"update_drift_resolves_n{n}_k{k}", 0) < 1:
+                failures.append(
+                    f"update_drift_resolves_n{n}_k{k}: 0 — the injected "
+                    "large updates never tripped the drift monitor (the "
+                    "staleness guard is not exercised)")
+        tn, tk = UPDATE_TARGET
+        key = f"update_vs_scratch_n{tn}_k{tk}_ratio"
+        ratio = update_metrics.get(key, 0.0)
+        if ratio < UPDATE_RATIO_FLOOR:
+            failures.append(
+                f"{key}: {ratio:.2f} < {UPDATE_RATIO_FLOOR} (the warm "
+                "rank-1 path must beat per-update re-solves at the gate "
+                "point)")
+        failures += check_regression(
+            update_metrics, UPDATE_BASELINE_PATH,
+            tuple(k for k in update_metrics
+                  if k.startswith("update_vs_scratch")))
+        for f in failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        sys.exit(1 if failures else 0)
     if args.fleet:
         import os as _os
 

@@ -106,6 +106,12 @@ def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
                 dd, ee, k, largest),
             (2, 2), 2)(d, e)
 
+    def tridiag_eigenvalues_bracketed(d, e, lo, hi, k, largest):
+        return shard(
+            lambda dd, ee, ll, hh: inner.tridiag_eigenvalues_bracketed(
+                dd, ee, ll, hh, k, largest),
+            (2, 2, 2, 2), 2)(d, e, lo, hi)
+
     def krylov_reduce(a, k, largest):
         # Batch-parallel like every other stage: each device runs the
         # Lanczos loop on its slice of the stack (k/largest static).
@@ -121,6 +127,7 @@ def make_sharded_backend(plan: SolverPlan) -> StageLibrary:
         "tridiagonalize": tridiagonalize,
         "tridiag_eigenvalues": shard(inner.tridiag_eigenvalues, (2, 2), 2),
         "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_eigenvalues_bracketed": tridiag_eigenvalues_bracketed,
         "tridiag_minor_spectra": shard(
             inner.tridiag_minor_spectra, (2, 2), 3),
         "dense_eigenvalues": shard(inner.dense_eigenvalues, (3,), 2),

@@ -47,6 +47,12 @@ from repro.engine.engine import (  # noqa: F401
     SolverEngine,
     TopkResult,
 )
+from repro.engine.session import (  # noqa: F401
+    Rank1Update,
+    SessionConfig,
+    SessionVerifyError,
+    SpectralSession,
+)
 from repro.engine.verify import (  # noqa: F401
     VerifyFlags,
     verify_topk,

@@ -167,6 +167,10 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
         return sturm.bisect_eigenvalues_windowed_batched(
             d, e, k, largest=largest, n_iter=iters)
 
+    def tridiag_eigenvalues_bracketed(d, e, lo, hi, k, largest):
+        return sturm.bisect_eigenvalues_bracketed_batched(
+            d, e, lo, hi, int(k), largest=bool(largest), n_iter=iters)
+
     def tridiag_minor_spectra(d, e):
         dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
         return sturm.bisect_eigenvalues_batched(dm, em, n_iter=iters)
@@ -183,6 +187,7 @@ def _make_jnp_like(name: str, reduce: str, plan: SolverPlan) -> StageLibrary:
         "tridiagonalize": _tridiagonalize,
         "tridiag_eigenvalues": tridiag_eigenvalues,
         "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_eigenvalues_bracketed": tridiag_eigenvalues_bracketed,
         "tridiag_minor_spectra": tridiag_minor_spectra,
         "dense_eigenvalues": _dense_eigenvalues,
         "dense_minor_spectra": _dense_minor_spectra,
@@ -238,6 +243,11 @@ def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
             d, e, n_iter=iters, block_b=st_bb, block_m=st_bm,
             window=(int(k), bool(largest)))
 
+    def tridiag_eigenvalues_bracketed(d, e, lo, hi, k, largest):
+        return sturm_ops.sturm_eigenvalues_bracketed(
+            d, e, lo, hi, k=int(k), largest=bool(largest),
+            n_iter=iters, block_b=st_bb, block_m=st_bm)
+
     def tridiag_minor_spectra(d, e):
         dm, em = minors.all_tridiagonal_minor_bands_batched(d, e)
         return sturm_ops.sturm_minor_spectra(
@@ -259,6 +269,7 @@ def make_pallas_backend(plan: SolverPlan) -> StageLibrary:
         "tridiagonalize": _tridiagonalize,
         "tridiag_eigenvalues": tridiag_eigenvalues,
         "tridiag_eigenvalues_windowed": tridiag_eigenvalues_windowed,
+        "tridiag_eigenvalues_bracketed": tridiag_eigenvalues_bracketed,
         "tridiag_minor_spectra": tridiag_minor_spectra,
         "dense_eigenvalues": _dense_eigenvalues,
         "dense_minor_spectra": _dense_minor_spectra,
@@ -354,6 +365,27 @@ _REC_PACKED_SELECT = StageSig(
 _REC_PACKED_RESHAPE = StageSig(
     "recover", "packed_reshape", ("lam_sel", "vecs", "seg_off", "seg_len"),
     ("lam_seg", "vecs_seg"))
+# Streaming rank-1 update chain (the ``update`` program kind), shared by
+# every method: the reduce stage projects the *updated* matrix onto the
+# session's retained Ritz basis augmented with the update direction and a
+# few Lanczos extension vectors (so the perturbation is inside the span),
+# producing a small (b, m') band whose back-transform q lifts band
+# eigenvectors straight to the dense basis — after that the chain *is* the
+# windowed tridiagonal chain, except the spectrum stage bisects from
+# interlacing + secular warm brackets instead of Gershgorin, and a final
+# select stage splits the k-window answer from the refreshed (basis, theta)
+# session state.
+_REDUCE_WARM = StageSig(
+    "reduce", "warm_project", ("a", "basis", "u"), ("d", "e", "q", "z2"))
+_SPEC_TRI_BRACKETED = StageSig(
+    "spectrum", "tridiag_bracketed", ("a", "d", "e", "theta", "rho", "z2"),
+    ("lam_sel",))
+_REC_UPDATE_SELECT = StageSig(
+    "recover", "update_select", ("lam_sel", "vecs", "idx"),
+    ("lam_sel", "vecs", "basis", "theta"))
+_UPDATE_CHAIN = (
+    _REDUCE_WARM, _SPEC_TRI_BRACKETED, _COMP_DET, _REC_TRI,
+    _REC_UPDATE_SELECT)
 
 
 def register_default_compositions() -> None:
@@ -373,22 +405,26 @@ def register_default_compositions() -> None:
             StageSig("spectrum", "eigh", ("a",), ("lam", "v")),
             _REC_PACKED_SELECT,
         ),
+        update=_UPDATE_CHAIN,
     ))
     register_composition(Composition(
         name="eei_dense", method="eei_dense", windowed=False,
         topk=(_SPEC_DENSE, _MINORS_DENSE, _COMP_SELECT, _REC_DENSE),
         solve=(_SPEC_DENSE, _MINORS_DENSE, _COMP_FULL),
         eigenvalues=(_SPEC_DENSE,),
+        update=_UPDATE_CHAIN,
     ))
     register_composition(Composition(
         name="eei_dense_windowed", method="eei_dense", windowed=True,
         topk=(_SPEC_DENSE, _MINORS_DENSE, _COMP_WIN, _REC_DENSE),
+        update=_UPDATE_CHAIN,
     ))
     register_composition(Composition(
         name="eei_tridiag", method="eei_tridiag", windowed=False,
         topk=(_REDUCE, _SPEC_TRI, _MINORS_TRI, _COMP_SELECT, _REC_TRI),
         solve=(_REDUCE, _SPEC_TRI, _MINORS_TRI, _COMP_FULL, _REC_TRI_SOLVE),
         eigenvalues=(_REDUCE_NOQ, _SPEC_TRI),
+        update=_UPDATE_CHAIN,
     ))
     register_composition(Composition(
         name="eei_tridiag_windowed", method="eei_tridiag", windowed=True,
@@ -397,6 +433,7 @@ def register_default_compositions() -> None:
         packed_topk=(
             _REDUCE, _SPEC_TRI_SEG, _COMP_DET, _REC_TRI,
             _REC_PACKED_RESHAPE),
+        update=_UPDATE_CHAIN,
     ))
     # Krylov: the Lanczos partial band replaces Householder; everything
     # after the reduce is the *same* windowed chain (the stages are
@@ -408,11 +445,13 @@ def register_default_compositions() -> None:
         name="eei_krylov", method="eei_krylov", windowed=False,
         topk=(_REDUCE_KRYLOV, _SPEC_TRI_WIN, _COMP_DET, _REC_TRI),
         eigenvalues=(_REDUCE_KRYLOV_NOQ, _SPEC_TRI_WIN),
+        update=_UPDATE_CHAIN,
     ))
     register_composition(Composition(
         name="eei_krylov_si", method="eei_krylov_si", windowed=False,
         topk=(_REDUCE_SI, _SPEC_SI_WIN, _COMP_DET, _REC_TRI, _MAP_SI),
         eigenvalues=(_REDUCE_SI_NOQ, _SPEC_SI_WIN, _MAP_SI_EIG),
+        update=_UPDATE_CHAIN,
     ))
 
 

@@ -93,10 +93,15 @@ class ProgramSpec(NamedTuple):
     the program then returns ``(TopkResult, VerifyFlags)`` instead of the
     bare result (topk / packed_topk programs only)."""
 
-    kind: str  # solve | topk | eigenvalues | packed_topk
+    kind: str  # solve | topk | eigenvalues | packed_topk | update
     k: int = 0  # 0 -> no window (full spectrum)
     largest: bool = True
     verify: bool = False
+    # ``update`` programs only: retained Ritz pairs kept per session and the
+    # number of augmentation directions (u + Lanczos extension vectors) the
+    # warm-project reduce appends to the retained basis.
+    m_keep: int = 0
+    ext: int = 0
 
 
 def _renormalize(vecs: jax.Array) -> jax.Array:
@@ -295,6 +300,126 @@ def _b_verify_topk(lib, plan, spec):
     return fn
 
 
+# -- streaming rank-1 update stages -----------------------------------------
+
+
+def _b_warm_project(lib, plan, spec):
+    """Augmented-subspace reduce for the ``update`` kind.
+
+    Projects the *updated* stack onto ``S = [basis; u; A'-Krylov ext]`` —
+    the session's retained Ritz basis, the unit update direction (so the
+    rank-1 perturbation acts *inside* the span) and ``spec.ext - 1`` short
+    Lanczos extension directions that let escaped spectral weight re-enter
+    the window.  The projected ``(b, m', m')`` compression tridiagonalizes
+    through the backend's own Householder stage, and the composed
+    back-transform ``q_eff = S^T q_small`` lifts band eigenvectors straight
+    to the dense basis — downstream stages cannot tell this reduce from the
+    full Householder one.  Cost is O(m' n^2) versus the from-scratch
+    O(n^3): the entire speedup of the update path lives here.
+    """
+    n_aug = spec.ext  # augmentation directions (the first one is u)
+
+    def _append_ortho(s_rows, v, seed):
+        """One more orthonormal row onto ``s_rows`` (CGS2; deterministic
+        fallback direction when ``v`` already lies in the span)."""
+        n = s_rows.shape[-1]
+
+        def proj_out(x):
+            for _ in range(2):
+                c = jnp.einsum("...rn,...n->...r", s_rows, x)
+                x = x - jnp.einsum("...r,...rn->...n", c, s_rows)
+            return x
+
+        v = proj_out(v)
+        nrm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+        fb = proj_out(jnp.broadcast_to(
+            jnp.cos(jnp.arange(n, dtype=s_rows.dtype) * (seed + 2) + 0.1),
+            v.shape))
+        fb_nrm = jnp.linalg.norm(fb, axis=-1, keepdims=True)
+        v = jnp.where(nrm > 1e-6,
+                      v / jnp.maximum(nrm, 1e-30),
+                      fb / jnp.maximum(fb_nrm, 1e-30))
+        return jnp.concatenate([s_rows, v[..., None, :]], axis=-2)
+
+    def fn(st):
+        a, basis, u = st["a"], st["basis"], st["u"]
+        m = basis.shape[-2]
+        # Re-orthonormalize the retained rows (sign-recurrence vectors are
+        # orthogonal only to fp accuracy; QR of a near-orthonormal frame is
+        # cheap and keeps the Rayleigh-Ritz compression exact).
+        qb, _ = jnp.linalg.qr(jnp.swapaxes(basis, -1, -2))
+        s_rows = jnp.swapaxes(qb, -1, -2)  # (b, m, n)
+        v = u
+        for j in range(n_aug):
+            s_rows = _append_ortho(s_rows, v, j)
+            v = jnp.einsum("...nm,...m->...n", a, s_rows[..., -1, :])
+        # Rayleigh-Ritz compression B = S A' S^T, symmetrized.
+        t = jnp.einsum("...rn,...nm->...rm", s_rows, a)
+        band = jnp.einsum("...rm,...sm->...rs", t, s_rows)
+        band = 0.5 * (band + jnp.swapaxes(band, -1, -2))
+        d, e, qs = lib.tridiagonalize(band, True)
+        q_eff = jnp.einsum("...rn,...rt->...nt", s_rows, qs)
+        # Secular weights: coefficients of u on the *retained* frame.
+        z = jnp.einsum("...rn,...n->...r", s_rows[..., :m, :], u)
+        return {"d": d, "e": e, "q": q_eff, "z2": z * z}
+
+    return fn
+
+
+def _b_tridiag_bracketed(lib, plan, spec):
+    """Warm-bracket spectrum stage for the ``update`` kind.
+
+    Lane brackets come from rank-1 interlacing + Weyl on the cached Ritz
+    values (``repro.linalg.interlace.rank1_update_brackets``), widened by a
+    slack covering what the verify tolerance lets the cached spectrum
+    drift, then tightened one-sided by the secular-equation refinement
+    (exact roots of the retained-frame compression: a lower bound for the
+    band's ``largest`` window and an upper bound for ``smallest``, by
+    Poincare on the nested frames).  The backend's bracketed bisection
+    validates every lane's Sturm counts and falls back to Gershgorin where
+    a bracket cannot prove containment — a stale session costs iterations,
+    never correctness.
+    """
+    from repro.engine.verify import DEFAULT_TOL
+    from repro.linalg import interlace
+
+    k_lanes, largest = spec.m_keep, spec.largest
+
+    def fn(st):
+        theta, rho, z2, a = st["theta"], st["rho"], st["z2"], st["a"]
+        scale = jnp.sqrt(jnp.sum(a * a, axis=(-2, -1)))  # (b,) ||A'||_F
+        slack = (8.0 * DEFAULT_TOL) * scale
+        lo, hi = interlace.rank1_update_brackets(
+            theta, rho, drift_bound=slack[..., None])
+        slo, shi = interlace.secular_bracket_refine(theta, z2, rho, lo, hi)
+        sec_pad = (1e-5 * scale)[..., None]
+        if largest:
+            lo = jnp.maximum(lo, slo - sec_pad)
+        else:
+            hi = jnp.minimum(hi, shi + sec_pad)
+        return {"lam_sel": lib.tridiag_eigenvalues_bracketed(
+            st["d"], st["e"], lo, hi, k_lanes, largest)}
+
+    return fn
+
+
+def _b_update_select(lib, plan, spec):
+    """Split the caller's k-window out of the refreshed m_keep-window; the
+    full window becomes the session's next ``(basis, theta)``."""
+    k, largest = spec.k, spec.largest
+
+    def fn(st):
+        lam, vecs = st["lam_sel"], st["vecs"]  # (b, m_keep[, n]) ascending
+        if largest:
+            lam_k, vecs_k = lam[..., -k:], vecs[..., -k:, :]
+        else:
+            lam_k, vecs_k = lam[..., :k], vecs[..., :k, :]
+        return {"lam_sel": lam_k, "vecs": vecs_k,
+                "basis": vecs, "theta": lam}
+
+    return fn
+
+
 # -- packed (segment-stacked) stages ----------------------------------------
 
 
@@ -421,6 +546,9 @@ _STAGE_BUILDERS = {
     ("spectrum", "tridiag_segmented"): _b_tridiag_segmented,
     ("recover", "packed_select"): _b_packed_select,
     ("recover", "packed_reshape"): _b_packed_reshape,
+    ("reduce", "warm_project"): _b_warm_project,
+    ("spectrum", "tridiag_bracketed"): _b_tridiag_bracketed,
+    ("recover", "update_select"): _b_update_select,
     ("verify", "verify_topk"): _b_verify_topk,
     ("verify", "verify_topk_packed"): _b_verify_topk_packed,
 }
@@ -448,7 +576,7 @@ def _resolve_chain(plan: SolverPlan, spec: ProgramSpec):
       without one run the full chain and the executor slices the window
       (bitwise-identical, since bisection lanes are index-independent).
     """
-    if spec.kind in ("topk", "packed_topk"):
+    if spec.kind in ("topk", "packed_topk", "update"):
         windowed = plan.spectrum == "windowed"
     elif spec.kind == "eigenvalues":
         windowed = spec.k > 0
@@ -562,6 +690,51 @@ def _build_packed_program(plan: SolverPlan, spec: ProgramSpec):
     return jax.jit(fn)
 
 
+def _build_update_program(plan: SolverPlan, spec: ProgramSpec):
+    """Jitted executor for the streaming rank-1 ``update`` kind.
+
+    ``fn(a_prev, basis, theta, u, rho)`` applies the rank-1 perturbation on
+    device (``a = a_prev + rho * u u^T``, ``u`` unit, ``rho`` signed
+    ``||u||^2``), walks the method's ``update`` chain and *always* appends
+    the verify stage — the session's drift monitor reads the flags, so the
+    fast path can never silently hand back stale eigenpairs.  Returns
+    ``(TopkResult, VerifyFlags, a, basis', theta')``; the trailing state is
+    what the session caches (device-resident) for the next update.
+    """
+    lib = registry.get_backend(plan)
+    _, chain = _resolve_chain(plan, spec)
+    chain = chain + (_VERIFY_SIG,)
+    fns = [_STAGE_BUILDERS[(sig.role, sig.name)](lib, plan, spec)
+           for sig in chain]
+
+    def fn(a_prev, basis, theta, u, rho):
+        a = a_prev + rho[..., None, None] * u[..., :, None] * u[..., None, :]
+        n = a.shape[-1]
+        state = {"a": a, "basis": basis, "theta": theta, "u": u, "rho": rho,
+                 "idx": _window_idx(n, spec.k, spec.largest)}
+        for f in fns:
+            state.update(f(state))
+        result = TopkResult(state["lam_sel"], state["vecs"])
+        return result, state["flags"], a, state["basis"], state["theta"]
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def update_program(plan: SolverPlan, k: int, largest: bool, m_keep: int,
+                   ext: int):
+    """The jitted batched rank-1 update program for one session geometry.
+
+    ``m_keep`` is the retained Ritz window (``k`` + the session's buffer)
+    and ``ext`` the total augmentation directions (u + Lanczos extensions;
+    0 when the basis already spans the frame).  Cached like
+    :func:`topk_program`; sessions with the same geometry share compiles.
+    """
+    return _build_update_program(
+        plan, ProgramSpec("update", int(k), bool(largest), True,
+                          int(m_keep), int(ext)))
+
+
 @functools.lru_cache(maxsize=None)
 def packed_topk_program(plan: SolverPlan, k: int, largest: bool,
                         verify: bool = False):
@@ -622,6 +795,30 @@ class SolverEngine:
         program = _eigenvalues_program(
             self.plan, int(k or 0), bool(largest) if k else True)
         return self._run(program, a)
+
+    # -- streaming sessions ---------------------------------------------------
+
+    def open_session(self, a: jax.Array, k: int, largest: bool = True,
+                     config=None):
+        """Open a :class:`~repro.engine.session.SpectralSession` on one
+        ``(n, n)`` matrix: a full solve seeds the retained Ritz window and
+        subsequent :meth:`update` calls maintain it under rank-1 drift."""
+        from repro.engine import session as session_mod
+
+        return session_mod.open_session(
+            self, a, int(k), bool(largest), config)
+
+    def update(self, session, delta):
+        """Apply a rank-1 (or small rank-r, as r sequential rank-1) update
+        ``A <- A + sign * u u^T`` to a session and return the refreshed
+        :class:`TopkResult`.  ``delta`` is ``u``, ``(u, sign)``, a
+        :class:`~repro.engine.session.Rank1Update`, or a sequence of those.
+        The fast warm-started path runs unless the session's drift monitor
+        (accumulated ``|rho|``, verify flags, update cadence) demands a
+        full re-solve — it can never silently return stale eigenpairs."""
+        from repro.engine import session as session_mod
+
+        return session_mod.apply_update(self, session, delta)
 
     # -- execution helpers ----------------------------------------------------
 

@@ -124,6 +124,32 @@ class _FleetRequest:
         self.hedged = False
 
 
+class _FleetSession:
+    """Fleet-side record for one sticky session.
+
+    ``a_host`` is a float64 mirror of the session matrix, updated eagerly
+    at submit (before dispatch): it is the failover state — when the owning
+    replica dies, the session reopens on another replica *from the mirror*
+    (a full solve), so no update is ever lost with the replica.
+    ``generation`` counts reopens; a dispatch records the generation it ran
+    under so a burst of failures triggers one reopen, not one per update.
+    """
+
+    __slots__ = ("sid", "rid", "replica_sid", "a_host", "k", "largest",
+                 "config", "generation", "lock")
+
+    def __init__(self, sid, rid, replica_sid, a_host, k, largest, config):
+        self.sid = sid
+        self.rid = rid
+        self.replica_sid = replica_sid
+        self.a_host = a_host
+        self.k = k
+        self.largest = largest
+        self.config = config
+        self.generation = 0
+        self.lock = threading.Lock()
+
+
 # -- replica drivers --------------------------------------------------------
 
 
@@ -227,6 +253,34 @@ class InProcessReplica:
 
     def stats(self) -> dict:
         return self._server.stats()
+
+    # Sessions delegate directly to the server (not through the forwarder
+    # inbox): session updates are stateful and sticky, so the decoupling
+    # the inbox buys stateless submits — absorb hang/slow without touching
+    # the server — has nothing to protect here; a dead replica is the one
+    # fault that matters, and the dead-check below catches it.
+
+    def open_session(self, a, k: int, largest: bool = True,
+                     config=None) -> str:
+        with self._cv:
+            if self._dead:
+                raise ReplicaDied(f"replica {self.rid} is dead")
+        return self._server.open_session(a, k, largest, config=config)
+
+    def submit_update(self, session_id: str, u, sign: int = 1) -> Future:
+        with self._cv:
+            if self._dead:
+                fut = Future()
+                fut.set_exception(ReplicaDied(
+                    f"replica {self.rid} is dead"))
+                return fut
+        return self._server.submit_update(session_id, u, sign)
+
+    def session_result(self, session_id: str):
+        return self._server.session_result(session_id)
+
+    def close_session(self, session_id: str) -> None:
+        self._server.close_session(session_id)
 
     # internals -------------------------------------------------------------
 
@@ -414,6 +468,13 @@ class SubprocessReplica:
         return {"rid": self.rid, "subprocess": True,
                 "pid": self._proc.pid, "alive": self.alive()}
 
+    def open_session(self, a, k: int, largest: bool = True,
+                     config=None) -> str:
+        # Stateful sessions need device-resident state the frame protocol
+        # doesn't ship; the fleet routes sessions to in-process replicas.
+        raise NotImplementedError(
+            "stateful sessions require in-process replicas")
+
     def _fail_all(self, exc: Exception) -> None:
         with self._lock:
             self._dead = True
@@ -559,6 +620,11 @@ class EeiFleet:
         self.replicas_restarted = 0
         self.deadline_deaths = 0
         self.latencies_ms: list = []
+        self._sessions: "dict[str, _FleetSession]" = {}
+        self._session_ids = itertools.count()
+        self.sessions_opened = 0
+        self.session_updates = 0
+        self.session_failovers = 0
 
         self._replicas = {
             rid: _Replica(rid, self._build_driver(rid),
@@ -755,6 +821,157 @@ class EeiFleet:
             log.info("fleet: redispatching (n=%d k=%d) %d -> %d after %s",
                      freq.n, freq.k, exclude_rid, target, cause)
             self._dispatch_to(freq, target)
+
+    # -- stateful sessions ----------------------------------------------------
+
+    def _route_session_locked(self, sid: str, generation: int,
+                              exclude: tuple = ()) -> Optional[int]:
+        candidates = [rid for rid in self._routable_locked()
+                      if rid not in exclude]
+        if not candidates:
+            candidates = self._routable_locked()
+        if not candidates:
+            return None
+        # Generation in the key: each reopen rendezvouses afresh, so a
+        # session whose owner died doesn't deterministically re-pick it.
+        return route_key(("session", sid, generation), candidates, self.salt)
+
+    def open_session(self, a, k: int, largest: bool = True,
+                     config=None) -> str:
+        """Open a sticky stateful session; returns a fleet session id.
+
+        The session lives on one replica (rendezvous-routed); every
+        update routes there until the replica dies, at which point the
+        session reopens on a healthy replica from the fleet's host
+        mirror — a full solve, never a silent loss of updates.
+        """
+        a = np.asarray(a, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"expected one (n, n) matrix, got {a.shape}")
+        with self._cv:
+            if self._closed:
+                raise FleetClosed("EeiFleet is closed")
+            sid = f"fs{next(self._session_ids)}"
+            rid = self._route_session_locked(sid, 0)
+        if rid is None:
+            raise FleetClosed("no routable replica for session")
+        replica_sid = self._replicas[rid].driver.open_session(
+            a, k, largest, config=config)
+        rec = _FleetSession(sid, rid, replica_sid, a.copy(), int(k),
+                            bool(largest), config)
+        with self._cv:
+            self._sessions[sid] = rec
+            self.sessions_opened += 1
+        return sid
+
+    def submit_update(self, session_id: str, u, sign: int = 1) -> Future:
+        """Apply a rank-1 update to a sticky session; returns a caller
+        future resolving to the refreshed window.  Survives the owning
+        replica's death by reopening from the host mirror."""
+        with self._cv:
+            rec = self._sessions.get(session_id)
+        if rec is None:
+            raise KeyError(f"no session {session_id!r}")
+        u64 = np.asarray(u, dtype=np.float64)
+        caller = Future()
+        with rec.lock:
+            # Mirror BEFORE dispatch: whatever happens to the replica, the
+            # failover state already includes this update.
+            rec.a_host += int(sign) * np.outer(u64, u64)
+            rid, gen = rec.rid, rec.generation
+        with self._cv:
+            self.session_updates += 1
+        try:
+            fut = self._replicas[rid].driver.submit_update(
+                rec.replica_sid, u, sign)
+        except Exception as exc:
+            self._session_recover(rec, gen, caller, exc)
+            return caller
+        fut.add_done_callback(
+            lambda f, rec=rec, gen=gen, caller=caller:
+                self._on_session_done(rec, gen, caller, f))
+        return caller
+
+    def _on_session_done(self, rec: _FleetSession, gen: int,
+                         caller: Future, fut: Future) -> None:
+        if fut.cancelled():
+            caller.cancel()
+            return
+        exc = fut.exception()
+        if exc is None:
+            _set(caller, result=fut.result())
+            return
+        if _redispatchable(exc):
+            self._session_recover(rec, gen, caller, exc)
+        else:
+            _set(caller, error=exc)
+
+    def _session_recover(self, rec: _FleetSession, gen: int,
+                         caller: Future, cause: Exception) -> None:
+        """Reopen a session whose replica failed and resolve the caller
+        from the reopened window.
+
+        The mirror already contains every submitted update (including the
+        failed one), so the reopen's seed solve *is* the correct current
+        window — the caller gets it as a :class:`DegradedResult` (full
+        solve instead of the warm path).  One reopen per failure burst:
+        concurrent failures of the same generation reuse the first
+        reopen."""
+        with rec.lock:
+            if rec.generation == gen:
+                # First failure of this generation: reopen elsewhere.
+                with self._cv:
+                    if self._closed:
+                        _set(caller, error=cause)
+                        return
+                    target = self._route_session_locked(
+                        rec.sid, gen + 1, exclude=(rec.rid,))
+                if target is None:
+                    _set(caller, error=cause)
+                    return
+                log.warning("fleet: session %s failing over %d -> %d (%s)",
+                            rec.sid, rec.rid, target, cause)
+                try:
+                    replica_sid = self._replicas[target].driver.open_session(
+                        rec.a_host, rec.k, rec.largest, config=rec.config)
+                except Exception:
+                    _set(caller, error=cause)
+                    return
+                rec.rid = target
+                rec.replica_sid = replica_sid
+                rec.generation = gen + 1
+                with self._cv:
+                    self.session_failovers += 1
+            rid, replica_sid = rec.rid, rec.replica_sid
+        try:
+            res = self._replicas[rid].driver.session_result(replica_sid)
+        except Exception:
+            _set(caller, error=cause)
+            return
+        _set(caller, result=DegradedResult(
+            np.asarray(res.eigenvalues), np.asarray(res.vectors),
+            fallback="session_reopen"))
+
+    def session_result(self, session_id: str):
+        with self._cv:
+            rec = self._sessions.get(session_id)
+        if rec is None:
+            raise KeyError(f"no session {session_id!r}")
+        with rec.lock:
+            rid, replica_sid = rec.rid, rec.replica_sid
+        return self._replicas[rid].driver.session_result(replica_sid)
+
+    def close_session(self, session_id: str) -> None:
+        with self._cv:
+            rec = self._sessions.pop(session_id, None)
+        if rec is None:
+            return
+        with rec.lock:
+            rid, replica_sid = rec.rid, rec.replica_sid
+        try:
+            self._replicas[rid].driver.close_session(replica_sid)
+        except Exception:
+            pass  # the replica is gone; the session went with it
 
     # -- chaos ----------------------------------------------------------------
 
@@ -987,6 +1204,10 @@ class EeiFleet:
                 "replicas_killed": self.replicas_killed,
                 "replicas_restarted": self.replicas_restarted,
                 "deadline_deaths": self.deadline_deaths,
+                "sessions_open": len(self._sessions),
+                "sessions_opened": self.sessions_opened,
+                "session_updates": self.session_updates,
+                "session_failovers": self.session_failovers,
                 "chaos_injected": (
                     self.chaos.counts() if self.chaos is not None else {}),
             }

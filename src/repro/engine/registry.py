@@ -59,12 +59,17 @@ STAGE_ROLES = (
 #: rows, each carrying up to ``S`` independent request matrices (segments)
 #: described by ``seg_off``/``seg_len`` ``(b, S)`` int32 operands, and the
 #: program returns per-slot windows instead of per-row windows.
-PROGRAM_KINDS = ("solve", "topk", "eigenvalues", "packed_topk")
+PROGRAM_KINDS = ("solve", "topk", "eigenvalues", "packed_topk", "update")
 _INITIAL_KEYS = {
     "solve": frozenset({"a"}),
     "topk": frozenset({"a", "idx"}),
     "eigenvalues": frozenset({"a", "idx"}),
     "packed_topk": frozenset({"a", "seg_off", "seg_len"}),
+    # ``update`` is the streaming rank-1 maintenance kind: ``a`` is the
+    # *already-updated* stack, ``basis``/``theta`` (b, m, n)/(b, m) are the
+    # session's retained Ritz pairs from the previous solve, ``u`` (b, n)
+    # the unit update direction and ``rho`` (b,) its signed squared norm.
+    "update": frozenset({"a", "basis", "theta", "u", "rho", "idx"}),
 }
 _FINAL_KEYS = {
     "solve": ({"lam", "mags"},),
@@ -73,6 +78,9 @@ _FINAL_KEYS = {
     # spectrum — either terminal is a valid eigenvalues program.
     "eigenvalues": ({"lam"}, {"lam_sel"}),
     "packed_topk": ({"lam_seg", "vecs_seg"},),
+    # the refreshed session state rides out with the answer: the engine
+    # caches ``basis``/``theta`` device-side for the next update.
+    "update": ({"lam_sel", "vecs", "basis", "theta"},),
 }
 
 
@@ -108,6 +116,7 @@ class Composition:
     solve: Optional[Tuple[StageSig, ...]] = None
     eigenvalues: Optional[Tuple[StageSig, ...]] = None
     packed_topk: Optional[Tuple[StageSig, ...]] = None
+    update: Optional[Tuple[StageSig, ...]] = None
 
     def chain(self, kind: str) -> Optional[Tuple[StageSig, ...]]:
         if kind not in PROGRAM_KINDS:

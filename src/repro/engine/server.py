@@ -71,6 +71,7 @@ host mesh via ``XLA_FLAGS=--xla_force_host_platform_device_count``).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import logging
 import threading
 import time
@@ -380,11 +381,34 @@ class DispatchRecord:
     plan: SolverPlan
     stack: np.ndarray  # the assembled (bucket.b, bucket.n, bucket.n) input
     requests: list  # [_Request, ...] in row (packed: layout) order
+    #: ``time.monotonic()`` when the group left the admission queue —
+    #: before assembly/compile, so ``t_dispatch - request.t_submit`` is the
+    #: pure admission (linger) latency.
+    t_dispatch: float = 0.0
     # Packed dispatches only: the (b, s) int32 segment layout operands and
     # the per-request (row, slot, offset) triples parallel to ``requests``.
     seg_off: Optional[np.ndarray] = None
     seg_len: Optional[np.ndarray] = None
     layout: Optional[list] = None
+
+
+@dataclasses.dataclass(eq=False)
+class _ServerSession:
+    """Server-side record for one stateful spectral session.
+
+    ``a_host`` is a float64 numpy mirror of the session matrix, updated on
+    every submitted update *before* the fast path runs — it is what the
+    degrade rung (and a fleet failover) rebuilds from, so it must never
+    lag the stream.  ``lock`` serializes update execution and snapshot
+    reads per session (the engine-side ``SpectralSession`` is not
+    thread-safe)."""
+
+    sid: str
+    engine: object  # SolverEngine
+    session: object  # repro.engine.session.SpectralSession
+    a_host: np.ndarray
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    closed: bool = False
 
 
 class EeiServer:
@@ -460,6 +484,7 @@ class EeiServer:
         retry_backoff_cap_s: float = 1.0,
         retry_jitter_seed: Optional[int] = None,
         chaos: Optional[ChaosMonkey] = None,
+        adaptive_linger: bool = True,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -575,6 +600,33 @@ class EeiServer:
         self.requests_degraded = 0
         self.fallbacks_by_plan: dict = {}  # chain link name -> resolutions
 
+        # Adaptive linger: per-coalesce-key EWMA of inter-arrival gaps.
+        # A key that runs hot (small gaps) shrinks its *effective* linger
+        # toward the time its stack would plausibly still fill, so a hot
+        # stream's partial stacks stop waiting out the full base timeout
+        # when the stream hiccups.  Shrink-only: ``linger_ms`` stays the
+        # upper bound, so cold/sparse keys keep the configured window.
+        # Rate state survives reset_stats() (it describes the *stream*,
+        # not a measurement pass); the trim counter does not.
+        self.adaptive_linger = bool(adaptive_linger)
+        self._key_rate: dict = {}  # key -> [ewma_gap_s, last_t, gap_samples]
+        self.linger_trims = 0
+
+        # Stateful spectral sessions (engine/session.py behind submit()'s
+        # style of Future API).  Threaded mode executes updates on a lazy
+        # dedicated session thread (serial per server, so per-session order
+        # is dispatch order); caller-driven mode runs them inline.
+        self._sessions: dict = {}  # sid -> _ServerSession
+        self._session_ids = itertools.count()
+        self._session_ops: "deque[tuple]" = deque()
+        self._session_busy = 0
+        self._session_thread: Optional[threading.Thread] = None
+        self.sessions_opened = 0
+        self.session_updates = 0
+        self.session_fast_updates = 0
+        self.session_full_resolves = 0
+        self.session_degraded = 0
+
         # Snapshot the mode: _threaded must not flip if a caller mutates
         # linger_ms later (the linger *value* is re-read each admission
         # round; the thread topology is fixed at construction).
@@ -628,12 +680,13 @@ class EeiServer:
                         self._cv.wait()
                         if self._closed:
                             return self._reject_locked(req)
-            self._queues.setdefault(
-                self._coalesce_key(req), deque()).append(req)
+            key = self._coalesce_key(req)
+            self._queues.setdefault(key, deque()).append(req)
             self._pending += 1
             self.requests_submitted += 1
             req.t_submit = time.monotonic()  # linger clock starts at enqueue
             self._unresolved[req.future] = req.t_submit
+            self._observe_arrival_locked(key, req.t_submit)
             self._cv.notify_all()
         # Caller-side cancellation: while the request is still pending
         # (undispatched) a cancel() pulls it out of its coalesce group, so
@@ -833,8 +886,9 @@ class EeiServer:
         ``_account_retired_locked``), because counting at launch double- or
         triple-counted every request that rode a retried, bisected or
         fleet-redispatched stack."""
+        t_disp = time.monotonic()
         if group and all(self._packable(req) for req in group):
-            self._dispatch_packed(group)
+            self._dispatch_packed(group, t_disp)
             return
         try:
             bucket, plan = self._plan_bucket(group)
@@ -849,7 +903,7 @@ class EeiServer:
             if self.record_dispatches:
                 self.dispatch_log.append(DispatchRecord(
                     bucket=bucket, plan=plan, stack=stack,
-                    requests=list(group)))
+                    requests=list(group), t_dispatch=t_disp))
             self._cv.notify_all()
 
     def _packed_plan(self) -> SolverPlan:
@@ -878,7 +932,7 @@ class EeiServer:
                       "packed_plan_for(%d)", plan, self.pack_row_n)
         return packed_plan_for(self.pack_row_n)
 
-    def _dispatch_packed(self, group: list) -> None:
+    def _dispatch_packed(self, group: list, t_disp: float = 0.0) -> None:
         """Segment-packed dispatch: first-fit pack the group's matrices
         into block-diagonal rows of width ``pack_row_n``, chunk the rows
         into stacks of at most ``max_batch``, and launch each chunk through
@@ -916,7 +970,7 @@ class EeiServer:
                     self.dispatch_log.append(DispatchRecord(
                         bucket=bucket, plan=plan, stack=stack,
                         requests=sub, seg_off=seg_off, seg_len=seg_len,
-                        layout=layout))
+                        layout=layout, t_dispatch=t_disp))
                 self._cv.notify_all()
 
     def _assemble_packed(self, group: list, chunk: list):
@@ -1202,6 +1256,54 @@ class EeiServer:
 
     # -- background threads ------------------------------------------------
 
+    #: Inter-arrival gaps a key must show before its EWMA can shrink the
+    #: linger window — below this the estimate is noise, and sparse tests /
+    #: streams that submit a handful of requests keep the configured linger.
+    _LINGER_MIN_SAMPLES = 4
+    #: EWMA smoothing factor for inter-arrival gaps.
+    _LINGER_EWMA_ALPHA = 0.3
+    #: Effective linger = ``_LINGER_GAP_FACTOR * ewma_gap * remaining
+    #: slots`` — the time the stack would plausibly still take to fill if
+    #: the stream kept its observed rate, with 2x slack for jitter.
+    _LINGER_GAP_FACTOR = 2.0
+
+    def _observe_arrival_locked(self, key: tuple, t: float) -> None:
+        rate = self._key_rate.get(key)
+        if rate is None:
+            self._key_rate[key] = [0.0, t, 0]
+            return
+        # Clamp each observed gap to the base linger window: a longer gap
+        # means the key went *idle* (its previous stack long since
+        # dispatched), not that the arrival rate is that slow — and an
+        # estimate at/above the base can never trim, so one clamped idle
+        # gap also instantly heals a stale-hot estimate after a burst.
+        gap = max(t - rate[1], 0.0)
+        if self.linger_ms:
+            gap = min(gap, self.linger_ms / 1e3)
+        alpha = self._LINGER_EWMA_ALPHA
+        rate[0] = gap if rate[2] == 0 else (1 - alpha) * rate[0] + alpha * gap
+        rate[1] = t
+        rate[2] += 1
+
+    def _effective_linger_locked(self, key: tuple, qlen: int,
+                                 base_s: float) -> float:
+        """Per-key linger window: the base, shrunk for hot keys.
+
+        A hot key's partial stack only ever waits about as long as the
+        stack would take to *fill* at the observed arrival rate — once the
+        stream pauses longer than that, waiting out the rest of the base
+        window buys nothing (the stack was not going to fill) and just
+        adds latency.  Shrink-only, so the base stays an upper bound and
+        an idle/sparse key is untouched.
+        """
+        if not self.adaptive_linger:
+            return base_s
+        rate = self._key_rate.get(key)
+        if rate is None or rate[2] < self._LINGER_MIN_SAMPLES:
+            return base_s
+        remaining = max(self._group_cap(key) - qlen, 1)
+        return min(base_s, self._LINGER_GAP_FACTOR * rate[0] * remaining)
+
     def _ready_key_locked(self, now: float):
         """Dispatchable coalesce key, or ``(None, deadline)`` where
         ``deadline`` is the next linger expiry (``None`` if no queue).
@@ -1213,19 +1315,33 @@ class EeiServer:
         with oldest-head order the starved key's fixed, aging head
         eventually outranks the hot key's ever-renewing one, so the
         linger bound stays a real latency bound.
+
+        Each key lingers under its own *effective* window (see
+        :meth:`_effective_linger_locked`): hot keys trim toward their
+        observed fill time, and a dispatch that happened strictly earlier
+        than the base window because of the trim counts in
+        ``linger_trims``.
         """
         force = self._closed or self._draining > 0
         linger_s = (self.linger_ms or 0.0) / 1e3
         best_key = best_t = deadline = None
+        best_trim = False
         for key, q in self._queues.items():
             head_t = q[0].t_submit
-            expiry = head_t + linger_s
-            if len(q) >= self._group_cap(key) or force or now >= expiry:
+            eff = self._effective_linger_locked(key, len(q), linger_s)
+            expiry = head_t + eff
+            full = len(q) >= self._group_cap(key)
+            if full or force or now >= expiry:
                 if best_t is None or head_t < best_t:
                     best_key, best_t = key, head_t
+                    best_trim = (not full and not force
+                                 and eff < linger_s
+                                 and now < head_t + linger_s)
             elif best_key is None:
                 deadline = expiry if deadline is None else \
                     min(deadline, expiry)
+        if best_key is not None and best_trim:
+            self.linger_trims += 1
         return best_key, (None if best_key is not None else deadline)
 
     def _admission_loop(self) -> None:
@@ -1363,6 +1479,204 @@ class EeiServer:
                     self._fail(stack.requests, ServerClosed(
                         f"retire thread crashed: {exc!r}"))
 
+    # -- stateful sessions -------------------------------------------------
+
+    def _session_plan(self, n: int, k: int) -> SolverPlan:
+        plan = self._plan
+        if plan is None:
+            bn = _bucket_n(n, self.n_align)
+            plan = plan_for((1, bn, bn), k=k, mesh=self._mesh)
+        return plan
+
+    def open_session(self, a, k: int, largest: bool = True,
+                     config=None) -> str:
+        """Open a stateful spectral session over one ``(n, n)`` matrix.
+
+        Seeds the session with a full solve (synchronous — it is a setup
+        call, like the compile it triggers) and returns a session id for
+        :meth:`submit_update` / :meth:`session_result` /
+        :meth:`close_session`.
+        """
+        from repro.engine import session as session_mod
+
+        a = np.asarray(a, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"expected one (n, n) matrix, got {a.shape}")
+        with self._cv:
+            if self._closed:
+                raise ServerClosed("EeiServer is closed")
+        eng = engine_mod.SolverEngine(self._session_plan(a.shape[0], k))
+        session = eng.open_session(a, k, largest, config=config)
+        with self._cv:
+            if self._closed:
+                raise ServerClosed("EeiServer is closed")
+            sid = f"s{next(self._session_ids)}"
+            self._sessions[sid] = _ServerSession(
+                sid=sid, engine=eng, session=session, a_host=a.copy())
+            self.sessions_opened += 1
+            if self._threaded and self._session_thread is None:
+                self._session_thread = threading.Thread(
+                    target=self._session_main, name="eei-session",
+                    daemon=True)
+                self._session_thread.start()
+            self._cv.notify_all()
+        return sid
+
+    def _get_session(self, session_id: str) -> _ServerSession:
+        with self._cv:
+            rec = self._sessions.get(session_id)
+        if rec is None:
+            raise KeyError(f"no session {session_id!r}")
+        return rec
+
+    def submit_update(self, session_id: str, u, sign: int = 1) -> Future:
+        """Apply ``A <- A + sign * u u^T`` to a session; returns a future
+        resolving to the refreshed top-k window (request-shaped numpy
+        arrays, like :meth:`submit`).
+
+        Per-session updates resolve in submission order.  A fast-path
+        failure degrades to a full solve from the host mirror (the PR-7
+        terminal rung) instead of erroring — the future then resolves
+        with a :class:`DegradedResult`.
+        """
+        rec = self._get_session(session_id)
+        u = np.asarray(u, dtype=self.dtype)
+        fut = Future()
+        with self._cv:
+            if self._closed or rec.closed:
+                fut.set_exception(ServerClosed(
+                    f"session {session_id!r} is closed"))
+                return fut
+            if self._threaded:
+                self._session_ops.append((rec, u, int(sign), fut))
+                self._cv.notify_all()
+                return fut
+        self._session_exec_update(rec, u, int(sign), fut)
+        return fut
+
+    def session_result(self, session_id: str):
+        """Snapshot of a session's current top-k window (numpy arrays)."""
+        rec = self._get_session(session_id)
+        with rec.lock:
+            res = rec.session.result()
+            return engine_mod.TopkResult(
+                np.asarray(res.eigenvalues), np.asarray(res.vectors))
+
+    def session_stats(self, session_id: str) -> dict:
+        rec = self._get_session(session_id)
+        with rec.lock:
+            return rec.session.stats()
+
+    def close_session(self, session_id: str) -> None:
+        """Drop a session.  Updates already queued for it resolve with
+        :class:`ServerClosed`; in-execution updates finish normally."""
+        with self._cv:
+            rec = self._sessions.pop(session_id, None)
+            if rec is not None:
+                rec.closed = True
+                self._cv.notify_all()
+
+    def _session_exec_update(self, rec: _ServerSession, u: np.ndarray,
+                             sign: int, fut: Future) -> None:
+        """Run one update under the session lock; never raises.
+
+        Request errors (bad shape / non-finite input) fail the future
+        directly — degrading cannot fix a malformed request.  Anything
+        else (a broken fast path, a sick backend) degrades to a host
+        full solve from the mirror, so the session survives every fault
+        the PR-7 chain survives."""
+        from repro.engine import session as session_mod
+
+        u64 = np.asarray(u, dtype=np.float64)
+        with rec.lock:
+            try:
+                before = rec.session.full_resolves
+                res = rec.engine.update(
+                    rec.session, session_mod.Rank1Update(u, sign))
+                rec.a_host += sign * np.outer(u64, u64)
+            except ValueError as exc:  # malformed request: fail, don't mask
+                with self._cv:
+                    self.requests_failed += 1
+                    self._cv.notify_all()
+                self._set(fut, error=exc)
+                return
+            except Exception as exc:
+                self._session_degrade(rec, u64, sign, fut, exc)
+                return
+            lam = np.asarray(res.eigenvalues)
+            vec = np.asarray(res.vectors)
+            full = rec.session.full_resolves > before
+        with self._cv:
+            self.session_updates += 1
+            if full:
+                self.session_full_resolves += 1
+            else:
+                self.session_fast_updates += 1
+            self._cv.notify_all()
+        self._set(fut, result=engine_mod.TopkResult(lam, vec))
+
+    def _session_degrade(self, rec: _ServerSession, u64: np.ndarray,
+                         sign: int, fut: Future, cause: Exception) -> None:
+        """Terminal session rung: host eigh full solve from the mirror.
+
+        Called with ``rec.lock`` held, mirror NOT yet updated for this
+        ``u`` (the engine commits state only on success, so the mirror
+        and the session agree at entry)."""
+        from repro.engine import session as session_mod
+
+        log.warning("session %s update degrading to host solve (%s)",
+                    rec.sid, cause)
+        if not self.fallback:
+            with self._cv:
+                self.requests_failed += 1
+                self._cv.notify_all()
+            self._set(fut, error=cause)
+            return
+        try:
+            rec.a_host += sign * np.outer(u64, u64)
+            session_mod.host_reseed(rec.session, rec.a_host)
+            res = rec.session.result()
+            lam = np.asarray(res.eigenvalues)
+            vec = np.asarray(res.vectors)
+        except Exception:
+            with self._cv:
+                self.requests_failed += 1
+                self._cv.notify_all()
+            self._set(fut, error=cause)
+            return
+        with self._cv:
+            self.session_updates += 1
+            self.session_full_resolves += 1
+            self.session_degraded += 1
+            self._cv.notify_all()
+        self._set(fut, result=DegradedResult(
+            lam, vec, fallback="host_reseed"))
+
+    def _session_main(self) -> None:
+        """Session executor (threaded mode): drains ``_session_ops``
+        serially.  Exits once the server is closed and the queue is empty
+        (queued ops still execute on a draining close — ``close()`` fails
+        them first when ``drain=False``)."""
+        while True:
+            with self._cv:
+                while not self._session_ops:
+                    if self._closed:
+                        return
+                    self._cv.wait()
+                rec, u, sign, fut = self._session_ops.popleft()
+                self._session_busy += 1
+                self._cv.notify_all()
+            try:
+                if rec.closed:
+                    self._set(fut, error=ServerClosed(
+                        f"session {rec.sid!r} is closed"))
+                else:
+                    self._session_exec_update(rec, u, sign, fut)
+            finally:
+                with self._cv:
+                    self._session_busy -= 1
+                    self._cv.notify_all()
+
     # -- draining ----------------------------------------------------------
 
     def pump(self) -> None:
@@ -1399,7 +1713,8 @@ class EeiServer:
                 self._cv.notify_all()
                 try:
                     while (self._queues or self._dispatching
-                           or self._inflight or self._retiring):
+                           or self._inflight or self._retiring
+                           or self._session_ops or self._session_busy):
                         if self._admission_done and not (
                                 self._retire_thread
                                 and self._retire_thread.is_alive()):
@@ -1442,14 +1757,24 @@ class EeiServer:
             first = not self._closed
             self._closed = True
             groups = self._pop_all_locked() if first and not drain else []
+            session_ops = []
+            if first and not drain:
+                session_ops = list(self._session_ops)
+                self._session_ops.clear()
             self._cv.notify_all()
         for group in groups:
             self._fail(group, ServerClosed(
                 "EeiServer closed before this request was dispatched"))
+        for _rec, _u, _sign, fut in session_ops:
+            self._set(fut, error=ServerClosed(
+                "EeiServer closed before this update was applied"))
         if self._threaded:
             deadline = None if timeout is None else \
                 time.monotonic() + timeout
-            for thread in (self._admission_thread, self._retire_thread):
+            threads = [self._admission_thread, self._retire_thread]
+            if self._session_thread is not None:
+                threads.append(self._session_thread)
+            for thread in threads:
                 left = None if deadline is None else \
                     max(deadline - time.monotonic(), 0.0)
                 thread.join(left)
@@ -1558,6 +1883,14 @@ class EeiServer:
             self.stack_splits = 0
             self.requests_degraded = 0
             self.fallbacks_by_plan = {}
+            # _key_rate survives: it describes the stream's arrival shape,
+            # which a stats reset (a benchmark pass boundary) doesn't change.
+            self.linger_trims = 0
+            self.sessions_opened = 0
+            self.session_updates = 0
+            self.session_fast_updates = 0
+            self.session_full_resolves = 0
+            self.session_degraded = 0
         self.cache.reset_counters()
 
     def stats(self) -> dict:
@@ -1623,6 +1956,13 @@ class EeiServer:
                 "stack_splits": self.stack_splits,
                 "requests_degraded": self.requests_degraded,
                 "fallbacks_by_plan": dict(self.fallbacks_by_plan),
+                "linger_trims": self.linger_trims,
+                "sessions_open": len(self._sessions),
+                "sessions_opened": self.sessions_opened,
+                "session_updates": self.session_updates,
+                "session_fast_updates": self.session_fast_updates,
+                "session_full_resolves": self.session_full_resolves,
+                "session_degraded": self.session_degraded,
                 "chaos_injected": (
                     self.chaos.counts() if self.chaos is not None else {}),
             }

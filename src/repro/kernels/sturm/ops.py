@@ -237,6 +237,108 @@ def sturm_eigenvalues_segmented(
 
 
 @functools.partial(
+    jax.jit,
+    static_argnames=("k", "largest", "n_iter", "block_b", "block_m",
+                     "interpret"),
+)
+def sturm_eigenvalues_bracketed(
+    d: jax.Array,  # (B, n)
+    e: jax.Array,  # (B, n-1)
+    lo: jax.Array,  # (B, k) per-lane warm lower brackets
+    hi: jax.Array,  # (B, k) per-lane warm upper brackets
+    *,
+    k: int,
+    largest: bool,
+    n_iter: int = 0,
+    block_b: int = 8,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The ``k`` extremal eigenvalues from caller-supplied per-lane brackets.
+
+    The warm-started twin of the ``window=`` entry of
+    :func:`sturm_eigenvalues`: each bisection lane starts from its own
+    ``(lo, hi)`` (interlacing-tightened brackets from a previous spectrum —
+    see ``repro.linalg.interlace.rank1_update_brackets``) instead of the
+    matrix-wide Gershgorin interval.  Implemented on the *segmented* kernel
+    with one full-band segment per row: the segmented program already
+    threads per-lane bounds and per-lane target indices, so the warm path
+    reuses the packed-dispatch machinery rather than growing a third kernel.
+
+    Warm brackets are validated, never trusted: one pair of host-side Sturm
+    sweeps checks ``count(lo[t]) <= target_t < count(hi[t])`` and any lane
+    whose bracket cannot prove containment of its index restarts from the
+    Gershgorin interval — stale sessions cost iterations, not correctness.
+    Returns ``(B, k)``, ascending.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b_n, n = d.shape
+    dtype = d.dtype
+    if n_iter == 0:
+        n_iter = _default_iters(dtype)
+    if not 1 <= k <= n:
+        raise ValueError(f"window k={k} out of range for n={n}")
+
+    # Per-matrix Gershgorin bounds + pivmin (the validation fallback).
+    abs_e = jnp.abs(e)
+    r = jnp.zeros_like(d)
+    if n > 1:
+        r = r.at[:, :-1].add(abs_e)
+        r = r.at[:, 1:].add(abs_e)
+    lo_g = jnp.min(d - r, axis=1)
+    hi_g = jnp.max(d + r, axis=1)
+    span = jnp.maximum(hi_g - lo_g, 1.0)
+    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
+    lo_g = lo_g - eps * span
+    hi_g = hi_g + eps * span
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(d), axis=1),
+        jnp.max(abs_e, axis=1) if n > 1 else jnp.zeros((b_n,), dtype),
+    )
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    piv = jnp.maximum(eps * eps * scale * scale, tiny)
+
+    targ = (jnp.arange(n - k, n) if largest else jnp.arange(k))
+    targ = jnp.broadcast_to(targ.astype(jnp.int32)[None, :], (b_n, k))
+    lo = jnp.asarray(lo, dtype)
+    hi = jnp.asarray(hi, dtype)
+    from repro.linalg.sturm import sturm_count  # pure-jnp count, vmappable
+
+    counts = jax.vmap(sturm_count)(d, e, jnp.concatenate([lo, hi], axis=1))
+    ok = (counts[:, :k] <= targ) & (counts[:, k:] > targ) & (lo <= hi)
+    lo = jnp.where(ok, lo, lo_g[:, None])
+    hi = jnp.where(ok, hi, hi_g[:, None])
+
+    block_m = blocks.clamp_block(block_m, k)
+    block_b = blocks.clamp_block(block_b, b_n, align=1)
+    pad_m = (-k) % block_m
+    pad_b = (-b_n) % block_b
+    pad_n = (-n) % 8
+
+    def pad_lane(x, value):
+        return jnp.pad(x, ((0, pad_b), (0, pad_m)), constant_values=value)
+
+    lo_l = pad_lane(lo, 0.0)
+    hi_l = pad_lane(hi, 0.0)
+    piv_l = pad_lane(jnp.broadcast_to(piv[:, None], (b_n, k)), 1.0)
+    start_l = pad_lane(jnp.zeros((b_n, k), jnp.int32), 0)
+    end_l = pad_lane(jnp.full((b_n, k), n, jnp.int32), 0)
+    targ_l = pad_lane(targ, 0)
+
+    d_p = jnp.pad(d, ((0, pad_b), (0, pad_n)), constant_values=1.0)
+    e_p = jnp.zeros_like(d_p)
+    if n > 1:
+        e_p = e_p.at[:b_n, : n - 1].set(e)
+
+    out = _kernel.sturm_segmented_padded(
+        d_p, e_p, lo_l, hi_l, piv_l, start_l, end_l, targ_l,
+        n_iter=n_iter, block_b=block_b, block_m=block_m,
+        interpret=interpret)
+    return out[:b_n, :k]
+
+
+@functools.partial(
     jax.jit, static_argnames=("n_iter", "block_b", "block_m", "interpret")
 )
 def sturm_minor_spectra(

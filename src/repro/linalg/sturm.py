@@ -130,6 +130,67 @@ def bisect_eigenvalues_windowed(
 
 
 @functools.partial(jax.jit, static_argnames=("k", "largest", "n_iter"))
+def bisect_eigenvalues_bracketed(
+    d: jax.Array, e: jax.Array, lo: jax.Array, hi: jax.Array,
+    k: int, largest: bool = True, n_iter: int = 0,
+) -> jax.Array:
+    """The ``k`` extremal eigenvalues from *caller-supplied* per-index
+    brackets — the warm-started entry behind the rank-1 update path.
+
+    Identical bisection body to :func:`bisect_eigenvalues_windowed`, but
+    each lane starts from ``(lo[t], hi[t])`` (e.g. interlacing-tightened
+    brackets from ``repro.linalg.interlace.rank1_update_brackets``) instead
+    of the global Gershgorin interval — for a small rank-1 drift the start
+    bracket is already within a few ulps of the answer, so a handful of
+    iterations suffice where the cold start needs ~50.
+
+    Warm brackets are a *hint*, never trusted: one pair of Sturm sweeps
+    validates ``count(lo[t]) <= t < count(hi[t])`` per lane, and any lane
+    whose bracket does not provably contain its target index falls back to
+    the Gershgorin interval.  The result is therefore index-correct for the
+    band regardless of how stale the caller's spectrum was.
+    """
+    n = d.shape[0]
+    if not 1 <= k <= n:
+        raise ValueError(f"window k={k} out of range for n={n}")
+    if n_iter == 0:
+        n_iter = 64 if d.dtype == jnp.float64 else 32
+    lo0, hi0 = gershgorin_bounds(d, e)
+    targets = jnp.arange(n - k, n) if largest else jnp.arange(k)
+    lo = jnp.asarray(lo, d.dtype)
+    hi = jnp.asarray(hi, d.dtype)
+    ok = (sturm_count(d, e, lo) <= targets) & \
+        (sturm_count(d, e, hi) > targets) & (lo <= hi)
+    lo = jnp.where(ok, lo, lo0)
+    hi = jnp.where(ok, hi, hi0)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        c = sturm_count(d, e, mid)
+        go_right = c <= targets
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "n_iter"))
+def bisect_eigenvalues_bracketed_batched(
+    d: jax.Array, e: jax.Array, lo: jax.Array, hi: jax.Array,
+    k: int, largest: bool = True, n_iter: int = 0,
+):
+    """Batched :func:`bisect_eigenvalues_bracketed` over leading axes."""
+    from repro.linalg.batching import vmap_leading
+
+    fn = lambda dd, ee, ll, hh: bisect_eigenvalues_bracketed(
+        dd, ee, ll, hh, k, largest=largest, n_iter=n_iter)
+    return vmap_leading(fn, d.ndim - 1)(d, e, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "largest", "n_iter"))
 def bisect_eigenvalues_windowed_batched(
     d: jax.Array, e: jax.Array, k: int, largest: bool = True, n_iter: int = 0
 ):

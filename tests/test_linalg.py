@@ -10,7 +10,7 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import minors
-from repro.linalg import householder, sturm
+from repro.linalg import householder, interlace, sturm
 
 
 def _sym(seed, n, scale=1.0):
@@ -90,3 +90,123 @@ def test_property_tridiag_minor_bands_match_dense(seed, n):
     rebuilt = householder.tridiagonal_matrix(dm, em)
     np.testing.assert_allclose(np.asarray(dense_minor), np.asarray(rebuilt),
                                atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Warm-start brackets (interlacing / rank-1 / secular)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24),
+       n_unique=st.integers(1, 4))
+def test_property_degenerate_brackets_are_bisectable(seed, n, n_unique):
+    """Repeated eigenvalues make raw interlacing brackets zero-width;
+    the clamp must floor every width at ``rtol * scale`` while only ever
+    *widening* (containment of the minor spectrum is preserved)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal(min(n_unique, n)) * 10.0
+    lam = np.sort(vals[rng.integers(0, len(vals), n)])
+    rtol = 1e-7
+    lo, hi = interlace.interlacing_brackets(jnp.asarray(lam), rtol=rtol)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    scale = np.max(np.abs(lam))  # the implementation's width scale
+    assert (hi - lo >= rtol * scale * (1 - 1e-6)).all(), \
+        "a clamped bracket is still degenerate"
+    # Widening only: the raw interlacing interval stays inside.
+    assert (lo <= lam[:-1] + 1e-12 * scale).all()
+    assert (hi >= lam[1:] - 1e-12 * scale).all()
+    # rtol=0 recovers the raw (possibly zero-width) intervals.
+    lo0, hi0 = interlace.interlacing_brackets(jnp.asarray(lam), rtol=0.0)
+    np.testing.assert_array_equal(np.asarray(lo0), lam[:-1])
+    np.testing.assert_array_equal(np.asarray(hi0), lam[1:])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 16),
+       sign=st.sampled_from([-1.0, 1.0]),
+       mag=st.sampled_from([1e-3, 0.3, 3.0]))
+def test_property_rank1_brackets_contain_updated_spectrum(seed, n, sign,
+                                                          mag):
+    """Weyl + rank-1 interlacing: every eigenvalue of ``A + rho u u^T``
+    lies in its ``rank1_update_brackets`` interval, for both signs and
+    magnitudes from tiny drift to spectrum-reshuffling."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a = (a + a.T) / 2
+    u = rng.standard_normal(n)
+    u /= np.linalg.norm(u)
+    rho = sign * mag
+    lam = np.linalg.eigvalsh(a)
+    lam_new = np.linalg.eigvalsh(a + rho * np.outer(u, u))
+    lo, hi = interlace.rank1_update_brackets(jnp.asarray(lam), rho)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    slack = 1e-9 * max(np.max(np.abs(lam)), 1.0)
+    assert (lam_new >= lo - slack).all(), (lam_new, lo)
+    assert (lam_new <= hi + slack).all(), (lam_new, hi)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12),
+       sign=st.sampled_from([-1.0, 1.0]))
+def test_property_secular_refine_tightens_brackets(seed, n, sign):
+    """Bisecting the secular equation shrinks rank-1 brackets toward the
+    exact updated eigenvalues without ever losing containment."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a = (a + a.T) / 2
+    u = rng.standard_normal(n)
+    u /= np.linalg.norm(u)
+    rho = sign * 0.7
+    lam, v = np.linalg.eigh(a)
+    z = v.T @ u
+    lam_new = np.linalg.eigvalsh(a + rho * np.outer(u, u))
+    lo, hi = interlace.rank1_update_brackets(jnp.asarray(lam), rho)
+    rlo, rhi = interlace.secular_bracket_refine(
+        jnp.asarray(lam), jnp.asarray(z * z), rho, lo, hi)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    rlo, rhi = np.asarray(rlo), np.asarray(rhi)
+    # Never escapes the input interval, and never grows.
+    assert (rlo >= lo - 1e-12).all() and (rhi <= hi + 1e-12).all()
+    assert ((rhi - rlo) <= (hi - lo) + 1e-12).all()
+    # With the exact full-space z2 the secular roots ARE the updated
+    # spectrum — refinement must keep containing it.
+    slack = 1e-6 * max(np.max(np.abs(lam_new)), 1.0)
+    assert (lam_new >= rlo - slack).all()
+    assert (lam_new <= rhi + slack).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 16),
+       k=st.integers(1, 3), shift=st.sampled_from([-5.0, 0.0, 5.0]))
+def test_property_bracketed_bisection_distrusts_stale_brackets(seed, n, k,
+                                                               shift):
+    """Warm brackets are a hint, never trusted: feeding *wrong* brackets
+    (shifted spectrum of a different matrix) must still return the
+    index-correct extremal eigenvalues via the Gershgorin fallback."""
+    rng = np.random.default_rng(seed)
+    k = min(k, n)
+    d = jnp.asarray(rng.standard_normal(n))
+    e = jnp.asarray(rng.standard_normal(n - 1))
+    t = householder.tridiagonal_matrix(d, e)
+    ref = np.linalg.eigvalsh(np.asarray(t))[-k:]
+    stale = np.sort(rng.standard_normal(n)) + shift
+    lo, hi = interlace.rank1_update_brackets(jnp.asarray(stale), 0.1)
+    got = sturm.bisect_eigenvalues_bracketed(
+        d, e, lo[-k:], hi[-k:], k, largest=True)
+    np.testing.assert_allclose(np.asarray(got), ref, atol=1e-8)
+
+
+def test_degenerate_spectrum_bracketed_end_to_end():
+    """All-equal spectrum: clamped brackets + bracketed bisection recover
+    the repeated eigenvalue exactly (the degenerate ridge case that
+    motivates the width floor)."""
+    n = 10
+    d = jnp.full((n,), 3.0)
+    e = jnp.zeros((n - 1,))
+    lam = np.full(n, 3.0)
+    lo, hi = interlace.rank1_update_brackets(jnp.asarray(lam), 0.0)
+    assert (np.asarray(hi) - np.asarray(lo) > 0).all()
+    got = sturm.bisect_eigenvalues_bracketed(
+        d, e, lo[-4:], hi[-4:], 4, largest=True)
+    np.testing.assert_allclose(np.asarray(got), np.full(4, 3.0), atol=1e-10)
